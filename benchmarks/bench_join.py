@@ -1,0 +1,91 @@
+"""Paper Figure 11 — spatial join: scalar (S-D0, S-D0+O3) vs vectorized
+variants V(D1), V(D2), +O3, +O3+O4, +O3+O5 — latency + counters."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import join_scalar, join_vector, rtree
+
+from .common import Rows, point_rects
+
+
+def _auto_cap(n: int, eps: float) -> int:
+    """Expected intersecting pairs for uniform ε-rects is ≈ n²·(4ε)²;
+    XLA compile time scales with the result buffer, so size it to the
+    workload instead of a fixed huge cap.  The ×32 safety also covers the
+    intermediate node-pair frontiers (which scale with fanout overlap)."""
+    expected = (n * 4 * eps) ** 2
+    cap = 1 << 16
+    while cap < expected * 4:
+        cap <<= 1
+    return cap
+
+
+def run(n: int = 100_000, fanout: int = 64, eps: float = 0.0005,
+        seed: int = 0, scalar: bool = True, result_cap: int = 0):
+    rows = Rows("join_fig11")
+    result_cap = result_cap or _auto_cap(n, eps)
+    ra = point_rects(n, seed, eps=eps)
+    rb = point_rects(n, seed + 1, eps=eps)
+    ta = rtree.build_rtree(ra, fanout=fanout, sort_key="lx")
+    tb = rtree.build_rtree(rb, fanout=fanout, sort_key="lx")
+
+    if scalar:
+        for o3, name in ((False, "S-D0"), (True, "S-D0(O3)")):
+            t0 = time.perf_counter()
+            pairs, ctr = join_scalar.join_recursive_py(ta, tb, o3=o3)
+            dt = time.perf_counter() - t0
+            rows.add(variant=name, ms=dt * 1e3, pairs=len(pairs),
+                     **ctr.asdict())
+
+    variants = [
+        ("V(D1)", dict(layout="d1")),
+        ("V(D2)", dict(layout="d2")),
+        ("V(D1)+O3", dict(layout="d1", o3=True)),
+        ("V(D1)+O3+O4", dict(layout="d1", o3=True, o4=True)),
+        ("V(D1)+O3+O5", dict(layout="d1", o3=True, o5="dense")),
+        ("V(D1)+O3+O5g", dict(layout="d1", o3=True, o5="gather")),
+        ("V(D2)+O3+O4", dict(layout="d2", o3=True, o4=True)),
+    ]
+    from .common import time_fn
+    for name, kw in variants:
+        jn = join_vector.make_join_bfs(ta, tb, result_cap=result_cap, **kw)
+        dt = time_fn(jn)
+        pairs, cnt, ctr = jn()
+        rows.add(variant=name, ms=dt * 1e3, pairs=int(cnt), **ctr.asdict())
+    return rows
+
+
+def run_fanout(n: int = 100_000, eps: float = 0.0005, seed: int = 0,
+               fanouts=(16, 32, 64, 128, 256), result_cap: int = 0):
+    """Paper Figures 10c / 12 — join degradation with fanout."""
+    rows = Rows("join_fanout_fig10c_12")
+    result_cap = result_cap or _auto_cap(n, eps)
+    ra = point_rects(n, seed, eps=eps)
+    rb = point_rects(n, seed + 1, eps=eps)
+    from .common import time_fn
+    for f in fanouts:
+        ta = rtree.build_rtree(ra, fanout=f, sort_key="lx")
+        tb = rtree.build_rtree(rb, fanout=f, sort_key="lx")
+        for name, kw in [("V(D1)+O3", dict(layout="d1", o3=True)),
+                         ("V(D1)+O3+O4", dict(layout="d1", o3=True,
+                                              o4=True)),
+                         ("V(D1)+O3+O5", dict(layout="d1", o3=True,
+                                              o5="dense"))]:
+            jn = join_vector.make_join_bfs(ta, tb, result_cap=result_cap,
+                                           **kw)
+            dt = time_fn(jn)
+            _, cnt, ctr = jn()
+            d = ctr.asdict()
+            rows.add(fanout=f, variant=name, ms=dt * 1e3, pairs=int(cnt),
+                     predicates=d["predicates"],
+                     pruned_outer=d["pruned_outer"],
+                     pruned_inner=d["pruned_inner"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()
+    run_fanout()

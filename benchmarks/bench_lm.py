@@ -1,0 +1,47 @@
+"""LM substrate micro-benchmarks (CPU, reduced configs): train-step and
+decode-step latency per family — regression guard for the model stack."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models.model import Model
+from repro.serve.serve_step import make_decode_step, make_prefill_step
+from repro.train import data, optimizer as opt, train_step as ts
+
+from .common import Rows, time_fn
+
+
+def run(archs=("tinyllama-1.1b", "grok-1-314b", "falcon-mamba-7b",
+               "zamba2-7b"), batch: int = 4, seq: int = 64):
+    rows = Rows("lm_steps")
+    for arch in archs:
+        cfg = registry.reduced_config(registry.get(arch))
+        model = Model(cfg)
+        oc = opt.OptConfig(total_steps=100)
+        params, ostate, _ = ts.init_train_state(model, oc,
+                                                jax.random.PRNGKey(0))
+        pipe = data.SyntheticLM(cfg.vocab, seq, batch,
+                                frontend_tokens=(cfg.frontend_tokens if
+                                                 cfg.frontend != "none"
+                                                 else 0),
+                                d_model=cfg.d_model)
+        step = ts.make_train_step(model, oc, donate=False)
+        b = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+        dt = time_fn(step, params, ostate, None, b, iters=3)
+        rows.add(arch=arch, phase="train_step", ms=dt * 1e3)
+
+        pre = make_prefill_step(model, max_len=seq + 8)
+        pb = {k: v for k, v in b.items() if k != "labels"}
+        cache, tok, pos = pre(params, pb)
+        dec = make_decode_step(model, donate_cache=False)
+        dt = time_fn(dec, params, cache, tok, pos, jax.random.PRNGKey(1),
+                     iters=3)
+        rows.add(arch=arch, phase="decode_step", ms=dt * 1e3)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

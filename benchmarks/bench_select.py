@@ -1,0 +1,75 @@
+"""Paper Figure 7 — spatial select: scalar variants (logical / bitwise) vs
+vectorized variants (V = partially-vectorized DFS, V-O1 = queue BFS,
+V-O1+O2 = kernel-backed BFS), per data layout, with latency + algorithmic
+counters (the paper's h/w-counter analogues)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flat as flatmod
+from repro.core import rtree, select_scalar, select_vector
+
+from .common import Rows, point_rects, square_queries, time_fn
+
+
+def run(n: int = 1_000_000, fanout: int = 64, selectivity: float = 0.001,
+        batch: int = 64, scalar_queries: int = 4, seed: int = 0):
+    rows = Rows("select_fig7")
+    rects = point_rects(n, seed)
+    tree = rtree.build_rtree(rects, fanout=fanout)
+    ft = flatmod.flatten_tree(tree)
+    qs = square_queries(batch, selectivity, seed + 1)
+    result_cap = max(int(n * selectivity * 8), 1024)
+
+    # --- scalar (host) variants: per-query latency ---
+    for variant in ("logical", "bitwise"):
+        import time
+        t0 = time.perf_counter()
+        ctr_sum = None
+        for q in qs[:scalar_queries]:
+            _, ctr = select_scalar.select_recursive_py(tree, q,
+                                                       variant=variant)
+            ctr_sum = ctr if ctr_sum is None else ctr_sum + ctr
+        dt = (time.perf_counter() - t0) / scalar_queries
+        rows.add(variant=f"S-{variant}", us_per_query=dt * 1e6,
+                 **{k: v // scalar_queries
+                    for k, v in ctr_sum.asdict().items()})
+
+    # --- V: partially vectorized (DFS stack, dense per-node predicate) ---
+    dfs = select_vector.make_select_dfs_vector(ft, result_cap=result_cap)
+    dt = time_fn(lambda: [dfs(jnp.asarray(q)) for q in qs]) / batch
+    _, _, ctr = dfs(jnp.asarray(qs[0]))
+    rows.add(variant="V(D1)", us_per_query=dt * 1e6,
+             **jax_ctr(ctr))
+
+    # --- V-O1 (BFS queue) and V-O1+O2 (kernel path) per layout ---
+    # tighter frontier caps: CPU wall-clock otherwise measures lane padding,
+    # not the algorithm (min_cap=128 is a TPU lane-alignment default)
+    caps = select_vector.frontier_caps(tree, result_cap, slack=2,
+                                       min_cap=32)
+    for layout in ("d1", "d2", "d0"):
+        sel = select_vector.make_select_bfs(tree, layout=layout,
+                                            result_cap=result_cap,
+                                            caps=caps)
+        dt = time_fn(sel, jnp.asarray(qs)) / batch
+        _, _, ctr = sel(jnp.asarray(qs))
+        rows.add(variant=f"V({layout.upper()})-O1", us_per_query=dt * 1e6,
+                 **jax_ctr(ctr, batch))
+    sel_k = select_vector.make_select_bfs(tree, layout="d1",
+                                          result_cap=result_cap,
+                                          caps=caps, backend="xla")
+    dt = time_fn(sel_k, jnp.asarray(qs)) / batch
+    _, _, ctr = sel_k(jnp.asarray(qs))
+    rows.add(variant="V(D1)-O1+O2", us_per_query=dt * 1e6,
+             **jax_ctr(ctr, batch))
+    return rows
+
+
+def jax_ctr(ctr, batch: int = 1):
+    d = ctr.asdict()
+    return {k: v // batch for k, v in d.items()}
+
+
+if __name__ == "__main__":
+    run()

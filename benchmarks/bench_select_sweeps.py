@@ -1,0 +1,61 @@
+"""Paper Figures 9 / 10a / 10b — spatial select sweeps over maximum fanout
+and selectivity, comparing node layouts and optimization stacks."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rtree, select_vector
+
+from .common import Rows, point_rects, square_queries, time_fn
+
+
+def run_fanout(n: int = 1_000_000, selectivity: float = 0.001,
+               batch: int = 64, seed: int = 0,
+               fanouts=(16, 32, 64, 128, 256, 512, 1024)):
+    rows = Rows("select_fanout_fig9_10a")
+    qs = square_queries(batch, selectivity, seed + 1)
+    rects = point_rects(n, seed)
+    result_cap = max(int(n * selectivity * 8), 1024)
+    for f in fanouts:
+        tree = rtree.build_rtree(rects, fanout=f)
+        caps = select_vector.frontier_caps(tree, result_cap, slack=2,
+                                           min_cap=32)
+        for layout in ("d1", "d2"):
+            sel = select_vector.make_select_bfs(tree, layout=layout,
+                                                result_cap=result_cap,
+                                                caps=caps)
+            dt = time_fn(sel, jnp.asarray(qs)) / batch
+            _, _, ctr = sel(jnp.asarray(qs))
+            d = ctr.asdict()
+            rows.add(fanout=f, layout=layout, us_per_query=dt * 1e6,
+                     nodes=d["nodes_visited"] // batch,
+                     predicates=d["predicates"] // batch,
+                     waste=d["masked_waste"] // batch)
+    return rows
+
+
+def run_selectivity(n: int = 1_000_000, fanout: int = 64, batch: int = 64,
+                    seed: int = 0,
+                    sels=(1e-5, 1e-4, 1e-3, 1e-2)):
+    rows = Rows("select_selectivity_fig10b")
+    rects = point_rects(n, seed)
+    tree = rtree.build_rtree(rects, fanout=fanout)
+    for s in sels:
+        qs = square_queries(batch, s, seed + 1)
+        cap = min(max(int(n * s * 8), 1024), 1 << 17)
+        caps = select_vector.frontier_caps(tree, cap, slack=2, min_cap=32)
+        for layout in ("d1", "d2"):
+            sel = select_vector.make_select_bfs(tree, layout=layout,
+                                                result_cap=cap, caps=caps)
+            dt = time_fn(sel, jnp.asarray(qs)) / batch
+            _, counts, ctr = sel(jnp.asarray(qs))
+            rows.add(selectivity=s, layout=layout, us_per_query=dt * 1e6,
+                     mean_results=float(np.asarray(counts).mean()),
+                     nodes=int(ctr.asdict()["nodes_visited"]) // batch)
+    return rows
+
+
+if __name__ == "__main__":
+    run_fanout()
+    run_selectivity()

@@ -1,0 +1,35 @@
+"""Distributed spatial service throughput (beyond-paper: the deployment
+benchmark) — partitioned fleet QPS vs a single monolithic tree."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import rtree, select_vector
+from repro.distributed.spatial_shard import SpatialShards
+
+from .common import Rows, point_rects, square_queries, time_fn
+
+
+def run(n: int = 500_000, partitions: int = 8, fanout: int = 64,
+        batch: int = 64, selectivity: float = 0.001, seed: int = 0):
+    import jax.numpy as jnp
+    rows = Rows("spatial_service")
+    rects = point_rects(n, seed)
+    qs = square_queries(batch, selectivity, seed + 1)
+    cap = max(int(n * selectivity * 8), 1024)
+
+    mono = rtree.build_rtree(rects, fanout=fanout)
+    sel = select_vector.make_select_bfs(mono, result_cap=cap)
+    dt = time_fn(sel, jnp.asarray(qs))
+    rows.add(config="monolithic", qps=batch / dt)
+
+    shards = SpatialShards.build(rects, partitions, fanout=fanout)
+    shards.range_select(qs)            # warm compile
+    dt = time_fn(lambda: shards.range_select(qs))
+    rows.add(config=f"{len(shards.partitions)}-partitions",
+             qps=batch / dt)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,76 @@
+"""Shared benchmark utilities: workload generation (paper §5 setup —
+uniform 2-D points, 32-bit keys), wall-clock timing of jitted callables,
+CSV row collection."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+
+def uniform_points(n: int, seed: int = 0, dtype=np.float32) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.random((n, 2), dtype=np.float32).astype(dtype)
+
+
+def point_rects(n: int, seed: int = 0, eps: float = 0.0) -> np.ndarray:
+    pts = uniform_points(n, seed)
+    lo = pts - eps
+    hi = pts + eps
+    return np.concatenate([lo, hi], axis=1).astype(np.float32)
+
+
+def square_queries(b: int, selectivity: float, seed: int = 1) -> np.ndarray:
+    """Query rects whose area = selectivity of the unit square (so expected
+    result fraction ≈ selectivity for uniform points)."""
+    rng = np.random.default_rng(seed)
+    side = float(np.sqrt(selectivity))
+    lo = rng.random((b, 2), dtype=np.float32) * (1.0 - side)
+    return np.concatenate([lo, lo + side], axis=1).astype(np.float32)
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median seconds per call; blocks on jax outputs."""
+    def call():
+        out = fn(*args)
+        for leaf in jax.tree_util.tree_leaves(out):
+            if hasattr(leaf, "block_until_ready"):
+                leaf.block_until_ready()
+        return out
+
+    for _ in range(warmup):
+        call()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        call()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+class Rows:
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: List[Dict] = []
+
+    def add(self, **kw):
+        self.rows.append(kw)
+        print("  " + "  ".join(f"{k}={_fmt(v)}" for k, v in kw.items()),
+              flush=True)
+
+    def csv(self) -> str:
+        if not self.rows:
+            return ""
+        keys = list(self.rows[0].keys())
+        out = [",".join(keys)]
+        for r in self.rows:
+            out.append(",".join(_fmt(r.get(k, "")) for k in keys))
+        return "\n".join(out)
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

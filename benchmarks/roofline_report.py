@@ -1,0 +1,58 @@
+"""Render the §Roofline markdown table from dry-run JSON output.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report runs/dryrun_single.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}m"
+    return f"{x * 1e6:.1f}µ"
+
+
+def render(results, mesh_filter=None):
+    rows = []
+    for r in results:
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | — | skipped: "
+                        f"{r['skipped'][:60]}… ||||||")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"ERROR {r['error'][:50]} ||||||")
+            continue
+        if mesh_filter and r.get("mesh") != mesh_filter:
+            continue
+        t = r["terms"]
+        dom = {"compute_s": "compute", "memory_s": "memory",
+               "collective_s": "collective"}[r["dominant"]]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{fmt_s(t['compute_s'])} | {fmt_s(t['memory_s'])} | "
+            f"{fmt_s(t['collective_s'])} | **{dom}** | "
+            f"{r['useful_flop_fraction']:.2f} | "
+            f"{r['roofline_fraction'] * 100:.2f}% |")
+    hdr = ("| arch | shape | mesh | compute | memory | collective | "
+           "bottleneck | MODEL/HLO flops | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    return hdr + "\n" + "\n".join(rows)
+
+
+def main():
+    results = []
+    for path in sys.argv[1:]:
+        with open(path) as f:
+            results.extend(json.load(f))
+    print(render(results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""End-to-end spatial query service (the paper's kind of system): build a
+partitioned R-tree fleet, serve batches of range queries with straggler
+re-issue, report throughput.
+
+    PYTHONPATH=src python examples/serve_spatial.py
+"""
+from repro.launch import serve
+
+if __name__ == "__main__":
+    out = serve.main(["--n", "200000", "--partitions", "8",
+                      "--batches", "10", "--batch-size", "64",
+                      "--selectivity", "0.001"])
+    assert out["qps"] > 0

@@ -1,0 +1,59 @@
+"""Mask → contiguous compaction: the TPU analogue of AVX-512 compress-store.
+
+The paper's O1 queue insertion uses ``_mm512_mask_compress_store`` to append
+up to W qualifying child pointers with one instruction.  TPUs have no
+compress-store; the idiomatic equivalent is ``mask → exclusive prefix-sum →
+scatter-at-positions`` which XLA lowers to vector ops with no data-dependent
+branches.  This module is shared by the select frontier, the join pair
+frontier, and the MoE token dispatch (DESIGN.md §5 — the one piece of the
+paper's machinery that generalizes to the LM substrate).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compact_rows(vals: jax.Array, mask: jax.Array, cap: int, fill: int = -1):
+    """Row-wise compaction of ``vals`` where ``mask`` into ``cap`` slots.
+
+    vals: (B, M) int32, mask: (B, M) bool →
+      out: (B, cap) compacted values (fill-padded),
+      count: (B,) number of qualifying entries (may exceed cap),
+      overflow: (B,) bool — True where entries were dropped.
+    """
+    if vals.ndim != 2:
+        raise ValueError("compact_rows expects (B, M)")
+    b, m = vals.shape
+    mask = mask.astype(jnp.bool_)
+    pos = jnp.cumsum(mask, axis=1) - 1                      # inclusive-1 scan
+    pos = jnp.where(mask, pos, cap)                         # park invalids
+    pos = jnp.minimum(pos, cap)                             # overflow parks too
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, m))
+    out = jnp.full((b, cap + 1), fill, vals.dtype)
+    out = out.at[rows, pos].set(jnp.where(mask, vals, fill), mode="drop",
+                                unique_indices=False)
+    count = mask.sum(axis=1).astype(jnp.int32)
+    return out[:, :cap], count, count > cap
+
+
+def compact_1d(vals: jax.Array, mask: jax.Array, cap: int, fill: int = -1):
+    """1-D compaction (single queue): (M,) → (cap,), count, overflow."""
+    out, count, ovf = compact_rows(vals[None], mask[None], cap, fill)
+    return out[0], count[0], ovf[0]
+
+
+def compact_pairs(a: jax.Array, b_: jax.Array, mask: jax.Array, cap: int,
+                  fill: int = -1):
+    """Compact two parallel (B, M) id arrays under one mask (join pairs)."""
+    bsz, m = a.shape
+    mask = mask.astype(jnp.bool_)
+    pos = jnp.cumsum(mask, axis=1) - 1
+    pos = jnp.minimum(jnp.where(mask, pos, cap), cap)
+    rows = jnp.broadcast_to(jnp.arange(bsz)[:, None], (bsz, m))
+    oa = jnp.full((bsz, cap + 1), fill, a.dtype)
+    ob = jnp.full((bsz, cap + 1), fill, b_.dtype)
+    oa = oa.at[rows, pos].set(jnp.where(mask, a, fill), mode="drop")
+    ob = ob.at[rows, pos].set(jnp.where(mask, b_, fill), mode="drop")
+    count = mask.sum(axis=1).astype(jnp.int32)
+    return oa[:, :cap], ob[:, :cap], count, count > cap

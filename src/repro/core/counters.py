@@ -1,0 +1,62 @@
+"""Algorithmic performance counters.
+
+The paper reports hardware counters (retired instructions, L1-D/LLC misses,
+DTLB misses, branch mispredictions).  TPUs expose none of these; per
+DESIGN.md §2 we track deterministic *algorithmic* counters whose ratios
+reproduce the paper's relative claims:
+
+  nodes_visited      — node accesses ≈ the paper's cold-miss count driver
+  predicates         — MBR comparisons issued (× lanes = "instructions")
+  vector_ops         — dense vector predicate ops (SIMD instruction analogue)
+  enqueued           — frontier/queue insertions (compress-store analogue)
+  pruned_outer       — outer entries skipped by O3 slicing
+  pruned_inner       — inner entries skipped by O4/O5 shrinking
+  masked_waste       — lanes evaluated but masked off (TPU branch-free waste)
+  overflow           — frontier/result capacity overflow flag (0/1)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Counters:
+    nodes_visited: jax.Array | int = 0
+    predicates: jax.Array | int = 0
+    vector_ops: jax.Array | int = 0
+    enqueued: jax.Array | int = 0
+    pruned_outer: jax.Array | int = 0
+    pruned_inner: jax.Array | int = 0
+    masked_waste: jax.Array | int = 0
+    overflow: jax.Array | int = 0
+    branches: jax.Array | int = 0    # conditional branch points (scalar
+                                     # variants only -- TPU code is
+                                     # branch-free; paper S3 logical/bitwise)
+
+    def tree_flatten(self):
+        f = dataclasses.fields(self)
+        return tuple(getattr(self, x.name) for x in f), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def __add__(self, other: "Counters") -> "Counters":
+        return Counters(*[a + b for a, b in zip(self.tree_flatten()[0],
+                                                other.tree_flatten()[0])])
+
+    def asdict(self) -> dict:
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            out[f.name] = int(v) if not isinstance(v, int) else v
+        return out
+
+
+def zeros() -> Counters:
+    z = jnp.zeros((), jnp.int64) if jax.config.jax_enable_x64 else jnp.zeros((), jnp.int32)
+    return Counters(*([z] * len(dataclasses.fields(Counters))))

@@ -1,0 +1,69 @@
+"""Flat single-table tree form.
+
+Concatenates all levels into one global node table so that data-dependent
+traversals (the scalar DFS baselines, and the Pallas select kernel whose
+scalar-prefetch operand carries *global* node ids) can index nodes with one
+id space.  Levels are laid out leaf-first; ``child`` entries of internal
+nodes are globalized; leaf nodes' children remain data-rect ids and are
+distinguished by ``is_leaf``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .rtree import RTree
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FlatTree:
+    lx: jax.Array       # (T, F)
+    ly: jax.Array
+    hx: jax.Array
+    hy: jax.Array
+    child: jax.Array    # (T, F) globalized ids; rect ids at leaves; -1 pad
+    count: jax.Array    # (T,)
+    is_leaf: jax.Array  # (T,) bool
+    root: int           # global id of the root node (static)
+    height: int         # number of levels (static)
+
+    @property
+    def fanout(self) -> int:
+        return self.lx.shape[1]
+
+    @property
+    def n_nodes(self) -> int:
+        return self.count.shape[0]
+
+    def tree_flatten(self):
+        return ((self.lx, self.ly, self.hx, self.hy, self.child, self.count,
+                 self.is_leaf), (self.root, self.height))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, root=aux[0], height=aux[1])
+
+
+def flatten_tree(tree: RTree) -> FlatTree:
+    """Level-major concat (leaf level first) with globalized child pointers."""
+    offsets = np.cumsum([0] + [lvl.n_nodes for lvl in tree.levels])
+    lx, ly, hx, hy, child, count, leaf = [], [], [], [], [], [], []
+    for li, lvl in enumerate(tree.levels):
+        c = np.asarray(lvl.child)
+        if li > 0:
+            c = np.where(c >= 0, c + offsets[li - 1], -1)
+        lx.append(np.asarray(lvl.lx)); ly.append(np.asarray(lvl.ly))
+        hx.append(np.asarray(lvl.hx)); hy.append(np.asarray(lvl.hy))
+        child.append(c.astype(np.int32))
+        count.append(np.asarray(lvl.count))
+        leaf.append(np.full(lvl.n_nodes, li == 0, bool))
+    cat = lambda xs: jnp.asarray(np.concatenate(xs, axis=0))
+    return FlatTree(
+        lx=cat(lx), ly=cat(ly), hx=cat(hx), hy=cat(hy), child=cat(child),
+        count=cat(count), is_leaf=cat(leaf),
+        root=int(offsets[-1] - 1), height=tree.height,
+    )

@@ -1,0 +1,90 @@
+"""MBR geometry primitives.
+
+All functions are pure jnp and operate on the paper's 2-D MBR key excerpts
+``(low_x, low_y, high_x, high_y)``.  The paper evaluates intersection with
+four comparisons for node layout D1 (one per key excerpt) and two
+pair-interleaved comparisons for D2; both forms are provided here so the
+layout-specific operators (and their Pallas kernels) share one definition of
+the predicate.
+
+Padding convention: invalid / absent children carry an *empty* MBR
+(``low = +PAD, high = -PAD``) so every intersection predicate evaluates to
+False without a separate validity mask.  This mirrors the paper's write-mask
+trick with compress-store: padding lanes simply never qualify.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Large-but-finite padding values (finite so int paths and fp paths behave the
+# same and so Pallas interpret mode never sees inf arithmetic surprises).
+_F32_PAD = np.float32(3.0e38)
+_I32_PAD = np.int32(2**31 - 2)
+
+
+def pad_values(dtype) -> tuple:
+    """Return ``(lo_pad, hi_pad)`` such that the padded MBR is empty."""
+    dtype = np.dtype(dtype)
+    if dtype.kind == "f":
+        return dtype.type(_F32_PAD), dtype.type(-_F32_PAD)
+    if dtype.kind == "i":
+        return dtype.type(_I32_PAD), dtype.type(-_I32_PAD)
+    raise TypeError(f"unsupported key dtype {dtype}")
+
+
+def intersects(qlx, qly, qhx, qhy, lx, ly, hx, hy):
+    """Rect/rect intersection, broadcast over array args.
+
+    The paper's D1 predicate: 4 SIMD compares ANDed.  Written exactly as the
+    four key-excerpt comparisons so the vectorized operators and the scalar
+    reference agree bit-for-bit (closed intervals, as in Guttman's R-tree).
+    """
+    return (qlx <= hx) & (qhx >= lx) & (qly <= hy) & (qhy >= ly)
+
+
+def intersects_pairs(q_lo, q_hi, lo, hi):
+    """D2-form predicate on interleaved ``(x, y)`` pairs.
+
+    ``q_lo/q_hi``: (..., 2) query corner pairs; ``lo/hi``: (..., 2) MBR corner
+    pairs.  Two compares + a pair-reduction, mirroring the paper's 2-stage D2
+    evaluation.
+    """
+    m = (q_lo <= hi) & (q_hi >= lo)  # (..., 2) per-component masks
+    return m[..., 0] & m[..., 1]
+
+
+def contains_point(qlx, qly, qhx, qhy, px, py):
+    return (qlx <= px) & (px <= qhx) & (qly <= py) & (py <= qhy)
+
+
+def mbr_of(rects: np.ndarray) -> np.ndarray:
+    """Enclosing MBR of an (N, 4) array of rects (numpy, build-time)."""
+    return np.array(
+        [rects[:, 0].min(), rects[:, 1].min(), rects[:, 2].max(), rects[:, 3].max()],
+        dtype=rects.dtype,
+    )
+
+
+def area(lx, ly, hx, hy):
+    return jnp.maximum(hx - lx, 0) * jnp.maximum(hy - ly, 0)
+
+
+def brute_force_select(rects, query):
+    """Oracle: ids of all rects intersecting ``query`` (numpy)."""
+    lx, ly, hx, hy = rects[:, 0], rects[:, 1], rects[:, 2], rects[:, 3]
+    qlx, qly, qhx, qhy = query
+    m = (qlx <= hx) & (qhx >= lx) & (qly <= hy) & (qhy >= ly)
+    return np.nonzero(m)[0]
+
+
+def brute_force_join(rects_a, rects_b):
+    """Oracle: all intersecting (i, j) id pairs between two rect sets (numpy).
+
+    O(N*M); intended for small property-test instances only.
+    """
+    alx, aly, ahx, ahy = (rects_a[:, k, None] for k in range(4))
+    blx, bly, bhx, bhy = (rects_b[None, :, k] for k in range(4))
+    m = (alx <= bhx) & (ahx >= blx) & (aly <= bhy) & (ahy >= bly)
+    ii, jj = np.nonzero(m)
+    return np.stack([ii, jj], axis=1)

@@ -1,0 +1,105 @@
+"""Scalar nested-index spatial join (paper §4, scalar baseline).
+
+Brinkhoff-style R-tree join: synchronized top-down traversal of two indexes,
+following child pairs that intersect.  ``o3``/``o4`` enable the paper's
+sorted-key pruning in scalar form (the paper notes these apply to the scalar
+version too — S-D0(O3) in Fig. 11):
+
+  O3  break the *outer* child loop once the sorted outer ``low_x`` exceeds
+      every inner child's ``high_x`` (all later outer children fail too);
+  O4  break the *inner* child loop once the sorted inner ``low_x`` exceeds
+      the current outer child's ``high_x``.
+
+Unequal tree heights are handled by elevating the shorter tree with
+single-child chain levels (``elevate``) so descent stays synchronized — the
+vectorized path uses the same device-side trick (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import sys
+from typing import Tuple
+
+import numpy as np
+
+from .counters import Counters
+from .rtree import RTree, RTreeLevel
+
+
+def elevate(tree: RTree, target_height: int) -> RTree:
+    """Add single-node chain levels above the root until ``target_height``."""
+    if target_height < tree.height:
+        raise ValueError("target height below current height")
+    if target_height == tree.height:
+        return tree
+    import jax.numpy as jnp
+    from .geometry import pad_values
+    levels = list(tree.levels)
+    dtype = np.asarray(tree.levels[0].lx).dtype
+    lo_pad, hi_pad = pad_values(dtype)
+    f = tree.fanout
+    while len(levels) < target_height:
+        top = levels[-1]
+        nm = np.asarray(top.node_mbr)[0]
+        lx = np.full((1, f), lo_pad, dtype); lx[0, 0] = nm[0]
+        ly = np.full((1, f), lo_pad, dtype); ly[0, 0] = nm[1]
+        hx = np.full((1, f), hi_pad, dtype); hx[0, 0] = nm[2]
+        hy = np.full((1, f), hi_pad, dtype); hy[0, 0] = nm[3]
+        child = np.full((1, f), -1, np.int32); child[0, 0] = 0
+        levels.append(RTreeLevel(
+            lx=jnp.asarray(lx), ly=jnp.asarray(ly), hx=jnp.asarray(hx),
+            hy=jnp.asarray(hy), child=jnp.asarray(child),
+            count=jnp.asarray(np.array([1], np.int32)),
+            node_mbr=jnp.asarray(nm[None])))
+    return RTree(levels=tuple(levels), rects=tree.rects, fanout=tree.fanout,
+                 sort_key=tree.sort_key)
+
+
+def join_recursive_py(tree_a: RTree, tree_b: RTree, o3: bool = False,
+                      o4: bool = False) -> Tuple[np.ndarray, Counters]:
+    """Host-Python scalar join. Returns (sorted (K,2) id pairs, counters)."""
+    if (o3 or o4) and (tree_a.sort_key != "lx" or tree_b.sort_key != "lx"):
+        raise ValueError("O3/O4 require trees built with sort_key='lx'")
+    h = max(tree_a.height, tree_b.height)
+    ta, tb = elevate(tree_a, h), elevate(tree_b, h)
+    la = [dict(lx=np.asarray(l.lx), ly=np.asarray(l.ly), hx=np.asarray(l.hx),
+               hy=np.asarray(l.hy), child=np.asarray(l.child),
+               count=np.asarray(l.count)) for l in ta.levels]
+    lb = [dict(lx=np.asarray(l.lx), ly=np.asarray(l.ly), hx=np.asarray(l.hx),
+               hy=np.asarray(l.hy), child=np.asarray(l.child),
+               count=np.asarray(l.count)) for l in tb.levels]
+    out: list[tuple[int, int]] = []
+    c = Counters()
+    limit = sys.getrecursionlimit()
+    if h + 10 > limit:
+        sys.setrecursionlimit(h + 100)
+
+    def join_nodes(li: int, na: int, nb: int) -> None:
+        nonlocal c
+        A, B = la[li], lb[li]
+        c.nodes_visited += 2
+        ca, cb = int(A["count"][na]), int(B["count"][nb])
+        max_b_hx = B["hx"][nb, :cb].max() if cb else None
+        for ai in range(ca):
+            alx, ahx = A["lx"][na, ai], A["hx"][na, ai]
+            if o3 and alx > max_b_hx:
+                c.pruned_outer += ca - ai
+                break
+            for bi in range(cb):
+                blx = B["lx"][nb, bi]
+                if o4 and blx > ahx:
+                    c.pruned_inner += cb - bi
+                    break
+                c.predicates += 4
+                hit = (alx <= B["hx"][nb, bi]) and (ahx >= blx) and \
+                      (A["ly"][na, ai] <= B["hy"][nb, bi]) and \
+                      (A["hy"][na, ai] >= B["ly"][nb, bi])
+                if hit:
+                    ia, ib = int(A["child"][na, ai]), int(B["child"][nb, bi])
+                    if li == 0:
+                        out.append((ia, ib))
+                    else:
+                        join_nodes(li - 1, ia, ib)
+
+    join_nodes(h - 1, 0, 0)
+    pairs = np.array(sorted(out), dtype=np.int64).reshape(-1, 2)
+    return pairs, c

@@ -1,0 +1,238 @@
+"""Vectorized nested-index spatial join (paper §4).
+
+The unit of work is a *pair frontier*: (outer node, inner node) id pairs at
+the same (elevated) level, descended level-synchronously.  For every pair the
+child predicate is evaluated as an (F_out × F_in) tile — the TPU-native
+generalization of both of the paper's approaches (DESIGN.md §2):
+
+  one-to-many   — the paper broadcasts one outer child across W lanes; on
+                  TPU the (8, 128) 2-D vreg makes the full cross-product tile
+                  one dense op, so one-to-many and many-to-many share the
+                  same math and differ in *modeled instruction counts* and in
+                  which tiles the Pallas kernel may skip.
+  many-to-many  — O5's flip indices are computed either densely
+                  (``flip_indices_dense``: one masked reduction) or with the
+                  paper's literal gather/blend binary search
+                  (``flip_indices_gather``, Figure 6 mechanics) — both paths
+                  validated equal.
+
+Sorted-key optimizations (require ``sort_key='lx'`` trees):
+  O3 slices trailing outer children once ``out.low_x > max(in.high_x)``;
+  O4/O5 shrink the inner node to ``flip`` entries per outer child.
+On TPU dense math these change *counters* (work the kernel may skip), never
+results — asserted by the property tests.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .compaction import compact_pairs
+from .counters import Counters
+from .geometry import pad_values
+from .join_scalar import elevate
+from .layouts import LevelD0, LevelD1, LevelD2, d0_unpack, tree_layout
+from .rtree import RTree
+
+
+def _gather_children(layer, ids: jax.Array):
+    """(P,) node ids → per-child (lx, ly, hx, hy, ptr) each (P, F) + stages."""
+    safe = jnp.maximum(ids, 0)
+    if isinstance(layer, LevelD1):
+        c = layer.coords[safe]
+        out = (c[:, 0], c[:, 1], c[:, 2], c[:, 3], layer.ptr[safe])
+        stages = 4
+    elif isinstance(layer, LevelD2):
+        lo, hi = layer.lo[safe], layer.hi[safe]
+        p, f2 = lo.shape
+        lo = lo.reshape(p, f2 // 2, 2)
+        hi = hi.reshape(p, f2 // 2, 2)
+        out = (lo[..., 0], lo[..., 1], hi[..., 0], hi[..., 1],
+               layer.ptr[safe])
+        stages = 2
+    elif isinstance(layer, LevelD0):
+        lx, ly, hx, hy, ptr = d0_unpack(layer.entries[safe])
+        out = (lx, ly, hx, hy, ptr)
+        stages = 4
+    else:
+        raise TypeError(type(layer))
+    return out, stages
+
+
+def flip_indices_dense(i_lx: jax.Array, o_hx: jax.Array) -> jax.Array:
+    """flip[p, a] = #{b : inner_lx[p, b] <= outer_hx[p, a]} via one masked
+    reduction over the tile — the TPU-native O5."""
+    return (i_lx[:, None, :] <= o_hx[:, :, None]).sum(axis=-1) \
+        .astype(jnp.int32)
+
+
+def flip_indices_gather(i_lx: jax.Array, o_hx: jax.Array) -> jax.Array:
+    """The paper's Figure-6 mechanism: per-lane binary search over the sorted
+    inner ``low_x`` using gather + compare + two blends per iteration,
+    log2(F)+1 iterations."""
+    p, f = i_lx.shape
+    iters = int(math.ceil(math.log2(max(f, 2)))) + 1
+    low = jnp.zeros_like(o_hx, dtype=jnp.int32)
+    high = jnp.full_like(low, f)
+    for _ in range(iters):
+        mid = (low + high) // 2
+        val = jnp.take_along_axis(i_lx, jnp.clip(mid, 0, f - 1), axis=1)
+        ok = (val <= o_hx) & (mid < f)
+        low = jnp.where(ok, mid + 1, low)          # masked add
+        high = jnp.where(ok, high, mid)            # blend
+    return low
+
+
+def default_pair_caps(height: int, fanout: int, result_cap: int,
+                      base: int = 1024) -> Tuple[int, ...]:
+    """Pair-frontier capacity after each descent step (last = result pairs)."""
+    caps = []
+    for t in range(height):
+        remaining = height - 1 - t
+        need = -(-result_cap // max(fanout ** remaining, 1))
+        caps.append(int(max(base, min(need * 4, 4 * result_cap))))
+    caps[-1] = result_cap
+    return tuple(caps)
+
+
+def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
+                  result_cap: int = 65536,
+                  pair_caps: Optional[Sequence[int]] = None,
+                  o3: bool = False, o4: bool = False,
+                  o5: Optional[str] = None, backend: Optional[str] = None):
+    """Build the jitted pair-frontier join: () → (pairs (R,2), n, Counters).
+
+    ``o5``: None | 'dense' | 'gather' — how flip indices are computed (both
+    imply the O4-style inner shrink accounting; 'gather' is the paper's
+    faithful binary-search port).
+    ``backend``: None → jnp tile math; 'pallas'/'pallas_interpret'/'xla' →
+    mask tiles via kernels/ops.join_pair_masks with O3/O4 tile skipping
+    driven by the scalar-prefetch pruning metadata (D1 only).
+    """
+    sorted_ok = tree_o.sort_key == "lx" and tree_i.sort_key == "lx"
+    if (o3 or o4 or o5) and not sorted_ok:
+        raise ValueError("O3/O4/O5 require trees built with sort_key='lx'")
+    if backend is not None and layout != "d1":
+        raise ValueError("kernel backend requires layout d1")
+    h = max(tree_o.height, tree_i.height)
+    to, ti = elevate(tree_o, h), elevate(tree_i, h)
+    layers_o = tree_layout(to, layout)
+    layers_i = tree_layout(ti, layout)
+    if pair_caps is None:
+        pair_caps = default_pair_caps(h, max(to.fanout, ti.fanout), result_cap)
+    pair_caps = tuple(pair_caps)
+    if len(pair_caps) != h:
+        raise ValueError(f"need {h} pair caps, got {len(pair_caps)}")
+
+    @jax.jit
+    def run(layers_o_, layers_i_):
+        o_ids = jnp.zeros((1,), jnp.int32)
+        i_ids = jnp.zeros((1,), jnp.int32)
+        c = Counters(*([jnp.int32(0)] * 8))
+        for t in range(h):
+            li = h - 1 - t
+            (olx, oly, ohx, ohy, optr), stages = _gather_children(
+                layers_o_[li], o_ids)
+            (ilx, ily, ihx, ihy, iptr), _ = _gather_children(
+                layers_i_[li], i_ids)
+            pair_valid = (o_ids >= 0) & (i_ids >= 0)
+            o_valid = (optr >= 0) & pair_valid[:, None]
+            i_valid = (iptr >= 0) & pair_valid[:, None]
+            if backend is not None:
+                from repro.kernels import ops as _kops
+                oc = layers_o_[li].coords
+                icr = layers_i_[li].coords
+                to_ = 8 if oc.shape[2] % 8 == 0 else oc.shape[2]
+                ac, fm = _kops.join_prune_metadata(
+                    o_ids, i_ids, oc, icr, to=to_, o3=o3,
+                    o45=bool(o4 or o5))
+                m = _kops.join_pair_masks(
+                    o_ids, i_ids, ac, fm, oc, icr, to=to_,
+                    ti=min(128, icr.shape[2]), backend=backend).astype(bool)
+                m = m & o_valid[:, :, None] & i_valid[:, None, :]
+            else:
+                # dense (F_out, F_in) tile predicate — 4 (D1/D0) or 2 (D2)
+                # compare stages
+                m = (olx[:, :, None] <= ihx[:, None, :]) & \
+                    (ohx[:, :, None] >= ilx[:, None, :]) & \
+                    (oly[:, :, None] <= ihy[:, None, :]) & \
+                    (ohy[:, :, None] >= ily[:, None, :])
+                m = m & o_valid[:, :, None] & i_valid[:, None, :]
+
+            ca = o_valid.sum(axis=1)
+            cb = i_valid.sum(axis=1)
+            base_preds = (ca * cb).sum()
+            alive = o_valid
+            if o3:
+                max_ihx = ihx.max(axis=1)           # padding hi = -PAD
+                alive = o_valid & (olx <= max_ihx[:, None])
+                m = m & alive[:, :, None]
+                c.pruned_outer = c.pruned_outer + \
+                    (o_valid.sum() - alive.sum()).astype(jnp.int32)
+            if o4 or o5:
+                flip = (flip_indices_gather(ilx, ohx) if o5 == "gather"
+                        else flip_indices_dense(ilx, ohx))
+                considered = jnp.minimum(flip, cb[:, None])
+                inner_skipped = jnp.where(
+                    alive, cb[:, None] - considered, 0).sum()
+                c.pruned_inner = c.pruned_inner + \
+                    inner_skipped.astype(jnp.int32)
+                eff_preds = jnp.where(alive, considered, 0).sum()
+            else:
+                eff_preds = (alive.sum(axis=1) * cb).sum()
+            c.nodes_visited = c.nodes_visited + \
+                2 * pair_valid.sum().astype(jnp.int32)
+            c.predicates = c.predicates + (eff_preds * stages).astype(jnp.int32)
+            c.masked_waste = c.masked_waste + \
+                (base_preds - eff_preds).astype(jnp.int32)
+            c.vector_ops = c.vector_ops + \
+                (pair_valid.sum() * stages).astype(jnp.int32)
+
+            p, fo = optr.shape
+            fi = iptr.shape[1]
+            a_vals = jnp.broadcast_to(optr[:, :, None], (p, fo, fi))
+            b_vals = jnp.broadcast_to(iptr[:, None, :], (p, fo, fi))
+            cap = pair_caps[t]
+            oa, ob, cnt, ovf = compact_pairs(
+                a_vals.reshape(1, -1), b_vals.reshape(1, -1),
+                m.reshape(1, -1), cap)
+            c.enqueued = c.enqueued + cnt[0]
+            c.overflow = c.overflow | ovf[0].astype(jnp.int32)
+            o_ids, i_ids = oa[0], ob[0]
+            n_pairs = cnt[0]
+        pairs = jnp.stack([o_ids, i_ids], axis=1)
+        return pairs, n_pairs, c
+
+    return functools.partial(run, layers_o, layers_i)
+
+
+def join_instruction_model(fanout: int, n_pairs: int, alive_outer: int,
+                           flip_sum: int, inner_count_sum: int,
+                           w: int = 16, stages: int = 4) -> dict:
+    """Modeled SIMD-instruction counts for the paper's two join approaches
+    (paper §4.2 cost analysis), parametric in vector width W.
+
+    one-to-many : per pair, ``n_out,c`` broadcasts and
+                  ``n_out,c * ceil(n_in,c / W)`` compares per stage.
+    many-to-many: ``ceil(n_out,c / W) * (log2 F + 1)`` compares (+ a gather
+                  and two blends each) for the first stage, then the
+                  remaining stages on flip-qualified entries only.
+    """
+    log_f = int(math.ceil(math.log2(max(fanout, 2)))) + 1
+    o2m_compares = alive_outer * -(-fanout // w) * stages
+    o2m_broadcasts = alive_outer * stages
+    o2m_o4_compares = -(-flip_sum // w) * stages  # lower bound, batched rows
+    m2m_first = n_pairs * -(-fanout // w) * log_f
+    m2m_rest = -(-flip_sum // w) * (stages - 1)
+    return dict(
+        o2m_compares=int(o2m_compares),
+        o2m_broadcasts=int(o2m_broadcasts),
+        o2m_o4_compares=int(o2m_o4_compares + o2m_broadcasts),
+        m2m_compares=int(m2m_first + m2m_rest),
+        m2m_gathers=int(m2m_first),
+        m2m_blends=int(2 * m2m_first),
+    )

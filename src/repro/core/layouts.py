@@ -1,0 +1,105 @@
+"""Physical node storage layouts D0 / D1 / D2 (paper §2.3).
+
+The canonical ``RTree`` stores level-major SoA arrays (D1-global).  These
+converters materialize the paper's three *node-local* physical layouts as
+flat per-level buffers, so the layout-specific operators and kernels consume
+exactly the byte order the paper describes:
+
+  D0  (n_nodes, F, 5)   interleaved entries (lx, ly, hx, hy, ptr)  — AoS
+  D1  coords (n_nodes, 4, F) + ptr (n_nodes, F)                    — SoA
+  D2  lo (n_nodes, 2F) interleaved (lx0,ly0,lx1,ly1,...),
+      hi (n_nodes, 2F) interleaved (hx0,hy0,...), ptr (n_nodes, F)
+
+D2 halves the number of compare *stages* (2 instead of 4) but fits half the
+children per vector register — the paper's trade-off, preserved here so the
+benchmark reproduces the D1-vs-D2 findings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .rtree import RTree, RTreeLevel
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class LevelD0:
+    entries: jax.Array  # (n_nodes, F, 5): lx, ly, hx, hy, ptr(bitcast f32/i32)
+    count: jax.Array
+
+    def tree_flatten(self):
+        return ((self.entries, self.count), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class LevelD1:
+    coords: jax.Array  # (n_nodes, 4, F) rows: lx, ly, hx, hy
+    ptr: jax.Array     # (n_nodes, F) int32
+    count: jax.Array
+
+    def tree_flatten(self):
+        return ((self.coords, self.ptr, self.count), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class LevelD2:
+    lo: jax.Array      # (n_nodes, 2F) interleaved (lx, ly) pairs
+    hi: jax.Array      # (n_nodes, 2F) interleaved (hx, hy) pairs
+    ptr: jax.Array     # (n_nodes, F)
+    count: jax.Array
+
+    def tree_flatten(self):
+        return ((self.lo, self.hi, self.ptr, self.count), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def level_to_d0(lvl: RTreeLevel) -> LevelD0:
+    ptr_f = jax.lax.bitcast_convert_type(lvl.child, lvl.lx.dtype) \
+        if lvl.lx.dtype == jnp.float32 else lvl.child.astype(lvl.lx.dtype)
+    entries = jnp.stack([lvl.lx, lvl.ly, lvl.hx, lvl.hy, ptr_f], axis=-1)
+    return LevelD0(entries=entries, count=lvl.count)
+
+
+def level_to_d1(lvl: RTreeLevel) -> LevelD1:
+    coords = jnp.stack([lvl.lx, lvl.ly, lvl.hx, lvl.hy], axis=1)
+    return LevelD1(coords=coords, ptr=lvl.child, count=lvl.count)
+
+
+def level_to_d2(lvl: RTreeLevel) -> LevelD2:
+    n, f = lvl.lx.shape
+    lo = jnp.stack([lvl.lx, lvl.ly], axis=-1).reshape(n, 2 * f)
+    hi = jnp.stack([lvl.hx, lvl.hy], axis=-1).reshape(n, 2 * f)
+    return LevelD2(lo=lo, hi=hi, ptr=lvl.child, count=lvl.count)
+
+
+def d0_unpack(entries: jax.Array) -> Tuple[jax.Array, ...]:
+    """(n, F, 5) → (lx, ly, hx, hy, ptr_i32). Strided de-interleave — the
+    extra shuffles are exactly why the paper calls D0 SIMD-hostile."""
+    lx, ly, hx, hy = (entries[..., k] for k in range(4))
+    p = entries[..., 4]
+    ptr = jax.lax.bitcast_convert_type(p, jnp.int32) \
+        if entries.dtype == jnp.float32 else p.astype(jnp.int32)
+    return lx, ly, hx, hy, ptr
+
+
+def tree_layout(tree: RTree, layout: str):
+    """Materialize every level of ``tree`` in the requested physical layout."""
+    fn = {"d0": level_to_d0, "d1": level_to_d1, "d2": level_to_d2}[layout]
+    return tuple(fn(lvl) for lvl in tree.levels)

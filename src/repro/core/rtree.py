@@ -1,0 +1,154 @@
+"""RTree container: level-major SoA arrays, registered as a JAX pytree.
+
+Structure (leaf level = index 0, root level = index -1)::
+
+    RTreeLevel:
+      lx, ly, hx, hy : (n_nodes, F)  child MBR key excerpts (empty-padded)
+      child          : (n_nodes, F)  int32 child ids (-1 pad)
+      count          : (n_nodes,)    int32 valid-children count
+      node_mbr       : (n_nodes, 4)  node MBRs (used when this tree is the
+                                     *outer* relation of a join)
+
+Static metadata (fanout, height, sort key) rides as pytree aux data so jitted
+query operators specialize on it without retracing on array contents.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import str_pack
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class RTreeLevel:
+    lx: jax.Array
+    ly: jax.Array
+    hx: jax.Array
+    hy: jax.Array
+    child: jax.Array
+    count: jax.Array
+    node_mbr: jax.Array
+
+    @property
+    def n_nodes(self) -> int:
+        return self.count.shape[0]
+
+    @property
+    def fanout(self) -> int:
+        return self.lx.shape[1]
+
+    def tree_flatten(self):
+        return ((self.lx, self.ly, self.hx, self.hy, self.child, self.count,
+                 self.node_mbr), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class RTree:
+    """Immutable bulk-loaded R-tree."""
+    levels: Tuple[RTreeLevel, ...]          # leaf(0) ... root(-1)
+    rects: jax.Array                        # (N, 4) data rects
+    fanout: int = dataclasses.field(metadata=dict(static=True), default=64)
+    sort_key: Optional[str] = dataclasses.field(metadata=dict(static=True),
+                                                default=None)
+
+    @property
+    def height(self) -> int:
+        """Number of levels (a height-1 tree is a single root-leaf node)."""
+        return len(self.levels)
+
+    @property
+    def n_rects(self) -> int:
+        return self.rects.shape[0]
+
+    @property
+    def root(self) -> RTreeLevel:
+        return self.levels[-1]
+
+    def n_nodes_total(self) -> int:
+        return sum(lvl.n_nodes for lvl in self.levels)
+
+    def tree_flatten(self):
+        return ((self.levels, self.rects), (self.fanout, self.sort_key))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        levels, rects = children
+        return cls(levels=tuple(levels), rects=rects, fanout=aux[0],
+                   sort_key=aux[1])
+
+
+def build_rtree(rects: np.ndarray, fanout: int = 64,
+                sort_key: Optional[str] = None,
+                device_put: bool = True) -> RTree:
+    """STR bulk load → RTree. ``sort_key`` enables O3/O4/O5 preconditions."""
+    raw_levels = str_pack.str_pack(np.asarray(rects), fanout, sort_key)
+    put = jnp.asarray if device_put else (lambda a: a)
+    levels = tuple(
+        RTreeLevel(
+            lx=put(lv["lx"]), ly=put(lv["ly"]), hx=put(lv["hx"]),
+            hy=put(lv["hy"]), child=put(lv["child"].astype(np.int32)),
+            count=put(lv["count"]), node_mbr=put(lv["node_mbr"]),
+        )
+        for lv in raw_levels
+    )
+    return RTree(levels=levels, rects=put(np.asarray(rects)), fanout=fanout,
+                 sort_key=sort_key)
+
+
+def build_rtree_points(points: np.ndarray, **kw) -> RTree:
+    return build_rtree(str_pack.points_to_rects(np.asarray(points)), **kw)
+
+
+def validate_structure(tree: RTree) -> None:
+    """Structural invariants (used by property tests).
+
+    - every child MBR is contained in its node MBR;
+    - level L's children index valid nodes of level L-1 / data rects;
+    - counts within (0, fanout]; root level has one node;
+    - each data rect appears in exactly one leaf slot.
+    """
+    assert tree.root.n_nodes == 1, "root level must have exactly one node"
+    seen = np.zeros(tree.n_rects, dtype=np.int64)
+    for li, lvl in enumerate(tree.levels):
+        lx, ly = np.asarray(lvl.lx), np.asarray(lvl.ly)
+        hx, hy = np.asarray(lvl.hx), np.asarray(lvl.hy)
+        child = np.asarray(lvl.child)
+        count = np.asarray(lvl.count)
+        nm = np.asarray(lvl.node_mbr)
+        assert count.min() > 0 and count.max() <= tree.fanout
+        ar = np.arange(lvl.fanout)[None, :]
+        valid = ar < count[:, None]
+        # containment of valid children in the node MBR
+        assert (lx[valid] >= np.repeat(nm[:, 0], count)).all()
+        assert (ly[valid] >= np.repeat(nm[:, 1], count)).all()
+        assert (hx[valid] <= np.repeat(nm[:, 2], count)).all()
+        assert (hy[valid] <= np.repeat(nm[:, 3], count)).all()
+        assert (child[~valid] == -1).all()
+        n_below = tree.n_rects if li == 0 else tree.levels[li - 1].n_nodes
+        ids = child[valid]
+        assert ids.min() >= 0 and ids.max() < n_below
+        if li == 0:
+            np.add.at(seen, ids, 1)
+        else:
+            # every node below is referenced exactly once
+            ref = np.zeros(n_below, np.int64)
+            np.add.at(ref, ids, 1)
+            assert (ref == 1).all()
+        if tree.sort_key is not None:
+            col = {"lx": lx, "ly": ly, "hx": hx, "hy": hy}[tree.sort_key]
+            pad_mask = ~valid
+            c = np.where(pad_mask, np.inf, col.astype(np.float64))
+            assert (np.diff(c, axis=1) >= 0)[valid[:, 1:] & valid[:, :-1]].all() or \
+                   (np.sort(c, axis=1) == c).all()
+    assert (seen == 1).all(), "each rect must appear in exactly one leaf slot"

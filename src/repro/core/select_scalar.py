@@ -1,0 +1,144 @@
+"""Scalar range-select baselines (paper §3, scalar variants).
+
+Two families:
+
+1. ``select_recursive_py`` — host-Python recursive DFS over the numpy level
+   arrays, with the paper's two predicate styles:
+   *logical* (short-circuit ``and`` → up to 4 branches per entry) and
+   *bitwise* (evaluate all four comparisons, single branch).  This is the
+   semantic reference and the counter model for the scalar variants
+   (evaluated-comparison and branch counts follow the short-circuit algebra).
+
+2. ``make_select_dfs`` — the jitted *scalar-in-XLA* baseline: an explicit
+   DFS stack (`lax.while_loop`) processing ONE node per iteration and ONE
+   child per inner `fori_loop` step.  On TPU there is no branch predictor and
+   XLA lowers everything branch-free, so the paper's scalar-vs-SIMD axis maps
+   to "sequential per-element loop" vs. "dense vector ops" (DESIGN.md §2).
+   The same driver with a vectorized per-node inner step is the paper's
+   partially-vectorized V variant (see select_vector.make_select_dfs_vector).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .counters import Counters
+from .flat import FlatTree
+from .rtree import RTree
+
+
+# ---------------------------------------------------------------------------
+# Host-Python recursive reference (semantics + counter model)
+# ---------------------------------------------------------------------------
+
+def select_recursive_py(tree: RTree, query, variant: str = "logical"
+                        ) -> Tuple[np.ndarray, Counters]:
+    """Scalar recursive DFS (paper's baseline). Returns (sorted ids, counters).
+
+    Counter model per entry examined, with comparisons ordered
+    (qlx<=hx, qhx>=lx, qly<=hy, qhy>=ly):
+      logical: evaluated = 1 + c1 + c1·c2 + c1·c2·c3 ; branches = evaluated
+      bitwise: evaluated = 4 ; branches = 1
+    """
+    if variant not in ("logical", "bitwise"):
+        raise ValueError(variant)
+    qlx, qly, qhx, qhy = (float(x) for x in np.asarray(query))
+    levels = [
+        dict(lx=np.asarray(l.lx), ly=np.asarray(l.ly), hx=np.asarray(l.hx),
+             hy=np.asarray(l.hy), child=np.asarray(l.child),
+             count=np.asarray(l.count))
+        for l in tree.levels
+    ]
+    out: list[int] = []
+    c = Counters()
+
+    def visit(li: int, nid: int) -> None:
+        nonlocal c
+        lv = levels[li]
+        c.nodes_visited += 1
+        n = int(lv["count"][nid])
+        lx, ly = lv["lx"][nid], lv["ly"][nid]
+        hx, hy = lv["hx"][nid], lv["hy"][nid]
+        ch = lv["child"][nid]
+        for j in range(n):
+            if variant == "logical":
+                c1 = qlx <= hx[j]
+                c2 = c1 and (qhx >= lx[j])
+                c3 = c2 and (qly <= hy[j])
+                hit = c3 and (qhy >= ly[j])
+                ev = 1 + int(c1) + int(c2) + int(c3)
+                c.predicates += ev
+                c.branches += ev          # one branch per evaluated compare
+            else:
+                hit = (qlx <= hx[j]) & (qhx >= lx[j]) & \
+                      (qly <= hy[j]) & (qhy >= ly[j])
+                c.predicates += 4
+                c.branches += 1           # single fused conditional
+            if hit:
+                if li == 0:
+                    out.append(int(ch[j]))
+                else:
+                    visit(li - 1, int(ch[j]))
+
+    visit(tree.height - 1, 0)
+    return np.sort(np.array(out, dtype=np.int64)), c
+
+
+# ---------------------------------------------------------------------------
+# Scalar-in-XLA DFS baseline (jitted; one child per inner iteration)
+# ---------------------------------------------------------------------------
+
+def make_select_dfs(flat: FlatTree, result_cap: int, stack_cap: int = 1024):
+    """Build a jitted single-query scalar DFS: q(4,) → (ids, n, counters)."""
+    f = flat.fanout
+
+    @jax.jit
+    def run(flat_: FlatTree, q: jax.Array):
+        qlx, qly, qhx, qhy = q[0], q[1], q[2], q[3]
+
+        def body(st):
+            stack, sp, res, rc, cnt_nodes, cnt_pred, ovf = st
+            sp = sp - 1
+            nid = stack[sp]
+            leaf = flat_.is_leaf[nid]
+            n = flat_.count[nid]
+
+            def child(j, s):
+                stack, sp, res, rc, pred = s
+                valid = j < n
+                hit = valid & (qlx <= flat_.hx[nid, j]) & \
+                    (qhx >= flat_.lx[nid, j]) & (qly <= flat_.hy[nid, j]) & \
+                    (qhy >= flat_.ly[nid, j])
+                cid = flat_.child[nid, j]
+                pred = pred + jnp.where(valid, 4, 0)
+                push = hit & ~leaf
+                emit = hit & leaf
+                stack = stack.at[sp].set(
+                    jnp.where(push, cid, stack[jnp.minimum(sp, stack_cap - 1)]),
+                    mode="drop")
+                sp = sp + push.astype(jnp.int32)
+                res = res.at[rc].set(
+                    jnp.where(emit, cid, res[jnp.minimum(rc, result_cap - 1)]),
+                    mode="drop")
+                rc = rc + emit.astype(jnp.int32)
+                return stack, sp, res, rc, pred
+
+            stack, sp, res, rc, cnt_pred = jax.lax.fori_loop(
+                0, f, child, (stack, sp, res, rc, cnt_pred))
+            ovf = ovf | (sp > stack_cap) | (rc > result_cap)
+            return stack, sp, res, rc, cnt_nodes + 1, cnt_pred, ovf
+
+        stack = jnp.zeros((stack_cap,), jnp.int32).at[0].set(flat_.root)
+        init = (stack, jnp.int32(1), jnp.full((result_cap,), -1, jnp.int32),
+                jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.bool_(False))
+        _, _, res, rc, nodes, pred, ovf = jax.lax.while_loop(
+            lambda st: st[1] > 0, body, init)
+        ctr = Counters(nodes_visited=nodes, predicates=pred,
+                       overflow=ovf.astype(jnp.int32))
+        return res, rc, ctr
+
+    return functools.partial(run, flat)

@@ -1,0 +1,221 @@
+"""Vectorized range select (paper §3).
+
+Variant map (paper → here):
+
+  V        — recursive traversal, SIMD predicate per node
+             → ``make_select_dfs_vector``: sequential DFS stack, one dense
+               (4, F) vector compare per node, compaction push.
+  V-O1     — queue/BFS traversal, compress-store enqueue
+             → ``make_select_bfs``: *batched level-synchronous* BFS; the
+               paper's per-query queue generalizes to a (B, cap) frontier and
+               compress-store to mask→cumsum compaction (compaction.py).
+  V-O1+O2  — + software prefetching of queued nodes
+             → the Pallas kernel path (kernels/rtree_select.py): the frontier
+               rides the scalar-prefetch operand so node blocks are DMA'd
+               HBM→VMEM ahead of the compute that consumes them.
+
+All three consume any of the physical layouts D0/D1/D2; layout-specific
+predicate evaluation matches the paper's instruction sequences (D1: 4 compare
+stages; D2: 2 compare stages on interleaved pairs + pair reduction; D0:
+strided de-interleave first — the SIMD-hostile case).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .compaction import compact_1d, compact_rows
+from .counters import Counters
+from .flat import FlatTree
+from .geometry import intersects
+from .layouts import LevelD0, LevelD1, LevelD2, d0_unpack, tree_layout
+from .rtree import RTree
+
+
+# ---------------------------------------------------------------------------
+# Layout-specific batched predicate evaluation
+# ---------------------------------------------------------------------------
+
+def _masks_for_level(layer, ids: jax.Array, queries: jax.Array):
+    """Evaluate the select predicate for frontier ``ids`` of one level.
+
+    ids: (B, C) node ids (-1 pad); queries: (B, 4).
+    Returns (mask (B, C, F), child_ids (B, C, F), n_compare_stages).
+    """
+    safe = jnp.maximum(ids, 0)
+    valid = (ids >= 0)[:, :, None]
+    qlx = queries[:, 0, None, None]
+    qly = queries[:, 1, None, None]
+    qhx = queries[:, 2, None, None]
+    qhy = queries[:, 3, None, None]
+    if isinstance(layer, LevelD1):
+        c = layer.coords[safe]                      # (B, C, 4, F)
+        m = intersects(qlx, qly, qhx, qhy,
+                       c[:, :, 0], c[:, :, 1], c[:, :, 2], c[:, :, 3])
+        ptr = layer.ptr[safe]
+        stages = 4
+    elif isinstance(layer, LevelD2):
+        lo = layer.lo[safe]                         # (B, C, 2F) interleaved
+        hi = layer.hi[safe]
+        b, cc, f2 = lo.shape
+        lo = lo.reshape(b, cc, f2 // 2, 2)
+        hi = hi.reshape(b, cc, f2 // 2, 2)
+        qlo = jnp.stack([queries[:, 0], queries[:, 1]], -1)[:, None, None, :]
+        qhi = jnp.stack([queries[:, 2], queries[:, 3]], -1)[:, None, None, :]
+        m = ((qlo <= hi) & (qhi >= lo)).all(axis=-1)
+        ptr = layer.ptr[safe]
+        stages = 2
+    elif isinstance(layer, LevelD0):
+        e = layer.entries[safe]                     # (B, C, F, 5)
+        lx, ly, hx, hy, ptr = d0_unpack(e)
+        m = intersects(qlx, qly, qhx, qhy, lx, ly, hx, hy)
+        stages = 4
+    else:
+        raise TypeError(type(layer))
+    m = m & valid & (ptr >= 0)
+    return m, ptr, stages
+
+
+def frontier_caps(tree: RTree, result_cap: int, slack: int = 4,
+                  min_cap: int = 128) -> Tuple[int, ...]:
+    """Frontier capacity entering each level (root-1 … leaf) + result cap.
+
+    Level li (distance li from the leaves) can contribute at most
+    ~result_cap/F^li qualifying nodes for point data; ``slack`` absorbs MBR
+    overlap.  Caps are clamped to the level's node count and floored for TPU
+    lane alignment.
+    """
+    f = tree.fanout
+    caps = []
+    for li in range(tree.height - 2, -1, -1):
+        need = -(-result_cap // (f ** li)) * slack
+        caps.append(int(min(tree.levels[li].n_nodes,
+                            max(min_cap, need))))
+    if caps:
+        caps[-1] = max(caps[-1], result_cap)
+    return tuple(caps)
+
+
+def make_select_bfs(tree: RTree, layout: str = "d1", result_cap: int = 4096,
+                    caps: Optional[Sequence[int]] = None,
+                    count_only: bool = False, backend: Optional[str] = None):
+    """Build the jitted batched BFS select: queries (B,4) → results.
+
+    ``backend``: None → layout-specific jnp math; 'pallas'/'pallas_interpret'/
+    'xla' → route mask evaluation through kernels/ops.py (D1 only) — the
+    V-O1+O2 path whose node blocks ride the scalar-prefetch DMA pipeline.
+
+    Returns fn(queries) → (ids (B, result_cap), counts (B,), Counters)
+    (ids omitted in count_only mode).
+    """
+    if backend is not None and layout != "d1":
+        raise ValueError("kernel backend requires layout d1")
+    layers = tree_layout(tree, layout)
+    if caps is None:
+        caps = frontier_caps(tree, result_cap)
+    caps = tuple(caps)
+    if len(caps) != tree.height - 1:
+        raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
+    levels = tree.levels if backend is not None else None
+
+    @jax.jit
+    def run(layers_, levels_, queries: jax.Array):
+        b = queries.shape[0]
+        ids = jnp.zeros((b, 1), jnp.int32)  # root frontier
+        nodes = jnp.int32(0)
+        preds = jnp.int32(0)
+        vops = jnp.int32(0)
+        enq = jnp.int32(0)
+        waste = jnp.int32(0)
+        ovf = jnp.zeros((b,), bool)
+        counts = jnp.zeros((b,), jnp.int32)
+        res = None
+        for li in range(tree.height - 1, -1, -1):
+            layer = layers_[li]
+            if backend is not None:
+                from repro.kernels import ops as _kops
+                lvl = levels_[li]
+                mask = _kops.select_level_masks(
+                    ids, queries, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child,
+                    backend=backend).astype(bool)
+                ptr = lvl.child[jnp.maximum(ids, 0)]
+                stages = 4
+            else:
+                mask, ptr, stages = _masks_for_level(layer, ids, queries)
+            f = mask.shape[-1]
+            fcnt = (ids >= 0).sum(axis=1)
+            nodes = nodes + fcnt.sum()
+            preds = preds + fcnt.sum() * f * stages
+            vops = vops + fcnt.sum() * stages
+            hits = mask.sum()
+            waste = waste + fcnt.sum() * f - hits
+            flat_mask = mask.reshape(b, -1)
+            flat_ptr = ptr.reshape(b, -1)
+            if li == 0:
+                counts = flat_mask.sum(axis=1).astype(jnp.int32)
+                if not count_only:
+                    res, _, o = compact_rows(flat_ptr, flat_mask, result_cap)
+                    ovf = ovf | o
+            else:
+                cap = caps[tree.height - 1 - li]
+                ids, _, o = compact_rows(flat_ptr, flat_mask, cap)
+                ovf = ovf | o
+                enq = enq + hits
+        ctr = Counters(nodes_visited=nodes, predicates=preds, vector_ops=vops,
+                       enqueued=enq, masked_waste=waste,
+                       overflow=ovf.any().astype(jnp.int32))
+        if count_only:
+            return counts, ctr
+        return res, counts, ctr
+
+    return functools.partial(run, layers, levels)
+
+
+# ---------------------------------------------------------------------------
+# V: sequential DFS traversal with a vectorized per-node predicate
+# ---------------------------------------------------------------------------
+
+def make_select_dfs_vector(flat: FlatTree, result_cap: int,
+                           stack_cap: int = 1024):
+    """Paper's partially-vectorized variant: recursion → explicit stack,
+    one dense vector compare per visited node, compaction push."""
+    f = flat.fanout
+
+    @jax.jit
+    def run(flat_: FlatTree, q: jax.Array):
+        qlx, qly, qhx, qhy = q[0], q[1], q[2], q[3]
+        idx = jnp.arange(f, dtype=jnp.int32)
+
+        def body(st):
+            stack, sp, res, rc, nodes, vops, ovf = st
+            sp = sp - 1
+            nid = stack[sp]
+            leaf = flat_.is_leaf[nid]
+            mask = intersects(qlx, qly, qhx, qhy, flat_.lx[nid], flat_.ly[nid],
+                              flat_.hx[nid], flat_.hy[nid])
+            ch = flat_.child[nid]
+            mask = mask & (ch >= 0)
+            comp, k, _ = compact_1d(ch, mask, f)
+            rpos = jnp.where((idx < k) & leaf, rc + idx, result_cap + 1)
+            res = res.at[rpos].set(comp, mode="drop")
+            rc = rc + jnp.where(leaf, k, 0)
+            spos = jnp.where((idx < k) & ~leaf, sp + idx, stack_cap + 1)
+            stack = stack.at[spos].set(comp, mode="drop")
+            sp = sp + jnp.where(leaf, 0, k)
+            ovf = ovf | (sp > stack_cap) | (rc > result_cap)
+            return stack, sp, res, rc, nodes + 1, vops + 4, ovf
+
+        stack = jnp.zeros((stack_cap,), jnp.int32).at[0].set(flat_.root)
+        init = (stack, jnp.int32(1), jnp.full((result_cap,), -1, jnp.int32),
+                jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.bool_(False))
+        _, _, res, rc, nodes, vops, ovf = jax.lax.while_loop(
+            lambda st: st[1] > 0, body, init)
+        ctr = Counters(nodes_visited=nodes, vector_ops=vops,
+                       predicates=nodes * f * 4,
+                       overflow=ovf.astype(jnp.int32))
+        return res, rc, ctr
+
+    return functools.partial(run, flat)

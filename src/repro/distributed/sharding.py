@@ -1,0 +1,287 @@
+"""Sharding rules: parameter-path patterns → PartitionSpec.
+
+The mesh is ("pod", "data", "model") multi-pod or ("data", "model")
+single-pod (launch/mesh.py).  ``pod`` and ``data`` are pure DP for training;
+``model`` carries TP (attention heads / d_ff / vocab), EP (experts, when the
+expert count divides the axis) and the Mamba inner dimension.
+
+Rules are matched on the "/"-joined parameter path and specify the spec for
+the TRAILING dims of the leaf; leading stacked-layer dims are padded with
+None — so one rule covers (d, f), (L, d, f) and (U, period, d, f) leaves.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+MODEL = "model"
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data-parallel axes: ('pod', 'data') multi-pod, ('data',) else."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _rules(cfg, mesh: Mesh, moe_ep_axis: Optional[str] = "auto"
+           ) -> List[Tuple[str, Tuple[Optional[str], ...]]]:
+    msize = mesh.shape[MODEL]
+    ep = cfg.n_experts > 0 and cfg.n_experts % msize == 0
+    # expert-parallelism axis resolution:
+    #   "auto"  — experts over 'model' when divisible, else TP-in-expert
+    #   "data"  — experts over 'data' + d_ff TP over 'model' (2-D expert
+    #             sharding: weights fully resident, tokens all-to-all over
+    #             'data'; the llama4 hillclimb — see EXPERIMENTS.md §Perf)
+    ep_data = (moe_ep_axis == "data" and cfg.n_experts > 0 and
+               cfg.n_experts % mesh.shape.get("data", 1) == 0)
+    rules: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+        (r"embed$", (MODEL, None)),
+        (r"lm_head$", (None, MODEL)),
+        # attention: heads (flattened H*hd) over model
+        (r"attn\w*/wq$", (None, MODEL)),
+        (r"attn\w*/wk$", (None, MODEL)),
+        (r"attn\w*/wv$", (None, MODEL)),
+        (r"attn\w*/wo$", (MODEL, None)),
+        # dense MLP: d_ff over model
+        (r"mlp/w_gate$", (None, MODEL)),
+        (r"mlp/w_up$", (None, MODEL)),
+        (r"mlp/w_down$", (MODEL, None)),
+        # router is tiny — replicate
+        (r"moe/router$", ()),
+    ]
+    if ep_data:  # 2-D: experts over data, d_ff over model — resident
+        rules += [
+            (r"moe/w_gate$", ("data", None, MODEL)),
+            (r"moe/w_up$", ("data", None, MODEL)),
+            (r"moe/w_down$", ("data", MODEL, None)),
+        ]
+    elif ep:  # expert parallelism: experts over model (llama4: 128/16 = 8)
+        rules += [
+            (r"moe/w_gate$", (MODEL, None, None)),
+            (r"moe/w_up$", (MODEL, None, None)),
+            (r"moe/w_down$", (MODEL, None, None)),
+        ]
+    else:   # TP within experts (grok-1: 8 experts < 16-way model axis)
+        rules += [
+            (r"moe/w_gate$", (None, None, MODEL)),
+            (r"moe/w_up$", (None, None, MODEL)),
+            (r"moe/w_down$", (None, MODEL, None)),
+        ]
+    rules += [
+        # mamba: d_inner over model
+        (r"mixer/in_proj$", (None, MODEL)),
+        (r"mixer/x_proj$", (MODEL, None)),
+        (r"mixer/dt_proj$", (None, MODEL)),
+        (r"mixer/out_proj$", (MODEL, None)),
+        (r"mixer/a_log$", (MODEL, None)) if cfg.ssm_variant == "mamba1"
+        else (r"mixer/a_log$", ()),
+        # small per-channel tensors — replicate
+        (r"(conv_w|conv_b|dt_bias|d_skip|norm_w)$", ()),
+        (r"(ln\d?|final_norm|frontend_norm)$", ()),
+        (r".*", ()),        # default: replicate
+    ]
+    return rules
+
+
+def _pad(spec: Sequence[Optional[str]], rank: int):
+    spec = tuple(spec)
+    if len(spec) > rank:   # scalar-ish leaves
+        spec = spec[-rank:] if rank else ()
+    return P(*((None,) * (rank - len(spec)) + spec))
+
+
+def param_pspecs(cfg, mesh: Mesh, params_shape, *, fsdp: bool = False,
+                 moe_ep_axis: Optional[str] = "auto") -> Any:
+    """PartitionSpec pytree matching ``params_shape`` (a pytree of arrays or
+    ShapeDtypeStructs).
+
+    ``fsdp=True`` additionally shards every large weight across the 'data'
+    axis (ZeRO-3 / MaxText-fsdp style): parameters and optimizer moments
+    live sharded and are all-gathered at use / reduce-scattered on the
+    gradient.  Required for the ≥100B archs — a 314B model at TP=16 would
+    need 39 GB/device for resident bf16 weights alone.  ``pod`` stays pure
+    DP (FSDP gathers over the slow inter-pod links every layer would be
+    wasteful)."""
+    rules = _rules(cfg, mesh, moe_ep_axis)
+    dsize = mesh.shape.get("data", 1)
+
+    def spec_for(path, leaf) -> P:
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        rank = len(leaf.shape)
+        for pat, s in rules:
+            if re.search(pat, name):
+                # divisibility guard: drop the annotation if the dim is
+                # smaller than the axis (GSPMD would pad excessively)
+                ps = list(_pad(s, rank))
+                for i, ax in enumerate(ps):
+                    if ax is not None and leaf.shape[i] % mesh.shape[ax]:
+                        if leaf.shape[i] < mesh.shape[ax]:
+                            ps[i] = None
+                already_data = any(
+                    ax == "data" or (isinstance(ax, tuple) and
+                                     "data" in ax) for ax in ps)
+                if fsdp and rank >= 2 and leaf.size >= 1 << 20 and \
+                        not already_data:
+                    # only the rule's logical (trailing) dims are FSDP
+                    # candidates — sharding a stacked-layer dim would make
+                    # the per-layer weight gather/reduce-scatter cross the
+                    # scan axis, which GSPMD lowers as all-reduce + slice
+                    # with full-size fp32 grad temps (measured on grok-1);
+                    # EP-over-data weights are already data-sharded
+                    for i in range(max(rank - len(s), 0), rank):
+                        if ps[i] is None and leaf.shape[i] % dsize == 0 \
+                                and leaf.shape[i] >= dsize:
+                            ps[i] = "data"
+                            break
+                return P(*ps)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def param_shardings(cfg, mesh: Mesh, params_shape):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        param_pspecs(cfg, mesh, params_shape),
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Activation / input / cache specs
+# ---------------------------------------------------------------------------
+
+def act_pspec(mesh: Mesh, *, seq_shard: bool = False) -> P:
+    """(B, S, d) activations: batch over DP axes; optionally sequence over
+    'data' (long-context B=1 cells — sequence parallelism)."""
+    if seq_shard:
+        return P(None, "data", None)
+    return P(batch_axes(mesh), None, None)
+
+
+def make_act_shard(mesh: Mesh, *, seq_shard: bool = False):
+    spec = act_pspec(mesh, seq_shard=seq_shard)
+
+    def f(x):
+        if x.ndim == 3:
+            return jax.lax.with_sharding_constraint(x, NamedSharding(mesh,
+                                                                     spec))
+        return x
+    return f
+
+
+def make_moe_cap_shard(mesh: Mesh):
+    """(G, S|E, E|S, C)-shaped MoE dispatch/combine tensors: groups over DP,
+    capacity over model — without this the dispatch einsums lose the model
+    axis entirely (per-device dispatch FLOPs ×model_size; §Perf C2/C3)."""
+    msize = mesh.shape[MODEL]
+    ba = batch_axes(mesh)
+
+    def f(x):
+        if x.ndim != 4 or x.shape[0] < 2:
+            return x
+        # (G, S, E, C): prefer the expert dim over 'model' (aligns with
+        # EP-over-model expert weights — dispatch/buf/expert-matmul all
+        # e-sharded, no resharding); else the capacity dim
+        if x.shape[2] % msize == 0:
+            spec = P(ba, None, MODEL, None)
+        elif x.shape[3] % msize == 0:
+            spec = P(ba, None, None, MODEL)
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return f
+
+
+def make_logit_shard(mesh: Mesh):
+    """(B, S, V) logits: batch over DP, vocab over model — fp32 logits
+    replicated over the model axis would dominate per-device HBM."""
+    spec = P(batch_axes(mesh), None, MODEL)
+
+    def f(x):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return f
+
+
+def batch_pspecs(cfg, mesh: Mesh, batch, *, seq_shard: bool = False):
+    """Input batch specs: tokens/labels (B, S) over DP; frontend (B, P, d)."""
+    ba = batch_axes(mesh)
+
+    def spec_for(path, leaf):
+        rank = len(leaf.shape)
+        if seq_shard:
+            # B=1 long-context: shard the sequence dim instead
+            return P(*((None, "data") + (None,) * (rank - 2))[:rank])
+        b = leaf.shape[0]
+        if b % int(np.prod([mesh.shape[a] for a in ba])) == 0:
+            return P(*((ba,) + (None,) * (rank - 1)))
+        return P(*((None,) * rank))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch)
+
+
+def cache_pspecs(cfg, mesh: Mesh, cache_shape, *, seq_shard: bool = False,
+                 split_kv: bool = True):
+    """KV / SSM cache specs.
+
+    Full-attention KV (L, B, Sc, K, hd): batch over DP + **sequence over
+    'model'** (``split_kv`` — flash-decoding-style split-KV: each model
+    shard owns a slice of history, attention partials psum over 'model').
+    The alternative (heads/head-dim over model) mismatches the head-grouped
+    layout the attention math produces and GSPMD re-gathers the whole cache
+    every layer (measured 4.3 GB/layer f32 on llama4 decode — §Perf).
+    With ``seq_shard`` (long_500k, B=1) the sequence additionally shards
+    over 'data'.  SSM states (L, B, d_inner, N): d_inner over model.
+    """
+    ba = batch_axes(mesh)
+    msize = mesh.shape[MODEL]
+
+    def spec_for(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        rank = len(leaf.shape)
+        if rank >= 4 and ("k" in name.split("/")[-1:] or
+                          "v" in name.split("/")[-1:]):
+            # (L, B, Sc, K, hd) possibly with extra leading unit dims
+            k_dim, hd_dim = rank - 2, rank - 1
+            seq_dim, b_dim = rank - 3, rank - 4
+            spec: List[Optional[Any]] = [None] * rank
+            if seq_shard:
+                spec[seq_dim] = ("data", MODEL) if split_kv and \
+                    leaf.shape[seq_dim] % (
+                        mesh.shape.get("data", 1) * msize) == 0 else "data"
+            elif leaf.shape[b_dim] % int(
+                    np.prod([mesh.shape[a] for a in ba])) == 0:
+                spec[b_dim] = ba
+            if split_kv:
+                if spec[seq_dim] is None and \
+                        leaf.shape[seq_dim] % msize == 0:
+                    spec[seq_dim] = MODEL
+            elif leaf.shape[k_dim] % msize == 0:
+                spec[k_dim] = MODEL
+            elif leaf.shape[hd_dim] % msize == 0:
+                spec[hd_dim] = MODEL
+            return P(*spec)
+        # SSM states: shard the feature dim (d_inner / heads) over model
+        if rank >= 3:
+            spec = [None] * rank
+            b_dim = 1
+            if not seq_shard and leaf.shape[b_dim] % int(
+                    np.prod([mesh.shape[a] for a in ba])) == 0:
+                spec[b_dim] = ba
+            for d in range(rank - 1, 1, -1):
+                if leaf.shape[d] % msize == 0:
+                    spec[d] = MODEL
+                    break
+            return P(*spec)
+        return P(*([None] * rank))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def to_shardings(mesh: Mesh, pspecs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), pspecs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,80 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+On the TPU target the kernels run compiled; on this CPU container they run
+in ``interpret=True`` mode (Python-evaluated kernel bodies) for correctness
+validation, while ``backend='xla'`` selects the pure-jnp reference path —
+identical math, XLA-fused — which the CPU benchmarks use so wall-clock
+numbers measure the algorithm rather than the interpreter.  The default
+('auto') picks pallas on TPU and xla elsewhere.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .rtree_join import join_pair_masks as _join_pallas
+from .rtree_select import select_level_masks as _select_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def resolve_backend(backend: str) -> str:
+    if backend == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    if backend not in ("pallas", "xla", "pallas_interpret"):
+        raise ValueError(backend)
+    return backend
+
+
+def select_level_masks(ids, queries, lx, ly, hx, hy, child,
+                       backend: str = "auto"):
+    """BFS level-step qualify masks: (B,C) ids × (B,4) queries → (B,C,F)."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _ref.select_level_masks_ref(ids, queries, lx, ly, hx, hy, child)
+    return _select_pallas(ids, queries, lx, ly, hx, hy, child,
+                          interpret=(b == "pallas_interpret" or not _on_tpu()))
+
+
+def join_pair_masks(o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords,
+                    to: int = 8, ti: int = 128, backend: str = "auto"):
+    """Pair-frontier tile masks: (P,) × (P,) node ids → (P, F_o, F_i)."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _ref.join_pair_masks_ref(o_ids, i_ids, alive_cnt, flip_max,
+                                        o_coords, i_coords, to=to, ti=ti)
+    return _join_pallas(o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords,
+                        to=to, ti=ti,
+                        interpret=(b == "pallas_interpret" or not _on_tpu()))
+
+
+def join_prune_metadata(o_ids, i_ids, o_coords, i_coords, *, to: int = 8,
+                        o3: bool = True, o45: bool = True):
+    """XLA pre-pass computing the scalar-prefetch pruning bounds.
+
+    alive_cnt[p] — #leading outer children with low_x <= max inner high_x
+                   (monotone under the sort, so a count == the O3 slice).
+    flip_max[p,a] — max over the outer tile's rows of the flip index
+                   (#inner children with low_x <= outer high_x).
+    """
+    so, si = jnp.maximum(o_ids, 0), jnp.maximum(i_ids, 0)
+    oc, ic = o_coords[so], i_coords[si]
+    p, _, fo = oc.shape
+    fi = ic.shape[2]
+    to_ = min(to, fo)
+    na = fo // to_
+    if o3:
+        max_ihx = ic[:, 2].max(axis=1)                       # (P,)
+        alive = (oc[:, 0] <= max_ihx[:, None]).sum(axis=1)   # (P,)
+        alive_cnt = alive.astype(jnp.int32)
+    else:
+        alive_cnt = jnp.full((p,), fo, jnp.int32)
+    if o45:
+        flip = (ic[:, 0][:, None, :] <= oc[:, 2][:, :, None]).sum(-1)
+        flip_max = flip.reshape(p, na, to_).max(axis=2).astype(jnp.int32)
+    else:
+        flip_max = jnp.full((p, na), fi, jnp.int32)
+    return alive_cnt, flip_max

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (bit-exact reference semantics).
+
+Each function mirrors its kernel's contract exactly — same shapes, same
+dtypes, same padding behaviour — so the kernel sweeps in
+tests/test_kernels.py can `assert_allclose` (exact for int32 masks) across
+shapes and dtypes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.geometry import intersects
+
+
+def select_level_masks_ref(ids, queries, lx, ly, hx, hy, child):
+    """Oracle for kernels.rtree_select.select_level_masks."""
+    safe = jnp.maximum(ids, 0)                      # (B, C)
+    glx, gly = lx[safe], ly[safe]                   # (B, C, F)
+    ghx, ghy = hx[safe], hy[safe]
+    qlx = queries[:, 0, None, None]
+    qly = queries[:, 1, None, None]
+    qhx = queries[:, 2, None, None]
+    qhy = queries[:, 3, None, None]
+    m = intersects(qlx, qly, qhx, qhy, glx, gly, ghx, ghy)
+    m = m & (child[safe] >= 0) & (ids >= 0)[:, :, None]
+    return m.astype(jnp.int32)
+
+
+def join_pair_masks_ref(o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords,
+                        *, to: int = 8, ti: int = 128):
+    """Oracle for kernels.rtree_join.join_pair_masks (incl. tile skipping)."""
+    p = o_ids.shape[0]
+    fo, fi = o_coords.shape[2], i_coords.shape[2]
+    to, ti = min(to, fo), min(ti, fi)
+    so, si = jnp.maximum(o_ids, 0), jnp.maximum(i_ids, 0)
+    oc, ic = o_coords[so], i_coords[si]             # (P, 4, F)
+    m = (oc[:, 0, :, None] <= ic[:, 2, None, :]) & \
+        (oc[:, 2, :, None] >= ic[:, 0, None, :]) & \
+        (oc[:, 1, :, None] <= ic[:, 3, None, :]) & \
+        (oc[:, 3, :, None] >= ic[:, 1, None, :])
+    valid = ((o_ids >= 0) & (i_ids >= 0))[:, None, None]
+    # tile-skip semantics: a tile (a, b) is zeroed unless
+    # a*TO < alive_cnt[p] and b*TI < flip_max[p, a]
+    a_idx = jnp.arange(fo) // to                    # (F_out,)
+    b_idx = jnp.arange(fi) // ti                    # (F_in,)
+    a_active = (a_idx[None, :] * to) < alive_cnt[:, None]          # (P, F_out)
+    fm = flip_max[:, a_idx]                                        # (P, F_out)
+    b_active = (b_idx[None, None, :] * ti) < fm[:, :, None]        # (P,Fo,Fi)
+    return (m & valid & a_active[:, :, None] & b_active).astype(jnp.int32)

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: R-tree join pair-frontier tile step (paper §4).
+
+One grid step evaluates an (TO, TI) tile of the (F_out × F_in) child
+cross-product predicate for one (outer node, inner node) frontier pair.
+TO=8 sublanes carry outer children, TI=128 lanes carry inner children: the
+2-D vreg turns the paper's one-to-many broadcast into a native many-to-many
+tile (DESIGN.md §2 — the TPU adaptation of O5).
+
+Sorted-key pruning is honored at tile granularity via scalar-prefetch
+metadata computed in a cheap XLA pre-pass:
+
+  alive_cnt[p]    — O3: number of leading outer children that can intersect
+                    any inner child (outer sorted by low_x);
+  flip_max[p, a]  — O4/O5: per outer tile ``a``, the max flip index (number
+                    of eligible leading inner children, inner sorted by
+                    low_x) over the tile's outer rows.
+
+A tile whose outer rows are all O3-pruned or whose inner lanes lie entirely
+beyond ``flip_max`` skips the 4-stage predicate entirely (`pl.when`) and
+writes zeros — the instruction-saving the paper measures, realized as
+skipped VPU work on TPU.  The (outer, inner) node rows themselves arrive via
+scalar-prefetched DMA (O2, as in the select kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _join_kernel(o_ids, i_ids, alive_cnt, flip_max, o_ref, i_ref,
+                 mask_ref, *, to: int, ti: int):
+    p = pl.program_id(0)
+    a = pl.program_id(1)
+    b = pl.program_id(2)
+    valid_pair = (o_ids[p] >= 0) & (i_ids[p] >= 0)
+    active = valid_pair & (a * to < alive_cnt[p]) & (b * ti < flip_max[p, a])
+
+    @pl.when(active)
+    def _():
+        # o_ref: (1, 4, TO) rows [lx, ly, hx, hy]; i_ref: (1, 4, TI)
+        olx = o_ref[0, 0, :][:, None]
+        oly = o_ref[0, 1, :][:, None]
+        ohx = o_ref[0, 2, :][:, None]
+        ohy = o_ref[0, 3, :][:, None]
+        ilx = i_ref[0, 0, :][None, :]
+        ily = i_ref[0, 1, :][None, :]
+        ihx = i_ref[0, 2, :][None, :]
+        ihy = i_ref[0, 3, :][None, :]
+        m = (olx <= ihx) & (ohx >= ilx) & (oly <= ihy) & (ohy >= ily)
+        mask_ref[0, :, :] = m.astype(jnp.int32)
+
+    @pl.when(jnp.logical_not(active))
+    def _():
+        mask_ref[0, :, :] = jnp.zeros((to, ti), jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("to", "ti", "interpret"))
+def join_pair_masks(o_ids, i_ids, alive_cnt, flip_max,
+                    o_coords, i_coords, *, to: int = 8, ti: int = 128,
+                    interpret: bool = True):
+    """Tile-evaluate the join predicate for a pair frontier.
+
+    o_ids/i_ids: (P,) int32 node ids (-1 pad) — scalar-prefetched.
+    alive_cnt:   (P,) int32 O3 bound (pass F_out to disable O3 skipping).
+    flip_max:    (P, ceil(F_out/to)) int32 O4/O5 tile bound (pass F_in to
+                 disable).
+    o_coords/i_coords: (N, 4, F) D1 coords arrays of the two levels
+                 (rows: lx, ly, hx, hy).
+    → mask (P, F_out, F_in) int32.
+    """
+    p = o_ids.shape[0]
+    fo = o_coords.shape[2]
+    fi = i_coords.shape[2]
+    to = min(to, fo)
+    ti = min(ti, fi)
+    if fo % to or fi % ti:
+        raise ValueError(f"fanouts ({fo},{fi}) not divisible by ({to},{ti})")
+    na, nb = fo // to, fi // ti
+    if flip_max.shape != (p, na):
+        raise ValueError(f"flip_max must be {(p, na)}, got {flip_max.shape}")
+    safe_o = jnp.maximum(o_ids, 0)
+    safe_i = jnp.maximum(i_ids, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(p, na, nb),
+        in_specs=[
+            pl.BlockSpec((1, 4, to),
+                         lambda pi, ai, bi, so, si, ac, fm: (so[pi], 0, ai)),
+            pl.BlockSpec((1, 4, ti),
+                         lambda pi, ai, bi, so, si, ac, fm: (si[pi], 0, bi)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, to, ti), lambda pi, ai, bi, so, si, ac, fm: (pi, ai, bi)),
+    )
+    fn = pl.pallas_call(
+        functools.partial(_join_kernel, to=to, ti=ti),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((p, fo, fi), jnp.int32),
+        interpret=interpret,
+    )
+    # Clamped ids drive the DMA index maps (no OOB fetch for -1 pads); the
+    # in-kernel valid_pair check therefore sees clamped values, so padding
+    # validity is re-applied here, exactly as in the select wrapper.
+    valid = ((o_ids >= 0) & (i_ids >= 0))[:, None, None].astype(jnp.int32)
+    return fn(safe_o, safe_i, alive_cnt, flip_max, o_coords, i_coords) * valid

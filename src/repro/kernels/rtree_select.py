@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: R-tree select BFS level step (paper §3, V-O1+O2).
+
+One grid step evaluates the select predicate of one (query, frontier-node)
+cell.  The frontier node ids ride the **scalar-prefetch operand**
+(`PrefetchScalarGridSpec`): the BlockSpec index maps translate the id in SMEM
+into the HBM row of the node's SoA arrays, so Pallas' pipelined DMA fetches
+the node block for grid step k+1 *while step k computes* — the TPU-native
+equivalent of the paper's `pf_distance` software prefetching (O2).  The
+queue itself (O1) is the frontier array; compaction (compress-store
+analogue) runs as XLA cumsum+scatter outside the kernel (compaction.py).
+
+Layout: the kernel consumes the level-global D1 (SoA) arrays — one (1, F)
+row per key excerpt per node.  F should be a multiple of 128 for full lane
+utilization on real TPUs; other F work but pad lanes (recorded as
+masked_waste in the roofline notes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _select_kernel(ids_ref, q_ref, lx_ref, ly_ref, hx_ref, hy_ref, child_ref,
+                   mask_ref):
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+    nid = ids_ref[b, c]
+    qlx = q_ref[0, 0]
+    qly = q_ref[0, 1]
+    qhx = q_ref[0, 2]
+    qhy = q_ref[0, 3]
+    # D1 predicate: 4 vector compares over the F child lanes.
+    m = (qlx <= hx_ref[0, :]) & (qhx >= lx_ref[0, :]) & \
+        (qly <= hy_ref[0, :]) & (qhy >= ly_ref[0, :])
+    m = m & (child_ref[0, :] >= 0) & (nid >= 0)
+    mask_ref[0, 0, :] = m.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def select_level_masks(ids, queries, lx, ly, hx, hy, child, *,
+                       interpret: bool = True):
+    """Evaluate one BFS level for a batch of queries.
+
+    ids:     (B, C) int32 frontier node ids (-1 pad) — scalar-prefetched.
+    queries: (B, 4) query rects.
+    lx..hy:  (N, F) level-global SoA child MBR arrays.
+    child:   (N, F) int32 child ids.
+    → mask (B, C, F) int32 qualify bitmask.
+    """
+    b, c = ids.shape
+    n, f = lx.shape
+    safe_ids = jnp.maximum(ids, 0)
+
+    def node_map(bi, ci, ids_s):
+        return (ids_s[bi, ci], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, c),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda bi, ci, ids_s: (bi, 0)),
+            pl.BlockSpec((1, f), node_map),
+            pl.BlockSpec((1, f), node_map),
+            pl.BlockSpec((1, f), node_map),
+            pl.BlockSpec((1, f), node_map),
+            pl.BlockSpec((1, f), node_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, f), lambda bi, ci, ids_s: (bi, ci, 0)),
+    )
+    fn = pl.pallas_call(
+        _select_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, f), jnp.int32),
+        interpret=interpret,
+    )
+    # Pass original ids (sign used in-kernel for validity); safe ids drive the
+    # index map so padding never DMAs out of bounds.
+    return fn(safe_ids, queries, lx, ly, hx, hy, child) * \
+        ((ids >= 0)[:, :, None]).astype(jnp.int32)

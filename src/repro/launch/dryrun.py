@@ -1,0 +1,449 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape ×
+mesh) cell on 512 placeholder host devices, and extract the roofline terms
+from the compiled artifact.
+
+The ``XLA_FLAGS`` lines below MUST run before any other import (jax locks
+the device count on first init).  This module is the ONLY place that forces
+512 devices — smoke tests and benchmarks see the real single CPU.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k [--multi-pod] [--out out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun.json
+
+Per cell this prints/records: memory_analysis (proves the per-device
+footprint fits), cost_analysis FLOPs/bytes, collective bytes parsed from
+the partitioned HLO, the three roofline terms, MODEL_FLOPS/HLO_FLOPs, and
+the dominant bottleneck.
+"""
+from __future__ import annotations
+
+# These two lines run before any jax import (``from __future__`` is a
+# compiler directive, not a runtime import).
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 " +
+                           os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, cell_runnable, get_shape
+from repro.distributed import collectives, hlo_cost, sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.serve import kv_cache
+from repro.train import optimizer as opt
+from repro.train import train_step as ts
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e-like, per chip) — per the assignment.
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+MODEL_AXIS = "model"
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = registry.get(arch)
+    shp = get_shape(shape_name)
+    b, s = shp.global_batch, shp.seq_len
+    p0 = cfg.frontend_tokens if cfg.frontend != "none" else 0
+    i32 = jnp.int32
+    if shp.kind == "train":
+        spec = {"tokens": jax.ShapeDtypeStruct((b, s - p0), i32),
+                "labels": jax.ShapeDtypeStruct((b, s - p0), i32)}
+        if p0:
+            spec["frontend"] = jax.ShapeDtypeStruct((b, p0, cfg.d_model),
+                                                    jnp.float32)
+        return spec
+    if shp.kind == "prefill":
+        spec = {"tokens": jax.ShapeDtypeStruct((b, s - p0), i32)}
+        if p0:
+            spec["frontend"] = jax.ShapeDtypeStruct((b, p0, cfg.d_model),
+                                                    jnp.float32)
+        return spec
+    # decode: one new token against a seq_len-sized cache
+    return {
+        "cache": kv_cache.cache_specs(cfg, b, s),
+        "token": jax.ShapeDtypeStruct((b,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode counts D = batch tokens
+    and forward-only (2·N·D)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch        # one token / seq
+
+
+def default_microbatches(cfg, shp, mesh) -> int:
+    """Grad-accumulation factor keeping the remat-saved per-layer activation
+    stacks ≲2 GB/device: stack ≈ L_scan · (B/dp/mb) · S · d · 2B."""
+    if shp.kind != "train":
+        return 1
+    dp = int(np.prod([mesh.shape[a] for a in sharding.batch_axes(mesh)]))
+    b_loc = max(shp.global_batch // dp, 1)
+    scan_len = cfg.n_layers
+    stack = scan_len * b_loc * shp.seq_len * cfg.d_model * 2
+    mb = 1
+    while stack / mb > 2 << 30 and mb < b_loc:
+        mb *= 2
+    return mb
+
+
+def default_opt_kind(cfg) -> str:
+    """Adafactor for the ≥100B archs (AdamW fp32 moments alone would eat
+    most of the 16 GB/chip), AdamW otherwise."""
+    return "adafactor" if cfg.param_count() > 1e11 else "adamw"
+
+
+def build_lowered(arch: str, shape_name: str, mesh, *,
+                  opt_kind: Optional[str] = None,
+                  microbatches: Optional[int] = None,
+                  remat: bool = True, fsdp: bool = True,
+                  moe_ep_axis: str = "auto",
+                  moe_group_tokens: int = 0,
+                  split_kv: bool = True, cap_shard: bool = False):
+    """Lower the cell's step function with explicit in/out shardings.
+
+    Hillclimb knobs (§Perf): ``moe_ep_axis`` ('auto'|'data') selects the
+    expert-parallel axis; ``moe_group_tokens`` > 0 caps the GShard group
+    size (dispatch/combine einsum cost ∝ tokens-per-group)."""
+    cfg = registry.get(arch)
+    shp = get_shape(shape_name)
+    if cfg.n_experts:
+        # GShard dispatch groups aligned to the DP extent so expert compute
+        # stays token-sharded (see models/moe.py)
+        import dataclasses as _dc
+        dp = int(np.prod([mesh.shape[a] for a in
+                          sharding.batch_axes(mesh)]))
+        g = dp
+        if moe_group_tokens:
+            b = shp.global_batch
+            tokens = b * shp.seq_len if shp.kind != "decode" else b
+            if shp.kind == "train":
+                tokens //= (microbatches or
+                            default_microbatches(cfg, shp, mesh))
+            want = max(tokens // moe_group_tokens, dp)
+            g = max((want // dp) * dp, dp)
+        cfg = _dc.replace(cfg, moe_groups=g)
+    model = Model(cfg)
+    seq_shard = shp.kind == "decode" and shp.global_batch == 1
+    act = sharding.make_act_shard(mesh, seq_shard=False)
+    logit_shard = sharding.make_logit_shard(mesh)
+    moe_cap = sharding.make_moe_cap_shard(mesh) if cap_shard else None
+
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    # FSDP(data)-sharded params for training.  Serving prefers resident
+    # (TP-only) weights — per-token gathers cost latency — but the ≥300B
+    # archs exceed HBM at TP-16 (grok-1: 39 GB/device bf16), so serving
+    # falls back to fully-sharded weights when TP-only cannot fit.
+    serve_needs_fsdp = cfg.param_count() * 2 / mesh.shape[MODEL_AXIS] \
+        > 8e9
+    if moe_ep_axis == "data" and shp.kind != "train":
+        # EP-over-data keeps expert weights resident (sharded E×f) —
+        # no per-token FSDP gathers needed even for the ≥300B MoEs
+        serve_needs_fsdp = False
+    use_fsdp = fsdp and (shp.kind == "train" or serve_needs_fsdp)
+    p_spec = sharding.param_pspecs(cfg, mesh, params_shape, fsdp=use_fsdp,
+                                   moe_ep_axis=moe_ep_axis)
+    p_shard = sharding.to_shardings(mesh, p_spec)
+    specs = input_specs(arch, shape_name)
+
+    if shp.kind == "train":
+        if microbatches is None:
+            microbatches = default_microbatches(cfg, shp, mesh)
+        oc = opt.OptConfig(kind=opt_kind or default_opt_kind(cfg))
+        opt_shape = jax.eval_shape(lambda p: opt.init_opt(oc, p),
+                                   params_shape)
+        # optimizer moments shard exactly like their parameter
+        o_spec = _opt_specs(cfg, mesh, opt_shape, p_spec)
+        o_shard = sharding.to_shardings(mesh, o_spec)
+        b_spec = sharding.batch_pspecs(cfg, mesh, specs)
+        b_shard = sharding.to_shardings(mesh, b_spec)
+
+        step = ts.make_train_step_fn(model, oc, microbatches=microbatches,
+                                     act_shard=act, logit_shard=logit_shard,
+                                     grad_shardings=p_shard, remat=remat,
+                                     moe_cap_shard=moe_cap)
+
+        def raw(params, opt_state, batch):
+            return step(params, opt_state, None, batch)
+
+        fn = jax.jit(raw,
+                     in_shardings=(p_shard, o_shard, b_shard),
+                     donate_argnums=(0, 1))
+        with mesh:
+            lowered = fn.lower(params_shape, opt_shape, specs)
+        return lowered, cfg, shp
+
+    if shp.kind == "prefill":
+        b_spec = sharding.batch_pspecs(cfg, mesh, specs)
+        b_shard = sharding.to_shardings(mesh, b_spec)
+
+        def prefill(params, batch):
+            cache, last, pos = model.prefill(params, batch, act_shard=act,
+                                             moe_cap_shard=moe_cap)
+            return cache, jnp.argmax(last, -1).astype(jnp.int32)
+
+        fn = jax.jit(prefill, in_shardings=(p_shard, b_shard))
+        with mesh:
+            lowered = fn.lower(params_shape, specs)
+        return lowered, cfg, shp
+
+    # decode
+    cache_spec = sharding.cache_pspecs(cfg, mesh, specs["cache"],
+                                       seq_shard=seq_shard,
+                                       split_kv=split_kv)
+    cache_shard = sharding.to_shardings(mesh, cache_spec)
+    tok_shard = sharding.to_shardings(
+        mesh, sharding.batch_pspecs(cfg, mesh,
+                                    {"t": specs["token"]})["t"])
+
+    def decode(params, cache, token, pos):
+        logits, cache = model.decode(params, cache, token, pos,
+                                     act_shard=None,
+                                     moe_cap_shard=moe_cap)
+        return cache, jnp.argmax(logits, -1).astype(jnp.int32)
+
+    fn = jax.jit(decode,
+                 in_shardings=(p_shard, cache_shard, tok_shard, None),
+                 donate_argnums=(1,))
+    with mesh:
+        lowered = fn.lower(params_shape, specs["cache"], specs["token"],
+                           specs["pos"])
+    return lowered, cfg, shp
+
+
+def _opt_specs(cfg, mesh, opt_shape, p_spec):
+    """Optimizer state: moments shard like their param; scalars replicate."""
+    from jax.sharding import PartitionSpec as P
+
+    def like(path, leaf):
+        # path: ('mu'|'nu'|'vr'|'vc'|'step', <param path...>)
+        if len(path) == 0 or len(leaf.shape) == 0:
+            return P()
+        head = str(getattr(path[0], "key", getattr(path[0], "name", "")))
+        sub = path[1:]
+        node = p_spec
+        try:
+            for k in sub:
+                kk = getattr(k, "key", getattr(k, "idx", None))
+                node = node[kk]
+            if isinstance(node, P) and len(node) == len(leaf.shape):
+                return node
+            if isinstance(node, P) and head in ("vr", "vc"):
+                # factored moments drop one trailing dim
+                keep = [a for a in tuple(node)[:len(leaf.shape)]]
+                return P(*keep)
+        except (KeyError, TypeError, IndexError):
+            pass
+        return P()
+
+    return jax.tree_util.tree_map_with_path(like, opt_shape)
+
+
+# ---------------------------------------------------------------------------
+# Roofline extraction
+# ---------------------------------------------------------------------------
+
+def analyse(lowered, cfg, shp, mesh, *, save_hlo: Optional[str] = None
+            ) -> Dict[str, Any]:
+    t0 = time.time()
+    compiled = lowered.compile()
+    compile_s = time.time() - t0
+    if save_hlo:
+        os.makedirs(os.path.dirname(save_hlo) or ".", exist_ok=True)
+        with open(save_hlo, "w") as f:
+            f.write(compiled.as_text())
+    n_chips = mesh.devices.size
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                mem[k] = getattr(ma, k, None)
+    except Exception as e:                                   # CPU backend gaps
+        mem["error"] = str(e)
+
+    cost = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        cost = dict(ca) if ca else {}
+    except Exception as e:
+        cost["error"] = str(e)
+
+    hlo = compiled.as_text()
+    # scan-aware cost model (XLA's cost_analysis counts while bodies ONCE —
+    # useless for a scan-over-layers model; see distributed/hlo_cost.py)
+    rep = hlo_cost.analyse_text(hlo)
+
+    flops_dev = rep.flops
+    # memory term uses the ideal-fusion (TPU) byte model; the CPU
+    # fusion-boundary number rides along as the pessimistic bound
+    bytes_dev = rep.bytes_ideal
+    coll_dev = rep.collective_bytes
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    coll_s = coll_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    mflops = model_flops(cfg, shp)
+    hlo_flops_total = flops_dev * n_chips
+    useful = mflops / hlo_flops_total if hlo_flops_total else 0.0
+    bound = max(compute_s, memory_s, coll_s)
+    ideal = mflops / (n_chips * PEAK_FLOPS)
+    return {
+        "chips": int(n_chips),
+        "compile_seconds": round(compile_s, 1),
+        "memory_analysis": mem,
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "bytes_per_device_cpu_fusion_bound": rep.bytes,
+        "collective_bytes_per_device": coll_dev,
+        "collective_breakdown": rep.bytes_by_collective,
+        "collective_counts": rep.counts_by_collective,
+        "while_trip_counts": rep.while_trip_counts,
+        "xla_cost_analysis_raw": {"flops": cost.get("flops"),
+                                  "bytes accessed":
+                                      cost.get("bytes accessed")},
+        "terms": terms,
+        "dominant": dominant,
+        "model_flops": mflops,
+        "useful_flop_fraction": useful,
+        "roofline_fraction": (ideal / bound) if bound else 0.0,
+        "step_time_bound_s": bound,
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             opt_kind: Optional[str] = None,
+             microbatches: Optional[int] = None,
+             remat: bool = True, fsdp: bool = True,
+             moe_ep_axis: str = "auto", moe_group_tokens: int = 0,
+             split_kv: bool = True, cap_shard: bool = False,
+             verbose: bool = True) -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = registry.get(arch)
+    shp = get_shape(shape_name)
+    ok, why = cell_runnable(cfg, shp)
+    if not ok:
+        if verbose:
+            print(f"[skip] {arch} × {shape_name}: {why}")
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    if verbose:
+        print(f"[lower] {arch} × {shape_name} × "
+              f"{'multi' if multi_pod else 'single'}-pod ...", flush=True)
+    lowered, cfg, shp = build_lowered(arch, shape_name, mesh,
+                                      opt_kind=opt_kind,
+                                      microbatches=microbatches,
+                                      remat=remat, fsdp=fsdp,
+                                      moe_ep_axis=moe_ep_axis,
+                                      moe_group_tokens=moe_group_tokens,
+                                      split_kv=split_kv,
+                                      cap_shard=cap_shard)
+    save_hlo = os.path.join(
+        os.environ.get("DRYRUN_HLO_DIR", "runs/hlo"),
+        f"{arch}__{shape_name}__{'multi' if multi_pod else 'single'}.hlo")
+    res = analyse(lowered, cfg, shp, mesh, save_hlo=save_hlo)
+    res.update({"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "microbatches": microbatches if microbatches is not None
+                else default_microbatches(cfg, shp, mesh),
+                "opt": opt_kind or (default_opt_kind(cfg)
+                                    if shp.kind == "train" else "-"),
+                "fsdp": bool(fsdp and shp.kind == "train")})
+    if verbose:
+        print(json.dumps({k: v for k, v in res.items()
+                          if k not in ("memory_analysis",)}, indent=1,
+                         default=str))
+        print("memory_analysis:", res["memory_analysis"])
+    return res
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opt", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--ep-axis", default="auto", choices=["auto", "data"])
+    ap.add_argument("--moe-group-tokens", type=int, default=0)
+    ap.add_argument("--no-split-kv", action="store_true",
+                    help="baseline head-sharded KV cache (pre-§Perf)")
+    ap.add_argument("--cap-shard", action="store_true",
+                    help="shard MoE dispatch/combine capacity dim over "
+                         "'model' (§Perf C3)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cells = []
+    if args.all:
+        for arch in registry.all_archs():
+            for shp in SHAPES:
+                cells.append((arch, shp.name))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    results = []
+    failures = 0
+    for arch, shape_name in cells:
+        for mp in meshes:
+            try:
+                results.append(run_cell(
+                    arch, shape_name, multi_pod=mp, opt_kind=args.opt,
+                    microbatches=args.microbatches,
+                    remat=not args.no_remat, fsdp=not args.no_fsdp,
+                    moe_ep_axis=args.ep_axis,
+                    moe_group_tokens=args.moe_group_tokens,
+                    split_kv=not args.no_split_kv,
+                    cap_shard=args.cap_shard))
+            except Exception as e:
+                failures += 1
+                print(f"[FAIL] {arch} × {shape_name} × "
+                      f"{'multi' if mp else 'single'}: {e}")
+                results.append({"arch": arch, "shape": shape_name,
+                                "mesh": "multi" if mp else "single",
+                                "error": str(e)})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+        print(f"wrote {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,36 @@
+"""Modality frontend STUBS (per the assignment: ``[audio]``/``[vlm]`` cells
+exercise the transformer BACKBONE only; ``input_specs()`` provides
+precomputed frame/patch embeddings).
+
+The stubs define (a) the input spec each frontend contributes, and (b) the
+entry transform — a LayerNorm-style gate on the provided embeddings so the
+prefix participates in training — NOT a real SigLIP/EnCodec tower.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+
+def frontend_input_shape(cfg, batch: int):
+    """ShapeDtypeStruct-compatible shape of the precomputed embeddings."""
+    if cfg.frontend == "none" or cfg.frontend_tokens == 0:
+        return None
+    return (batch, cfg.frontend_tokens, cfg.d_model)
+
+
+def apply_frontend(cfg, params, frontend_embeds: jax.Array) -> jax.Array:
+    """Normalize the precomputed prefix embeddings into the residual stream
+    scale.  frontend_embeds: (B, P, d) → (B, P, d)."""
+    return rms_norm(frontend_embeds.astype(jnp.dtype(cfg.dtype)),
+                    params["frontend_norm"])
+
+
+def synth_frontend_embeds(cfg, key, batch: int) -> jax.Array:
+    """Synthetic 'precomputed' frame/patch embeddings for smoke tests and
+    examples (unit-scale gaussian, as a frozen tower would emit)."""
+    shape = frontend_input_shape(cfg, batch)
+    return jax.random.normal(key, shape, jnp.float32).astype(
+        jnp.dtype(cfg.dtype))

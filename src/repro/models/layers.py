@@ -1,0 +1,311 @@
+"""Core transformer layers: RMSNorm, RoPE, chunked flash attention (train /
+prefill), decode attention over a KV cache (full or sliding-window ring
+buffer), SwiGLU MLP.
+
+All attention is **blockwise online-softmax** ("flash") — materializing
+(S × S) score matrices is impossible at the assigned shapes (train_4k at
+global batch 256 would need ~400 TB for scores).  The q-chunk × kv-chunk
+double `lax.scan` keeps peak activations at (B, H, qc, kc) and skips
+non-causal / out-of-window chunk pairs with `lax.cond` so the compiled HLO
+does no work for them (a §Perf-visible saving).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> Tuple:
+    """positions (...,) → (sin, cos) each (..., dim/2), fp32."""
+    freq = jnp.exp(-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim *
+                   math.log(theta))
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with positions (..., S) — rotate pairs (even, odd)."""
+    d = x.shape[-1]
+    sin, cos = _rope_angles(positions, d, theta)       # (..., S, D/2)
+    sin = sin[..., None, :]                            # (..., S, 1, D/2)
+    cos = cos[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def _pick_chunk(s: int, target: int = 512) -> int:
+    c = math.gcd(s, target)
+    return max(c, 1)
+
+
+def _block_mask(qc, kc, q_lo, k_lo, causal, window):
+    qpos = q_lo + jnp.arange(qc)[:, None]
+    kpos = k_lo + jnp.arange(kc)[None, :]
+    mask = jnp.ones((qc, kc), bool)
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window > 0:
+        mask = mask & (qpos - kpos < window)
+    return mask
+
+
+def _chunk_needed(q_lo, k_lo, qc, kc, causal, window):
+    needed = jnp.bool_(True)
+    if causal:
+        needed = needed & (k_lo <= q_lo + qc - 1)
+    if window > 0:
+        needed = needed & (k_lo + kc - 1 > q_lo - window)
+    return needed
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, qc, kc):
+    """Returns (out (B,Sq,H,D), lse (B,kh,rep,Sq) fp32)."""
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    rep = h // kh
+    nq, nk = sq // qc, sk // kc
+    scale = 1.0 / math.sqrt(d)
+    qr = q.reshape(b, nq, qc, kh, rep, d)
+    kr = k.reshape(b, nk, kc, kh, d)
+    vr = v.reshape(b, nk, kc, kh, d)
+
+    def q_body(_, iq):
+        q_blk = qr[:, iq] * scale                       # (B, qc, K, rep, D)
+        q_lo = iq * qc + q_offset
+
+        def kv_body(carry, jk):
+            m_prev, l_prev, acc = carry
+            k_lo = jk * kc
+            needed = _chunk_needed(q_lo, k_lo, qc, kc, causal, window)
+
+            def compute(c):
+                m_p, l_p, a_p = c
+                k_blk = kr[:, jk]
+                v_blk = vr[:, jk]
+                s = jnp.einsum("bqkrd,bskd->bkrqs", q_blk, k_blk,
+                               preferred_element_type=jnp.float32)
+                mask = _block_mask(qc, kc, q_lo, k_lo, causal, window)
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m_p, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m_p - m_new)
+                l_new = l_p * corr + p.sum(axis=-1)
+                pv = jnp.einsum("bkrqs,bskd->bkrqd", p.astype(v_blk.dtype),
+                                v_blk, preferred_element_type=jnp.float32)
+                a_new = a_p * corr[..., None] + pv
+                return m_new, l_new, a_new
+
+            carry = jax.lax.cond(needed, compute, lambda c: c,
+                                 (m_prev, l_prev, acc))
+            return carry, None
+
+        m0 = jnp.full((b, kh, rep, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, rep, qc), jnp.float32)
+        a0 = jnp.zeros((b, kh, rep, qc, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]    # (B, K, rep, qc, D)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))        # (B, K, rep, qc)
+        out = out.transpose(0, 3, 1, 2, 4)              # (B, qc, K, rep, D)
+        return None, (out.astype(q.dtype), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_body, None, jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, d)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(b, kh, rep, sq)
+    return out, lse
+
+
+def _flash_bwd(q, k, v, out, lse, do, causal, window, q_offset, qc, kc):
+    """FlashAttention-2-style recompute backward: no (Sq × Sk)
+    materialization — p is rebuilt per (q-chunk, kv-chunk) tile from the
+    saved log-sum-exp."""
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    rep = h // kh
+    nq, nk = sq // qc, sk // kc
+    scale = 1.0 / math.sqrt(d)
+    qr = q.reshape(b, nq, qc, kh, rep, d)
+    kr = k.reshape(b, nk, kc, kh, d)
+    vr = v.reshape(b, nk, kc, kh, d)
+    dor = do.reshape(b, nq, qc, kh, rep, d)
+    outr = out.reshape(b, nq, qc, kh, rep, d)
+    lser = lse.reshape(b, kh, rep, nq, qc)
+    # delta[q] = rowsum(do ⊙ o)
+    delta = jnp.einsum("bnqkrd,bnqkrd->bkrnq",
+                       dor.astype(jnp.float32), outr.astype(jnp.float32))
+
+    def q_body(carry, iq):
+        dk_acc, dv_acc = carry                          # (B, nk, kc, kh, d)
+        q_blk = qr[:, iq].astype(jnp.float32) * scale
+        do_blk = dor[:, iq].astype(jnp.float32)         # (B, qc, K, rep, D)
+        lse_blk = lser[:, :, :, iq]                     # (B, K, rep, qc)
+        dl_blk = delta[:, :, :, iq]                     # (B, K, rep, qc)
+        q_lo = iq * qc + q_offset
+
+        def kv_body(inner, jk):
+            dq_acc, dk_a, dv_a = inner
+            k_lo = jk * kc
+            needed = _chunk_needed(q_lo, k_lo, qc, kc, causal, window)
+
+            def compute(c):
+                dq_a, dk_i, dv_i = c
+                k_blk = kr[:, jk].astype(jnp.float32)
+                v_blk = vr[:, jk].astype(jnp.float32)
+                s = jnp.einsum("bqkrd,bskd->bkrqs", q_blk, k_blk,
+                               preferred_element_type=jnp.float32)
+                mask = _block_mask(qc, kc, q_lo, k_lo, causal, window)
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+                p = jnp.exp(s - lse_blk[..., None])     # (B, K, rep, qc, kc)
+                dv_blk = jnp.einsum("bkrqs,bqkrd->bskd", p, do_blk)
+                dp = jnp.einsum("bqkrd,bskd->bkrqs", do_blk, v_blk)
+                ds = p * (dp - dl_blk[..., None])       # (B, K, rep, qc, kc)
+                dq_blk = jnp.einsum("bkrqs,bskd->bqkrd", ds, k_blk) * scale
+                # q_blk is already scaled, so no extra factor here
+                dk_blk = jnp.einsum("bkrqs,bqkrd->bskd", ds, q_blk)
+                return (dq_a + dq_blk,
+                        dk_i.at[:, jk].add(dk_blk),
+                        dv_i.at[:, jk].add(dv_blk))
+
+            return jax.lax.cond(needed, compute, lambda c: c,
+                                (dq_acc, dk_a, dv_a)), None
+
+        dq0 = jnp.zeros((b, qc, kh, rep, d), jnp.float32)
+        (dq_blk, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_body, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dq_blk
+
+    dk0 = jnp.zeros((b, nk, kc, kh, d), jnp.float32)
+    dv0 = jnp.zeros((b, nk, kc, kh, d), jnp.float32)
+    (dk, dv), dqs = jax.lax.scan(q_body, (dk0, dv0), jnp.arange(nq))
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, d)
+    return (dq.astype(q.dtype), dk.reshape(b, sk, kh, d).astype(k.dtype),
+            dv.reshape(b, sk, kh, d).astype(v.dtype))
+
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_attention_core(q, k, v, causal, window, q_offset, qc, kc):
+    out, _ = _flash_fwd(q, k, v, causal, window, q_offset, qc, kc)
+    return out
+
+
+def _flash_core_fwd(q, k, v, causal, window, q_offset, qc, kc):
+    out, lse = _flash_fwd(q, k, v, causal, window, q_offset, qc, kc)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_core_bwd(causal, window, q_offset, qc, kc, res, do):
+    q, k, v, out, lse = res
+    return _flash_bwd(q, k, v, out, lse, do, causal, window, q_offset,
+                      qc, kc)
+
+
+_flash_attention_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_offset: int = 0,
+                    chunk: Optional[int] = None) -> jax.Array:
+    """Blockwise online-softmax attention with a FlashAttention-2-style
+    custom VJP.  q: (B, Sq, H, D); k, v: (B, Sk, K, D) (GQA).
+
+    Forward and backward both run as q-chunk × kv-chunk `lax.scan`s whose
+    peak live tensor is one (B, K, rep, qc, kc) tile; the backward saves
+    only (q, k, v, out, lse) and **recomputes** the probabilities per tile
+    (standard flash residual policy).  Without the custom VJP, JAX AD saves
+    the stacked per-tile probabilities — the full (Sq × Sk) matrix — which
+    is exactly the memory wall this exists to avoid.
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefix /
+    continued attention).  ``window`` > 0 → mistral-style sliding window:
+    position i attends to (i-window, i].
+    """
+    b, sq, h, d = q.shape
+    _, sk, kh, _ = k.shape
+    qc = chunk or _pick_chunk(sq)
+    kc = chunk or _pick_chunk(sk)
+    assert sq % qc == 0 and sk % kc == 0, (sq, sk, qc, kc)
+    return _flash_attention_core(q, k, v, causal, window, q_offset, qc, kc)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     pos: jax.Array, *, window: int = 0) -> jax.Array:
+    """Single-token attention over a cache.
+
+    q: (B, 1, H, D); caches: (B, S_cache, K, D).  ``pos`` is the absolute
+    position of the new token.  With ``window`` > 0 the cache is a ring
+    buffer of size S_cache == window (slot = t % window) and all slots with
+    t' in (pos-window, pos] are valid; otherwise slots [0, pos] are valid.
+    """
+    b, _, h, d = q.shape
+    _, sc, kh, _ = k_cache.shape
+    rep = h // kh
+    scale = 1.0 / math.sqrt(d)
+    qr = q.reshape(b, kh, rep, d) * scale
+    s = jnp.einsum("bkrd,bskd->bkrs", qr, k_cache,
+                   preferred_element_type=jnp.float32)
+    slot = jnp.arange(sc)
+    if window > 0:
+        # ring buffer: slot t%window holds token t; valid iff within the
+        # last `window` tokens (including the current one, written already).
+        tok_age = jnp.mod(pos - slot, sc)               # 0 = current token
+        valid = tok_age < jnp.minimum(pos + 1, sc)
+    else:
+        valid = slot <= pos
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkrs,bskd->bkrd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    # preferred_element_type pinned to the compute dtype so the TP partial
+    # sums (and their transposed dgrads) all-reduce in bf16, not the f32
+    # accumulator XLA would otherwise reduce before downcasting (§Perf)
+    pe = x.dtype
+    g = jnp.einsum("...d,df->...f", x, w_gate, preferred_element_type=pe)
+    u = jnp.einsum("...d,df->...f", x, w_up, preferred_element_type=pe)
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down,
+                      preferred_element_type=pe)
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+                  state: Optional[jax.Array] = None):
+    """Depthwise causal conv over sequence.  x: (B, S, C); w: (W, C).
+
+    Returns (y, new_state) where state is the last (W-1) inputs (for
+    decode).  If ``state`` is given it is prepended (decode/chunk path).
+    """
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (width - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=1)              # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    y = y + b
+    new_state = xp[:, -(width - 1):] if width > 1 else \
+        jnp.zeros(x.shape[:1] + (0,) + x.shape[2:], x.dtype)
+    return y, new_state

@@ -1,0 +1,122 @@
+"""Model facade: embedding, layer stack, loss, prefill and decode.
+
+Batch contract (all arrays already global-shape; sharding comes from the
+jit in/out shardings + activation constraints):
+
+  LM archs:        {"tokens": (B, S) int32, "labels": (B, S) int32}
+  frontend archs:  + {"frontend": (B, P, d) — precomputed embeddings};
+                   tokens then cover the remaining S - P positions.
+
+``labels`` uses -100 as the ignore marker (shifted internally — labels[t]
+is the target for position t, i.e. already next-token aligned by the data
+pipeline).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import frontends, transformer
+from .layers import rms_norm
+
+IGNORE = -100
+
+
+class Model:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # -- params ------------------------------------------------------------
+    def init_params(self, key) -> Dict[str, Any]:
+        return transformer.init(self.cfg, key)
+
+    # -- embedding / head ----------------------------------------------------
+    def _embed_tokens(self, params, tokens: jax.Array) -> jax.Array:
+        return params["embed"][tokens]
+
+    def _embed_batch(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        """→ (embeds (B, S_total, d), token_region_start)."""
+        cfg = self.cfg
+        x = self._embed_tokens(params, batch["tokens"])
+        if cfg.frontend != "none":
+            pre = frontends.apply_frontend(cfg, params, batch["frontend"])
+            x = jnp.concatenate([pre, x], axis=1)
+        return x, cfg.frontend_tokens if cfg.frontend != "none" else 0
+
+    def logits(self, params, hidden: jax.Array) -> jax.Array:
+        h = rms_norm(hidden, params["final_norm"])
+        if self.cfg.tie_embeddings:
+            return jnp.einsum("bsd,vd->bsv", h, params["embed"])
+        return jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+
+    # -- training loss -------------------------------------------------------
+    def loss_fn(self, params, batch, *, remat: bool = True, act_shard=None,
+                logit_shard=None, moe_cap_shard=None,
+                aux_weight: float = 0.01, z_weight: float = 1e-4):
+        cfg = self.cfg
+        x, p0 = self._embed_batch(params, batch)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        h, aux, _ = transformer.forward(cfg, params, x, positions,
+                                        want_cache=False, remat=remat,
+                                        act_shard=act_shard,
+                                        moe_cap_shard=moe_cap_shard)
+        h = h[:, p0:]                               # token region only
+        logits = self.logits(params, h).astype(jnp.float32)
+        if logit_shard is not None:      # keep (B, S, V) vocab-sharded —
+            logits = logit_shard(logits)  # fp32 logits replicated would
+                                          # blow the per-device HBM budget
+        labels = batch["labels"]
+        mask = (labels != IGNORE).astype(jnp.float32)
+        safe = jnp.maximum(labels, 0)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # iota-select instead of take_along_axis: a gather along the
+        # vocab-sharded dim would force an all-gather of the logits
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        gold = jnp.where(iota == safe[..., None], logits, 0.0).sum(axis=-1)
+        nll = (lse - gold) * mask
+        denom = jnp.maximum(mask.sum(), 1.0)
+        ce = nll.sum() / denom
+        z = ((lse * mask) ** 2).sum() / denom
+        loss = ce + aux_weight * aux + z_weight * z
+        metrics = {"ce": ce, "aux": aux, "z": z,
+                   "tokens": mask.sum(), "loss": loss}
+        return loss, metrics
+
+    # -- serving ---------------------------------------------------------------
+    def prefill(self, params, batch, *, act_shard=None, moe_cap_shard=None,
+                max_len: Optional[int] = None):
+        """Forward + cache build.  Returns (cache, last_logits (B, V),
+        next_pos).  ``max_len``: total tokens the cache must hold (prefill
+        + generated); defaults to prefill length (no generation headroom)."""
+        from repro.serve import kv_cache as _kv
+        cfg = self.cfg
+        x, _ = self._embed_batch(params, batch)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        h, _, cache = transformer.forward(cfg, params, x, positions,
+                                          want_cache=True, remat=False,
+                                          act_shard=act_shard,
+                                          moe_cap_shard=moe_cap_shard)
+        if max_len is not None and max_len > s:
+            cache = _kv.pad_cache(cfg, cache, max_len)
+        last = self.logits(params, h[:, -1:])[:, 0]
+        return cache, last.astype(jnp.float32), s
+
+    def decode(self, params, cache, token: jax.Array, pos, *,
+               act_shard=None, moe_cap_shard=None):
+        """One decode step.  token: (B,) int32; pos: scalar int32 (position
+        being written).  Returns (logits (B, V) fp32, new_cache)."""
+        x = self._embed_tokens(params, token[:, None])
+        h, cache = transformer.decode_step(self.cfg, params, x, cache, pos,
+                                           act_shard=act_shard,
+                                           moe_cap_shard=moe_cap_shard)
+        lg = self.logits(params, h)[:, 0]
+        return lg.astype(jnp.float32), cache
+
+
+def make_model(cfg) -> Model:
+    return Model(cfg)

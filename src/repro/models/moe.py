@@ -1,0 +1,111 @@
+"""Mixture-of-Experts block: top-k routing, GShard-style grouped einsum
+dispatch.
+
+Dispatch is the **grouped one-hot einsum** formulation (GShard / Mixtral-
+JAX): tokens are reshaped to (G, S, d) groups with G aligned to the data-
+parallel mesh axis, capacity is per-group, and dispatch/combine are einsums
+against a (G, S, E, C) one-hot tensor.  Under GSPMD this keeps every
+device's expert FLOPs proportional to ITS OWN tokens — a scatter-based
+dispatch (our first implementation) forces the (E, C, d) buffers to be
+replicated across the data axis, i.e. dp-times redundant expert compute
+(measured 16× on the grok-1 dry-run; see EXPERIMENTS.md §Perf).  With
+expert-parallel weight sharding the grouped form lowers to the classic
+MoE all-to-all; with TP-within-expert it stays collective-free.
+
+The position-in-expert prefix-sum is the same mask → cumsum → select idiom
+as the R-tree frontier compaction (core/compaction.py) — the paper's
+compress-store analogue reused at the framework level (DESIGN.md §5).
+
+``capacity_factor=None`` → dropless (C = S·k): exact, for the decode path.
+Routing priority under finite capacity: position-major then choice-major
+(GShard convention).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class MoEMetrics(NamedTuple):
+    aux_loss: jax.Array        # load-balance loss (Switch-style)
+    dropped_frac: jax.Array    # fraction of (token, choice) pairs dropped
+
+
+def moe_ffn(x: jax.Array, router_w: jax.Array, w_gate: jax.Array,
+            w_up: jax.Array, w_down: jax.Array, *, top_k: int,
+            capacity_factor: Optional[float] = 1.25, n_groups: int = 1,
+            group_shard=None, cap_shard=None):
+    """x: (T, d) tokens; router_w: (d, E); w_*: (E, d, f) / (E, f, d).
+
+    ``group_shard``: optional constraint applied to the (G, S, d) grouped
+    tokens.  The (T, d) → (G, S, d) reshape is sharding-ambiguous under
+    GSPMD — without the constraint it may shard S instead of G, making
+    every dispatch einsum contract over a partitioned dim (partial sums →
+    per-layer all-reduces of the expert buffers; measured on grok-1).
+
+    Returns (y (T, d), MoEMetrics).
+    """
+    t, d = x.shape
+    e = router_w.shape[1]
+    g = n_groups if t % max(n_groups, 1) == 0 else 1
+    s = t // g
+    xg = x.reshape(g, s, d)
+    if group_shard is not None:
+        xg = group_shard(xg)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)       # (G, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    if capacity_factor is None:
+        cap = s * top_k                                     # dropless
+    else:
+        cap = int(max(1, round(s * top_k * capacity_factor / e)))
+
+    # ---- position-in-expert: exclusive prefix over the routing mask ----
+    oh = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)     # (G, S, k, E)
+    flat = oh.reshape(g, s * top_k, e)                      # priority order
+    pos_all = jnp.cumsum(flat, axis=1) - flat               # (G, S·k, E)
+    pos = jnp.sum(pos_all * flat, axis=-1).reshape(g, s, top_k)
+    pos = pos.astype(jnp.int32)
+    keep = pos < cap
+    dropped = 1.0 - keep.mean()
+
+    # ---- dispatch / combine tensors (OOB one_hot rows are all-zero) ----
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)    # (G, S, k, C)
+    dispatch = jnp.einsum("gske,gskc->gsec", oh, pos_oh)
+    combine = jnp.einsum("gske,gskc->gsec", oh * gate_vals[..., None],
+                         pos_oh)
+    if cap_shard is not None:   # capacity dim over model (§Perf C3)
+        dispatch = cap_shard(dispatch)
+        combine = cap_shard(combine)
+
+    # ---- dispatch: (G, E, C, d) expert buffers, group-sharded ----
+    buf = jnp.einsum("gsd,gsec->gecd", xg,
+                     dispatch.astype(x.dtype))
+
+    # ---- expert compute: batched SwiGLU over (E, C·G); bf16 partial
+    # sums so the TP-in-expert all-reduces ride bf16 wire (§Perf) ----
+    pe = x.dtype
+    h_g = jnp.einsum("gecd,edf->gecf", buf, w_gate,
+                     preferred_element_type=pe)
+    h_u = jnp.einsum("gecd,edf->gecf", buf, w_up,
+                     preferred_element_type=pe)
+    h = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h_g) * h_u, w_down,
+                   preferred_element_type=pe)
+
+    # ---- combine: weighted gather back to token order ----
+    y = jnp.einsum("gecd,gsec->gsd", h, combine.astype(x.dtype))
+
+    # ---- Switch load-balance aux loss ----
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32),
+        axis=(0, 1))
+    mean_probs = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * mean_probs)
+    return y.reshape(t, d), MoEMetrics(aux_loss=aux, dropped_frac=dropped)

@@ -1,0 +1,218 @@
+"""Selective state-space layers: Mamba1 (falcon-mamba) and Mamba2 (zamba2).
+
+Both use a **chunked scan over the sequence**: a `lax.scan` over chunks
+carries the (B, ..., N) state, and within a chunk the recurrence closes in
+one of two forms:
+
+  mamba1 — diagonal A: `lax.associative_scan` on (decay, input) pairs; the
+           (B, Sc, d_inner, N) intermediate exists per chunk only.
+  mamba2 — scalar-per-head A (SSD): the within-chunk part is the matmul
+           ("attention-like") form — decay-weighted (C·Bᵀ) lower-triangular
+           scores times x — which maps onto the MXU, plus a rank-N cross-
+           chunk state pass.  Validated against the sequential recurrence in
+           tests/test_models.py.
+
+Decode steps are single-token recurrences carrying (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import causal_conv1d
+
+
+# ---------------------------------------------------------------------------
+# Mamba1: diagonal selective scan
+# ---------------------------------------------------------------------------
+
+def _assoc_combine(a, b):
+    (a1, b1), (a2, b2) = a, b
+    return a1 * a2, b1 * a2 + b2
+
+
+def selective_scan(decay: jax.Array, inp: jax.Array, h0: jax.Array,
+                   c_t: jax.Array, chunk: int = 256):
+    """h_t = decay_t ⊙ h_{t-1} + inp_t ;  y_t = Σ_n h_t[..., n] · c_t[n].
+
+    decay/inp: (B, S, D, N); h0: (B, D, N); c_t: (B, S, N)
+    → (y (B, S, D), h_last (B, D, N)).
+    """
+    b, s, d, n = decay.shape
+    ch = min(chunk, s)
+    while s % ch:
+        ch //= 2
+    nc = s // ch
+    dr = decay.reshape(b, nc, ch, d, n)
+    ir = inp.reshape(b, nc, ch, d, n)
+    cr = c_t.reshape(b, nc, ch, n)
+
+    def body(h, xs):
+        dc, ic, cc = xs                                  # (B, ch, D, N)
+        a_cum, b_cum = jax.lax.associative_scan(
+            _assoc_combine, (dc, ic), axis=1)
+        h_all = a_cum * h[:, None] + b_cum               # (B, ch, D, N)
+        y = jnp.einsum("bcdn,bcn->bcd", h_all, cc)
+        return h_all[:, -1], y
+
+    h_last, ys = jax.lax.scan(
+        body, h0,
+        (dr.transpose(1, 0, 2, 3, 4), ir.transpose(1, 0, 2, 3, 4),
+         cr.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s, d)
+    return y, h_last
+
+
+class Mamba1State(NamedTuple):
+    conv: jax.Array    # (B, W-1, d_inner)
+    ssm: jax.Array     # (B, d_inner, N)
+
+
+def mamba1_forward(p: dict, x: jax.Array, *, d_inner: int, n_state: int,
+                   dt_rank: int, state: Optional[Mamba1State] = None,
+                   chunk: int = 256) -> Tuple[jax.Array, Mamba1State]:
+    """Full mamba1 mixer. x: (B, S, d) → (y (B, S, d), state)."""
+    b, s, d = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_state = state.conv if state is not None else None
+    xi, conv_state = causal_conv1d(xi, p["conv_w"], p["conv_b"], conv_state)
+    xi = jax.nn.silu(xi)
+    dbc = jnp.einsum("bse,er->bsr", xi, p["x_proj"])
+    dt, b_t, c_t = jnp.split(dbc, [dt_rank, dt_rank + n_state], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt, p["dt_proj"]) +
+                         p["dt_bias"])                     # (B, S, d_inner)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))           # (d_inner, N)
+    decay = jnp.exp(dt.astype(jnp.float32)[..., None] * a)  # (B,S,di,N)
+    inp = (dt * xi).astype(jnp.float32)[..., None] * \
+        b_t.astype(jnp.float32)[:, :, None, :]
+    h0 = state.ssm if state is not None else \
+        jnp.zeros((b, d_inner, n_state), jnp.float32)
+    y, h_last = selective_scan(decay, inp, h0, c_t.astype(jnp.float32),
+                               chunk)
+    y = y.astype(x.dtype) + p["d_skip"] * xi
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, Mamba1State(conv=conv_state, ssm=h_last)
+
+
+def mamba1_decode(p: dict, x: jax.Array, state: Mamba1State, *,
+                  d_inner: int, n_state: int, dt_rank: int):
+    """Single-token step. x: (B, 1, d)."""
+    y, new_state = mamba1_forward(p, x, d_inner=d_inner, n_state=n_state,
+                                  dt_rank=dt_rank, state=state, chunk=1)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD): scalar decay per head, chunked matmul form
+# ---------------------------------------------------------------------------
+
+class Mamba2State(NamedTuple):
+    conv: jax.Array    # (B, W-1, d_inner + 2N)
+    ssm: jax.Array     # (B, H, dh, N)
+
+
+def ssd_chunked(xh: jax.Array, dt: jax.Array, a: jax.Array, b_t: jax.Array,
+                c_t: jax.Array, h0: jax.Array, chunk: int = 128):
+    """Mamba2 SSD scan.
+
+    xh: (B, S, H, dh); dt: (B, S, H) (post-softplus); a: (H,) (negative);
+    b_t/c_t: (B, S, N); h0: (B, H, dh, N)
+    → (y (B, S, H, dh), h_last).
+
+    Recurrence per head: h_t = exp(dt_t a) h_{t-1} + dt_t · x_t ⊗ B_t ;
+    y_t = h_t · C_t.
+    """
+    b, s, h, dh = xh.shape
+    n = b_t.shape[-1]
+    ch = min(chunk, s)
+    while s % ch:
+        ch //= 2
+    nc = s // ch
+    xr = xh.reshape(b, nc, ch, h, dh).transpose(1, 0, 2, 3, 4)
+    dtr = dt.reshape(b, nc, ch, h).transpose(1, 0, 2, 3)
+    br = b_t.reshape(b, nc, ch, n).transpose(1, 0, 2, 3)
+    cr = c_t.reshape(b, nc, ch, n).transpose(1, 0, 2, 3)
+
+    def body(h_in, xs):
+        xc, dtc, bc, cc = xs           # (B, ch, H, dh) (B, ch, H) (B, ch, N)
+        logd = dtc.astype(jnp.float32) * a                 # (B, ch, H) ≤ 0
+        cum = jnp.cumsum(logd, axis=1)                     # L_t
+        # intra-chunk: scores[t, s'] = exp(L_t - L_s') · dt_s' · (C_t·B_s')
+        # for s' ≤ t
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)            # (B, ch, ch)
+        diff = cum[:, :, None, :] - cum[:, None, :, :]     # (B, t, s', H)
+        tri = jnp.tril(jnp.ones((ch, ch), bool))
+        w = jnp.where(tri[None, :, :, None], jnp.exp(diff), 0.0)
+        w = w * cb[..., None] * dtc[:, None, :, :]         # (B, t, s', H)
+        y_intra = jnp.einsum("btsh,bshd->bthd", w.astype(xc.dtype), xc)
+        # cross-chunk: y_t += C_t · (exp(L_t) · h_in)
+        y_cross = jnp.einsum(
+            "btn,bhdn,bth->bthd", cc, h_in.astype(jnp.float32),
+            jnp.exp(cum)).astype(xc.dtype)
+        # state update: h_out = exp(L_last) h_in + Σ_s exp(L_last - L_s)
+        #               dt_s · x_s ⊗ B_s
+        wlast = jnp.exp(cum[:, -1:, :] - cum) * dtc        # (B, ch, H)
+        h_new = jnp.einsum("bsh,bshd,bsn->bhdn",
+                           wlast, xc.astype(jnp.float32),
+                           bc.astype(jnp.float32))
+        h_out = jnp.exp(cum[:, -1])[:, :, None, None] * h_in + h_new
+        return h_out, y_intra + y_cross
+
+    h_last, ys = jax.lax.scan(body, h0, (xr, dtr, br, cr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+    return y, h_last
+
+
+def mamba2_forward(p: dict, x: jax.Array, *, d_inner: int, n_state: int,
+                   n_heads: int, head_dim: int,
+                   state: Optional[Mamba2State] = None,
+                   chunk: int = 128) -> Tuple[jax.Array, Mamba2State]:
+    """Full mamba2 mixer. x: (B, S, d) → (y, state)."""
+    b, s, d = x.shape
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z, bc, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + 2 * n_state], axis=-1)
+    xbc = jnp.concatenate([xi, bc], axis=-1)
+    conv_state = state.conv if state is not None else None
+    xbc, conv_state = causal_conv1d(xbc, p["conv_w"], p["conv_b"],
+                                    conv_state)
+    xbc = jax.nn.silu(xbc)
+    xi, b_t, c_t = jnp.split(xbc, [d_inner, d_inner + n_state], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])                # (B, S, H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))           # (H,)
+    xh = xi.reshape(b, s, n_heads, head_dim)
+    h0 = state.ssm if state is not None else \
+        jnp.zeros((b, n_heads, head_dim, n_state), jnp.float32)
+    y, h_last = ssd_chunked(xh, dt, a, b_t, c_t, h0, chunk)
+    y = y + p["d_skip"][None, None, :, None] * xh
+    y = y.reshape(b, s, d_inner) * jax.nn.silu(z)
+    y = rms_norm_gated(y, p["norm_w"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, Mamba2State(conv=conv_state, ssm=h_last)
+
+
+def rms_norm_gated(x: jax.Array, w: jax.Array, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def ssd_sequential_ref(xh, dt, a, b_t, c_t, h0):
+    """O(S) sequential recurrence oracle for ssd_chunked (tests only)."""
+    b, s, h, dh = xh.shape
+    hst = h0.astype(jnp.float32)
+    ys = []
+    for t in range(s):
+        decay = jnp.exp(dt[:, t].astype(jnp.float32) * a)  # (B, H)
+        upd = jnp.einsum("bh,bhd,bn->bhdn", dt[:, t].astype(jnp.float32),
+                         xh[:, t].astype(jnp.float32),
+                         b_t[:, t].astype(jnp.float32))
+        hst = decay[:, :, None, None] * hst + upd
+        ys.append(jnp.einsum("bhdn,bn->bhd", hst,
+                             c_t[:, t].astype(jnp.float32)))
+    return jnp.stack(ys, axis=1).astype(xh.dtype), hst

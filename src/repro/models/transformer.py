@@ -1,0 +1,558 @@
+"""Unified decoder over the five assigned families (dense / moe / ssm /
+hybrid / audio / vlm backbones).
+
+Layer stacking uses **scan-over-layers**: per-layer parameters are stacked
+along a leading axis and the block body is a single traced function, so the
+HLO contains ONE layer body regardless of depth — this is what keeps the
+512-device dry-run compiles tractable and is standard practice at scale
+(compile time and HLO size O(1) in depth).  Heterogeneous stacks scan over
+*units*:
+
+  dense / ssm            — one scan over all layers
+  moe (moe_every=1)      — one scan over MoE layers (grok-1)
+  moe (moe_every=2)      — scan over (dense, moe) layer pairs (llama4)
+  hybrid (zamba2)        — scan over units of `attn_every` mamba2 layers
+                           followed by the ONE weight-shared attention+MLP
+                           block (shared params broadcast into every unit),
+                           plus a trailing remainder scan
+
+Training applies `jax.checkpoint` (remat) around each unit body so backward
+recomputes activations instead of storing them — the activation-memory
+policy the roofline memory term assumes.
+
+Parameters are plain nested dicts of jnp arrays (no framework dependency);
+`init(cfg, key)` builds them already **stacked** for the scans.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (apply_rope, decode_attention, flash_attention, rms_norm,
+                     swiglu)
+from .moe import moe_ffn
+from .ssm import (Mamba1State, Mamba2State, mamba1_forward, mamba2_forward)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in or shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def _attn_params(key, cfg, dt, stack: Tuple[int, ...] = ()):
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = stack
+    return {
+        "wq": _dense_init(ks[0], s + (d, h * hd), dt, d),
+        "wk": _dense_init(ks[1], s + (d, k * hd), dt, d),
+        "wv": _dense_init(ks[2], s + (d, k * hd), dt, d),
+        "wo": _dense_init(ks[3], s + (h * hd, d), dt, h * hd),
+    }
+
+
+def _mlp_params(key, cfg, dt, stack: Tuple[int, ...] = ()):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s = stack
+    return {
+        "w_gate": _dense_init(ks[0], s + (d, f), dt, d),
+        "w_up": _dense_init(ks[1], s + (d, f), dt, d),
+        "w_down": _dense_init(ks[2], s + (f, d), dt, f),
+    }
+
+
+def _moe_params(key, cfg, dt, stack: Tuple[int, ...] = ()):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    s = stack
+    return {
+        "router": _dense_init(ks[0], s + (d, e), jnp.float32, d),
+        "w_gate": _dense_init(ks[1], s + (e, d, f), dt, d),
+        "w_up": _dense_init(ks[2], s + (e, d, f), dt, d),
+        "w_down": _dense_init(ks[3], s + (e, f, d), dt, f),
+    }
+
+
+def _mamba1_params(key, cfg, dt, stack: Tuple[int, ...] = ()):
+    d, di, n, r, w = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank,
+                      cfg.conv_width)
+    ks = jax.random.split(key, 8)
+    s = stack
+    a_init = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, n + 1, dtype=jnp.float32), s + (di, n)))
+    return {
+        "in_proj": _dense_init(ks[0], s + (d, 2 * di), dt, d),
+        "conv_w": _dense_init(ks[1], s + (w, di), dt, w),
+        "conv_b": jnp.zeros(s + (di,), dt),
+        "x_proj": _dense_init(ks[2], s + (di, r + 2 * n), dt, di),
+        "dt_proj": _dense_init(ks[3], s + (r, di), dt, r),
+        "dt_bias": jnp.full(s + (di,), -4.6, dt),   # softplus⁻¹(0.01)
+        "a_log": a_init,
+        "d_skip": jnp.ones(s + (di,), dt),
+        "out_proj": _dense_init(ks[4], s + (di, d), dt, di),
+    }
+
+
+def _mamba2_params(key, cfg, dt, stack: Tuple[int, ...] = ()):
+    d, di, n, h, w = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.conv_width)
+    ks = jax.random.split(key, 6)
+    s = stack
+    return {
+        "in_proj": _dense_init(ks[0], s + (d, 2 * di + 2 * n + h), dt, d),
+        "conv_w": _dense_init(ks[1], s + (w, di + 2 * n), dt, w),
+        "conv_b": jnp.zeros(s + (di + 2 * n,), dt),
+        "dt_bias": jnp.full(s + (h,), -4.6, dt),
+        "a_log": jnp.zeros(s + (h,), jnp.float32),
+        "d_skip": jnp.ones(s + (h,), dt),
+        "norm_w": jnp.zeros(s + (di,), dt),
+        "out_proj": _dense_init(ks[2], s + (di, d), dt, di),
+    }
+
+
+def init(cfg, key) -> Params:
+    """Build the (stacked) parameter pytree for ``cfg``."""
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    p: Params = {
+        "embed": _dense_init(keys[0], (cfg.vocab, cfg.d_model), dt,
+                             cfg.d_model),
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _dense_init(keys[1], (cfg.d_model, cfg.vocab), dt,
+                                   cfg.d_model)
+    if cfg.frontend != "none":
+        p["frontend_norm"] = jnp.zeros((cfg.d_model,), dt)
+
+    fam = cfg.family
+    if fam in ("dense", "audio", "vlm"):
+        L = cfg.n_layers
+        p["blocks"] = {
+            "ln1": jnp.zeros((L, cfg.d_model), dt),
+            "ln2": jnp.zeros((L, cfg.d_model), dt),
+            "attn": _attn_params(keys[2], cfg, dt, (L,)),
+            "mlp": _mlp_params(keys[3], cfg, dt, (L,)),
+        }
+    elif fam == "moe":
+        if cfg.moe_every == 1:
+            L = cfg.n_layers
+            p["blocks"] = {
+                "ln1": jnp.zeros((L, cfg.d_model), dt),
+                "ln2": jnp.zeros((L, cfg.d_model), dt),
+                "attn": _attn_params(keys[2], cfg, dt, (L,)),
+                "moe": _moe_params(keys[3], cfg, dt, (L,)),
+            }
+        else:
+            assert cfg.moe_every == 2 and cfg.n_layers % 2 == 0
+            U = cfg.n_layers // 2
+            p["blocks"] = {
+                "ln1": jnp.zeros((U, cfg.d_model), dt),
+                "ln2": jnp.zeros((U, cfg.d_model), dt),
+                "ln3": jnp.zeros((U, cfg.d_model), dt),
+                "ln4": jnp.zeros((U, cfg.d_model), dt),
+                "attn1": _attn_params(keys[2], cfg, dt, (U,)),
+                "mlp": _mlp_params(keys[3], cfg, dt, (U,)),
+                "attn2": _attn_params(keys[4], cfg, dt, (U,)),
+                "moe": _moe_params(keys[5], cfg, dt, (U,)),
+            }
+    elif fam == "ssm":
+        L = cfg.n_layers
+        p["blocks"] = {
+            "ln": jnp.zeros((L, cfg.d_model), dt),
+            "mixer": _mamba1_params(keys[2], cfg, dt, (L,)),
+        }
+    elif fam == "hybrid":
+        period = cfg.attn_every
+        U, R = cfg.n_layers // period, cfg.n_layers % period
+        p["blocks"] = {
+            "ln": jnp.zeros((U, period, cfg.d_model), dt),
+            "mixer": _mamba2_params(keys[2], cfg, dt, (U, period)),
+        }
+        if R:
+            p["tail"] = {
+                "ln": jnp.zeros((R, cfg.d_model), dt),
+                "mixer": _mamba2_params(keys[3], cfg, dt, (R,)),
+            }
+        p["shared_attn"] = {
+            "ln1": jnp.zeros((cfg.d_model,), dt),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+            "attn": _attn_params(keys[4], cfg, dt),
+            "mlp": _mlp_params(keys[5], cfg, dt),
+        }
+    else:
+        raise ValueError(fam)
+    return p
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Block bodies (full-sequence path: train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_apply(p, x, positions, cfg, return_kv=False):
+    b, s, d = x.shape
+    pe = x.dtype     # bf16 TP collectives — see layers.swiglu note
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = jnp.einsum("bsd,de->bse", x, p["wq"],
+                   preferred_element_type=pe).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"],
+                   preferred_element_type=pe).reshape(b, s, kv, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"],
+                   preferred_element_type=pe).reshape(b, s, kv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    o = flash_attention(q, k, v, causal=True, window=cfg.window)
+    o = jnp.einsum("bse,ed->bsd", o.reshape(b, s, h * hd), p["wo"],
+                   preferred_element_type=pe)
+    if return_kv:
+        return o, (k, v)
+    return o, None
+
+
+def _dense_block(p, x, positions, cfg, return_kv=False):
+    a, kvs = _attn_apply(p["attn"], rms_norm(x, p["ln1"]), positions, cfg,
+                         return_kv)
+    x = x + a
+    x = x + swiglu(rms_norm(x, p["ln2"]), **p["mlp"])
+    return x, kvs
+
+
+def _moe_block(p, x, positions, cfg, return_kv=False, constrain=None,
+               cap_shard=None):
+    a, kvs = _attn_apply(p["attn"], rms_norm(x, p["ln1"]), positions, cfg,
+                         return_kv)
+    x = x + a
+    b, s, d = x.shape
+    h = rms_norm(x, p["ln2"]).reshape(b * s, d)
+    y, metrics = moe_ffn(h, p["moe"]["router"], p["moe"]["w_gate"],
+                         p["moe"]["w_up"], p["moe"]["w_down"],
+                         top_k=cfg.top_k, capacity_factor=cfg.moe_capacity,
+                         n_groups=cfg.moe_groups, group_shard=constrain,
+                         cap_shard=cap_shard)
+    x = x + y.reshape(b, s, d)
+    return x, kvs, metrics.aux_loss
+
+
+def _shared_attn_block(p, x, positions, cfg, return_kv=False):
+    a, kvs = _attn_apply(p["attn"], rms_norm(x, p["ln1"]), positions, cfg,
+                         return_kv)
+    x = x + a
+    x = x + swiglu(rms_norm(x, p["ln2"]), **p["mlp"])
+    return x, kvs
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(cfg, params: Params, embeds: jax.Array, positions: jax.Array, *,
+            want_cache: bool = False, remat: bool = True,
+            act_shard=None, moe_cap_shard=None):
+    """Run the layer stack on (B, S, d) embeddings.
+
+    Returns (hidden (B, S, d), aux_loss scalar, cache-or-None).  ``cache``
+    (when requested) is the family-specific pytree consumed by
+    ``decode_step``; KV caches come back stacked (L, B, S, K, hd).
+    ``act_shard``: optional fn applied to (B, S, d) activations at unit
+    boundaries (with_sharding_constraint hook).
+    """
+    constrain = act_shard or (lambda t: t)
+    fam = cfg.family
+    aux = jnp.zeros((), jnp.float32)
+
+    def maybe_remat(fn):
+        return jax.checkpoint(fn) if remat else fn
+
+    if fam in ("dense", "audio", "vlm"):
+        def body(x, lp):
+            x, kvs = _dense_block(lp, x, positions, cfg, want_cache)
+            return constrain(x), kvs
+
+        x, kvs = jax.lax.scan(maybe_remat(body), embeds, params["blocks"])
+        cache = _kv_cache_from_scan(kvs, cfg) if want_cache else None
+        return x, aux, cache
+
+    if fam == "moe":
+        if cfg.moe_every == 1:
+            def body(x, lp):
+                x, kvs, a = _moe_block(lp, x, positions, cfg, want_cache,
+                                       constrain, moe_cap_shard)
+                return constrain(x), (kvs, a)
+
+            x, (kvs, auxs) = jax.lax.scan(maybe_remat(body), embeds,
+                                          params["blocks"])
+            cache = _kv_cache_from_scan(kvs, cfg) if want_cache else None
+            return x, aux + auxs.sum(), cache
+
+        def body(x, lp):
+            dense_p = {"ln1": lp["ln1"], "ln2": lp["ln2"],
+                       "attn": lp["attn1"], "mlp": lp["mlp"]}
+            x, kv1 = _dense_block(dense_p, x, positions, cfg, want_cache)
+            x = constrain(x)
+            moe_p = {"ln1": lp["ln3"], "ln2": lp["ln4"],
+                     "attn": lp["attn2"], "moe": lp["moe"]}
+            x, kv2, a = _moe_block(moe_p, x, positions, cfg, want_cache,
+                                   constrain, moe_cap_shard)
+            return constrain(x), ((kv1, kv2), a)
+
+        x, (kvs, auxs) = jax.lax.scan(maybe_remat(body), embeds,
+                                      params["blocks"])
+        cache = None
+        if want_cache:
+            kv1, kv2 = kvs
+            # interleave (U,...) pairs back into (L,...)
+            k = _interleave(kv1[0], kv2[0])
+            v = _interleave(kv1[1], kv2[1])
+            cache = {"k": _clip_window(k, cfg), "v": _clip_window(v, cfg)}
+        return x, aux + auxs.sum(), cache
+
+    if fam == "ssm":
+        def body(x, lp):
+            y, st = mamba1_forward(lp["mixer"], rms_norm(x, lp["ln"]),
+                                   d_inner=cfg.d_inner,
+                                   n_state=cfg.ssm_state,
+                                   dt_rank=cfg.dt_rank)
+            return constrain(x + y), st
+
+        x, states = jax.lax.scan(maybe_remat(body), embeds, params["blocks"])
+        cache = states if want_cache else None   # stacked Mamba1State
+        return x, aux, cache
+
+    if fam == "hybrid":
+        period = cfg.attn_every
+
+        def unit(x, up):
+            def inner(xc, lp):
+                y, st = mamba2_forward(lp["mixer"], rms_norm(xc, lp["ln"]),
+                                       d_inner=cfg.d_inner,
+                                       n_state=cfg.ssm_state,
+                                       n_heads=cfg.ssm_heads,
+                                       head_dim=cfg.ssm_head_dim)
+                return xc + y, st
+
+            x, sts = jax.lax.scan(inner, x, up)
+            x, kvs = _shared_attn_block(params["shared_attn"], x, positions,
+                                        cfg, want_cache)
+            return constrain(x), (sts, kvs)
+
+        x, (m_states, kvs) = jax.lax.scan(maybe_remat(unit), embeds,
+                                          params["blocks"])
+        tail_states = None
+        if "tail" in params:
+            def inner(xc, lp):
+                y, st = mamba2_forward(lp["mixer"], rms_norm(xc, lp["ln"]),
+                                       d_inner=cfg.d_inner,
+                                       n_state=cfg.ssm_state,
+                                       n_heads=cfg.ssm_heads,
+                                       head_dim=cfg.ssm_head_dim)
+                return xc + y, st
+
+            x, tail_states = jax.lax.scan(maybe_remat(inner), x,
+                                          params["tail"])
+        cache = None
+        if want_cache:
+            cache = {
+                "mamba": m_states,                 # (U, period, ...) stacked
+                "tail": tail_states,               # (R, ...) or None
+                "k": _clip_window(kvs[0], cfg),    # (U, B, S, K, hd)
+                "v": _clip_window(kvs[1], cfg),
+            }
+        return x, aux, cache
+
+    raise ValueError(fam)
+
+
+def _interleave(a, b):
+    """(U, ...) + (U, ...) → (2U, ...) alternating."""
+    return jnp.stack([a, b], axis=1).reshape((-1,) + a.shape[1:])
+
+
+def _clip_window(kv, cfg):
+    """Keep only the last `window` positions for SWA caches (ring layout:
+    slot t % window holds token t)."""
+    if cfg.window <= 0 or kv.shape[2] <= cfg.window:
+        return kv
+    s = kv.shape[2]
+    # last `window` tokens, placed at their ring slots
+    last = kv[:, :, s - cfg.window:]
+    start = s - cfg.window
+    slots = (start + jnp.arange(cfg.window)) % cfg.window
+    out = jnp.zeros(kv.shape[:2] + (cfg.window,) + kv.shape[3:], kv.dtype)
+    return out.at[:, :, slots].set(last)
+
+
+def _kv_cache_from_scan(kvs, cfg):
+    if kvs is None:
+        return None
+    k, v = kvs
+    return {"k": _clip_window(k, cfg), "v": _clip_window(v, cfg)}
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode
+# ---------------------------------------------------------------------------
+
+def _attn_decode(p, x, cache_k, cache_v, pos, cfg):
+    """x: (B, 1, d); cache_k/v: (B, Sc, K, hd). Returns (out, k_new, v_new)."""
+    b, _, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, 1, h, hd)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, 1, kv, hd)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, 1, kv, hd)
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    q = apply_rope(q, posb, cfg.rope_theta)
+    k = apply_rope(k, posb, cfg.rope_theta)
+    sc = cache_k.shape[1]
+    slot = pos % sc if cfg.window > 0 else pos
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+    o = decode_attention(q, cache_k, cache_v, pos,
+                         window=cfg.window if cfg.window > 0 else 0)
+    o = jnp.einsum("bse,ed->bsd", o.reshape(b, 1, h * hd), p["wo"])
+    return o, cache_k, cache_v
+
+
+def decode_step(cfg, params: Params, embeds: jax.Array, cache,
+                pos: jax.Array, *, act_shard=None, moe_cap_shard=None):
+    """One-token decode. embeds: (B, 1, d); ``cache`` from ``forward`` (or
+    ``serve.kv_cache.init_cache``). Returns (hidden (B, 1, d), new_cache)."""
+    constrain = act_shard or (lambda t: t)
+    fam = cfg.family
+
+    if fam in ("dense", "audio", "vlm"):
+        def body(x, lc):
+            lp, ck, cv = lc
+            h = rms_norm(x, lp["ln1"])
+            a, ck, cv = _attn_decode(lp["attn"], h, ck, cv, pos, cfg)
+            x = x + a
+            x = x + swiglu(rms_norm(x, lp["ln2"]), **lp["mlp"])
+            return constrain(x), (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(body, embeds,
+                                   (params["blocks"], cache["k"], cache["v"]))
+        return x, {"k": ks, "v": vs}
+
+    if fam == "moe":
+        if cfg.moe_every == 1:
+            def body(x, lc):
+                lp, ck, cv = lc
+                h = rms_norm(x, lp["ln1"])
+                a, ck, cv = _attn_decode(lp["attn"], h, ck, cv, pos, cfg)
+                x = x + a
+                b, s, d = x.shape
+                hh = rms_norm(x, lp["ln2"]).reshape(b * s, d)
+                y, _ = moe_ffn(hh, lp["moe"]["router"], lp["moe"]["w_gate"],
+                               lp["moe"]["w_up"], lp["moe"]["w_down"],
+                               top_k=cfg.top_k, capacity_factor=None,
+                               n_groups=cfg.moe_groups,
+                               group_shard=constrain,
+                               cap_shard=moe_cap_shard)
+                return constrain(x + y.reshape(b, s, d)), (ck, cv)
+
+            x, (ks, vs) = jax.lax.scan(
+                body, embeds, (params["blocks"], cache["k"], cache["v"]))
+            return x, {"k": ks, "v": vs}
+
+        U = cfg.n_layers // 2
+        ck = cache["k"].reshape((U, 2) + cache["k"].shape[1:])
+        cv = cache["v"].reshape((U, 2) + cache["v"].shape[1:])
+
+        def body(x, lc):
+            lp, ckp, cvp = lc
+            h = rms_norm(x, lp["ln1"])
+            a, ck1, cv1 = _attn_decode(lp["attn1"], h, ckp[0], cvp[0], pos,
+                                       cfg)
+            x = x + a
+            x = x + swiglu(rms_norm(x, lp["ln2"]), **lp["mlp"])
+            x = constrain(x)
+            h = rms_norm(x, lp["ln3"])
+            a, ck2, cv2 = _attn_decode(lp["attn2"], h, ckp[1], cvp[1], pos,
+                                       cfg)
+            x = x + a
+            b, s, d = x.shape
+            hh = rms_norm(x, lp["ln4"]).reshape(b * s, d)
+            y, _ = moe_ffn(hh, lp["moe"]["router"], lp["moe"]["w_gate"],
+                           lp["moe"]["w_up"], lp["moe"]["w_down"],
+                           top_k=cfg.top_k, capacity_factor=None,
+                           n_groups=cfg.moe_groups, group_shard=constrain,
+                           cap_shard=moe_cap_shard)
+            x = constrain(x + y.reshape(b, s, d))
+            return x, (jnp.stack([ck1, ck2]), jnp.stack([cv1, cv2]))
+
+        x, (ks, vs) = jax.lax.scan(body, embeds, (params["blocks"], ck, cv))
+        return x, {"k": ks.reshape(cache["k"].shape),
+                   "v": vs.reshape(cache["v"].shape)}
+
+    if fam == "ssm":
+        def body(x, lc):
+            lp, st = lc
+            y, st2 = mamba1_forward(lp["mixer"], rms_norm(x, lp["ln"]),
+                                    d_inner=cfg.d_inner,
+                                    n_state=cfg.ssm_state,
+                                    dt_rank=cfg.dt_rank, state=st, chunk=1)
+            return constrain(x + y), st2
+
+        x, states = jax.lax.scan(body, embeds, (params["blocks"], cache))
+        return x, states
+
+    if fam == "hybrid":
+        def unit(x, lc):
+            up, sts, ck, cv = lc
+
+            def inner(xc, ic):
+                lp, st = ic
+                y, st2 = mamba2_forward(lp["mixer"], rms_norm(xc, lp["ln"]),
+                                        d_inner=cfg.d_inner,
+                                        n_state=cfg.ssm_state,
+                                        n_heads=cfg.ssm_heads,
+                                        head_dim=cfg.ssm_head_dim,
+                                        state=st, chunk=1)
+                return xc + y, st2
+
+            x, sts2 = jax.lax.scan(inner, x, (up, sts))
+            h = rms_norm(x, params["shared_attn"]["ln1"])
+            a, ck, cv = _attn_decode(params["shared_attn"]["attn"], h, ck,
+                                     cv, pos, cfg)
+            x = x + a
+            x = x + swiglu(rms_norm(x, params["shared_attn"]["ln2"]),
+                           **params["shared_attn"]["mlp"])
+            return constrain(x), (sts2, ck, cv)
+
+        x, (m_states, ks, vs) = jax.lax.scan(
+            unit, embeds,
+            (params["blocks"], cache["mamba"], cache["k"], cache["v"]))
+        tail_states = cache.get("tail")
+        if "tail" in params:
+            def inner(xc, ic):
+                lp, st = ic
+                y, st2 = mamba2_forward(lp["mixer"], rms_norm(xc, lp["ln"]),
+                                        d_inner=cfg.d_inner,
+                                        n_state=cfg.ssm_state,
+                                        n_heads=cfg.ssm_heads,
+                                        head_dim=cfg.ssm_head_dim,
+                                        state=st, chunk=1)
+                return xc + y, st2
+
+            x, tail_states = jax.lax.scan(inner, x,
+                                          (params["tail"], cache["tail"]))
+        return x, {"mamba": m_states, "tail": tail_states, "k": ks, "v": vs}
+
+    raise ValueError(fam)

@@ -1,0 +1,50 @@
+"""Straggler mitigation for the spatial query service.
+
+Queries are idempotent reads over an immutable index, so the cheap and
+correct mitigation is **deadline re-issue**: dispatch a query micro-batch
+to its home shard; if the deadline lapses, re-issue to a hot-spare replica
+and take whichever answer lands first.  (Training-side straggler handling
+is different — checkpoint/restart + synchronous steps — and lives in
+fault_tolerance.py.)
+
+The executor here is host-side and backend-agnostic: ``shards`` are
+callables (in production: per-slice dispatch handles; in tests: fakes with
+injected delays).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+
+class ShardPool:
+    def __init__(self, shards: Sequence[Callable[[Any], Any]],
+                 spares: Sequence[Callable[[Any], Any]] = (),
+                 deadline_s: float = 1.0):
+        self.shards = list(shards)
+        self.spares = list(spares)
+        self.deadline = deadline_s
+        self.reissues = 0
+        self._pool = cf.ThreadPoolExecutor(
+            max_workers=len(self.shards) + max(len(self.spares), 1))
+
+    def query(self, shard_id: int, payload) -> Any:
+        primary = self._pool.submit(self.shards[shard_id], payload)
+        try:
+            return primary.result(timeout=self.deadline)
+        except cf.TimeoutError:
+            pass
+        self.reissues += 1
+        spare = self.spares[shard_id % len(self.spares)] if self.spares \
+            else self.shards[(shard_id + 1) % len(self.shards)]
+        backup = self._pool.submit(spare, payload)
+        done, _ = cf.wait([primary, backup],
+                          return_when=cf.FIRST_COMPLETED)
+        return next(iter(done)).result()
+
+    def query_many(self, payloads: Sequence[Tuple[int, Any]]) -> List[Any]:
+        return [self.query(sid, p) for sid, p in payloads]
+
+    def shutdown(self):
+        self._pool.shutdown(wait=False, cancel_futures=True)

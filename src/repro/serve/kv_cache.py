@@ -1,0 +1,98 @@
+"""Cache construction and shape specs for serving.
+
+``init_cache``/``cache_specs`` build the family-specific cache pytree that
+``transformer.decode_step`` consumes — KV ring buffers for attention
+(bounded at ``window`` for SWA archs), Mamba conv+SSM states for ssm/hybrid.
+``cache_specs`` returns ShapeDtypeStructs for the dry-run (no allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import Mamba1State, Mamba2State
+
+
+def cache_seq_len(cfg, seq_len: int) -> int:
+    """Physical cache length: SWA archs keep a window-sized ring buffer."""
+    if cfg.window > 0:
+        return min(seq_len, cfg.window)
+    return seq_len
+
+
+def _kv_shape(cfg, n: int, batch: int, sc: int):
+    return (n, batch, sc, cfg.n_kv, cfg.hd)
+
+
+def cache_specs(cfg, batch: int, seq_len: int,
+                dtype=None) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree mirroring ``init_cache``."""
+    make = lambda shp, dt: jax.ShapeDtypeStruct(shp, dt)
+    return jax.tree_util.tree_map(
+        lambda x: make(x.shape, x.dtype),
+        init_cache(cfg, batch, seq_len, dtype=dtype, _spec_only=True))
+
+
+def pad_cache(cfg, cache, max_len: int):
+    """Grow a prefill-built cache so decode can append up to ``max_len``
+    total tokens.  SWA ring buffers are already bounded at ``window`` and
+    pass through; full-attention KV caches zero-pad the seq axis."""
+    target = cache_seq_len(cfg, max_len)
+
+    def grow(kv):
+        cur = kv.shape[2]
+        if cur >= target:
+            return kv
+        pad = [(0, 0)] * kv.ndim
+        pad[2] = (0, target - cur)
+        return jnp.pad(kv, pad)
+
+    if isinstance(cache, dict) and "k" in cache:
+        cache = dict(cache)
+        cache["k"] = grow(cache["k"])
+        cache["v"] = grow(cache["v"])
+        return cache
+    return cache   # pure-SSM caches are O(1) in sequence
+
+
+def init_cache(cfg, batch: int, seq_len: int, dtype=None,
+               _spec_only: bool = False):
+    """Zero-initialized cache sized for decoding up to ``seq_len`` tokens."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    sc = cache_seq_len(cfg, seq_len)
+    if _spec_only:
+        zeros = lambda shp, d=dt: jax.ShapeDtypeStruct(shp, d)
+    else:
+        zeros = lambda shp, d=dt: jnp.zeros(shp, d)
+    fam = cfg.family
+    if fam in ("dense", "audio", "vlm", "moe"):
+        L = cfg.n_layers
+        return {"k": zeros(_kv_shape(cfg, L, batch, sc)),
+                "v": zeros(_kv_shape(cfg, L, batch, sc))}
+    if fam == "ssm":
+        L = cfg.n_layers
+        return Mamba1State(
+            conv=zeros((L, batch, cfg.conv_width - 1, cfg.d_inner)),
+            ssm=zeros((L, batch, cfg.d_inner, cfg.ssm_state), jnp.float32))
+    if fam == "hybrid":
+        period = cfg.attn_every
+        U, R = cfg.n_layers // period, cfg.n_layers % period
+        di_c = cfg.d_inner + 2 * cfg.ssm_state
+        cache = {
+            "mamba": Mamba2State(
+                conv=zeros((U, period, batch, cfg.conv_width - 1, di_c)),
+                ssm=zeros((U, period, batch, cfg.ssm_heads,
+                           cfg.ssm_head_dim, cfg.ssm_state), jnp.float32)),
+            "k": zeros(_kv_shape(cfg, U, batch, sc)),
+            "v": zeros(_kv_shape(cfg, U, batch, sc)),
+            "tail": None,
+        }
+        if R:
+            cache["tail"] = Mamba2State(
+                conv=zeros((R, batch, cfg.conv_width - 1, di_c)),
+                ssm=zeros((R, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                           cfg.ssm_state), jnp.float32))
+        return cache
+    raise ValueError(fam)

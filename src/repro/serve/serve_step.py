@@ -1,0 +1,62 @@
+"""Jitted serving steps: prefill and single-token decode.
+
+``make_prefill_step`` / ``make_decode_step`` are what the dry-run lowers
+for the ``prefill_*`` and ``decode_*`` / ``long_*`` shape cells, and what
+launch/serve.py drives for real batched generation (greedy or temperature
+sampling on-device).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+
+def make_prefill_step(model: Model, *, act_shard=None,
+                      max_len: Optional[int] = None):
+    def prefill(params, batch):
+        cache, last_logits, pos = model.prefill(params, batch,
+                                                act_shard=act_shard,
+                                                max_len=max_len)
+        next_tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+        return cache, next_tok, jnp.int32(pos)
+
+    return jax.jit(prefill)
+
+
+def make_decode_step(model: Model, *, act_shard=None, temperature: float = 0.0,
+                     donate_cache: bool = True):
+    def decode(params, cache, token, pos, key):
+        logits, cache = model.decode(params, cache, token, pos,
+                                     act_shard=act_shard)
+        if temperature > 0:
+            nxt = jax.random.categorical(key, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return cache, nxt.astype(jnp.int32), logits
+
+    return jax.jit(decode, donate_argnums=(1,) if donate_cache else ())
+
+
+def generate(model: Model, params, batch, n_new: int, *, key=None,
+             temperature: float = 0.0, act_shard=None):
+    """Host-looped generation (examples / tests; production drives the two
+    jitted steps directly)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    s_total = batch["tokens"].shape[1] + (
+        model.cfg.frontend_tokens if model.cfg.frontend != "none" else 0)
+    prefill = make_prefill_step(model, act_shard=act_shard,
+                                max_len=s_total + n_new)
+    decode = make_decode_step(model, act_shard=act_shard,
+                              temperature=temperature)
+    cache, tok, pos = prefill(params, batch)
+    toks = [tok]
+    for i in range(n_new - 1):
+        key, sub = jax.random.split(key)
+        cache, tok, _ = decode(params, cache, tok, pos + i, sub)
+        toks.append(tok)
+    return jnp.stack(toks, axis=1)          # (B, n_new)

@@ -1,0 +1,163 @@
+"""Optimizers from scratch (no optax dependency): AdamW and Adafactor,
+global-norm clipping, warmup+cosine schedule.
+
+State is a pytree shaped like (or factored from) params, so the same
+sharding rules apply — optimizer state shards with its parameter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any      # row second-moment (or full moment for rank<2 leaves)
+    vc: Any      # col second-moment (None-like zeros for rank<2)
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(oc: OptConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    prog = jnp.clip((s - oc.warmup_steps) /
+                    jnp.maximum(oc.total_steps - oc.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = oc.min_lr_frac + (1 - oc.min_lr_frac) * cos
+    return oc.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype), tree), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params) -> AdamWState:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree_util.tree_map(z, params),
+                      nu=jax.tree_util.tree_map(z, params))
+
+
+def adamw_update(oc: OptConfig, grads, state: AdamWState, params):
+    grads, gn = clip_by_global_norm(grads, oc.clip_norm)
+    step = state.step + 1
+    lr = schedule(oc, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - oc.b1 ** t
+    bc2 = 1 - oc.b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = oc.b1 * m + (1 - oc.b1) * g
+        v = oc.b2 * v + (1 - oc.b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + oc.eps)
+        if p.ndim >= 2:                       # decay matrices only
+            delta = delta + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+    new_p = jax.tree_util.tree_map(lambda o: o[0], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_v), \
+        {"grad_norm": gn, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (memory-light option for the biggest dry-run cells)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params) -> AdafactorState:
+    def vr(p):
+        if p.ndim >= 2:
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):
+        if p.ndim >= 2:
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((), jnp.float32)
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree_util.tree_map(vr, params),
+                          vc=jax.tree_util.tree_map(vc, params))
+
+
+def adafactor_update(oc: OptConfig, grads, state: AdafactorState, params):
+    grads, gn = clip_by_global_norm(grads, oc.clip_norm)
+    step = state.step + 1
+    lr = schedule(oc, step)
+    beta2 = 1.0 - (step.astype(jnp.float32) ** -0.8)
+
+    def upd(g, vr, vc, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if p.ndim >= 2:
+            vr = beta2 * vr + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * vc + (1 - beta2) * g2.mean(axis=-2)
+            r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)
+            prec = jnp.einsum("...r,...c->...rc", r, 1.0 / vc)
+            delta = g * jax.lax.rsqrt(jnp.maximum(prec, 1e-30))
+            delta = delta + oc.weight_decay * p.astype(jnp.float32)
+        else:
+            vr = beta2 * vr + (1 - beta2) * g2
+            vc = vc
+            delta = g * jax.lax.rsqrt(jnp.maximum(vr, 1e-30))
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), vr, vc
+
+    out = jax.tree_util.tree_map(upd, grads, state.vr, state.vc, params)
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), AdafactorState(step=step, vr=pick(1), vc=pick(2)), \
+        {"grad_norm": gn, "lr": lr}
+
+
+def init_opt(oc: OptConfig, params):
+    return adamw_init(params) if oc.kind == "adamw" else \
+        adafactor_init(params)
+
+
+def update(oc: OptConfig, grads, state, params):
+    if oc.kind == "adamw":
+        return adamw_update(oc, grads, state, params)
+    return adafactor_update(oc, grads, state, params)

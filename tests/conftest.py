@@ -1,0 +1,28 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def brute_select(rects: np.ndarray, q) -> np.ndarray:
+    m = ((rects[:, 0] <= q[2]) & (rects[:, 2] >= q[0]) &
+         (rects[:, 1] <= q[3]) & (rects[:, 3] >= q[1]))
+    return np.sort(np.nonzero(m)[0])
+
+
+def brute_join(ra: np.ndarray, rb: np.ndarray):
+    m = ((ra[:, None, 0] <= rb[None, :, 2]) &
+         (ra[:, None, 2] >= rb[None, :, 0]) &
+         (ra[:, None, 1] <= rb[None, :, 3]) &
+         (ra[:, None, 3] >= rb[None, :, 1]))
+    return set(zip(*np.nonzero(m)))
+
+
+def uniform_rects(rng, n, eps=0.0, dtype=np.float32):
+    pts = rng.random((n, 2)).astype(dtype)
+    if eps:
+        return np.concatenate([pts - eps, pts + eps], axis=1).astype(dtype)
+    return np.concatenate([pts, pts], axis=1).astype(dtype)

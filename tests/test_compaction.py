@@ -1,0 +1,39 @@
+"""Compaction (the compress-store analogue) ≡ numpy boolean-mask oracle."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compaction import compact_1d, compact_rows
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 300), cap=st.integers(1, 64),
+       seed=st.integers(0, 2**31 - 1), p=st.floats(0.0, 1.0))
+def test_compact_1d(n, cap, seed, p):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 1000, n).astype(np.int32)
+    mask = rng.random(n) < p
+    out, k, ovf = compact_1d(jnp.asarray(vals), jnp.asarray(mask), cap)
+    exp = vals[mask]
+    assert int(k) == len(exp)            # count is the TRUE count
+    assert bool(ovf) == (len(exp) > cap)
+    keep = min(len(exp), cap)
+    np.testing.assert_array_equal(np.asarray(out)[:keep], exp[:keep])
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=st.integers(1, 8), n=st.integers(1, 128), cap=st.integers(1, 32),
+       seed=st.integers(0, 2**31 - 1))
+def test_compact_rows(b, n, cap, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 1000, (b, n)).astype(np.int32)
+    mask = rng.random((b, n)) < 0.4
+    out, counts, ovf = compact_rows(jnp.asarray(vals), jnp.asarray(mask),
+                                    cap)
+    for i in range(b):
+        exp = vals[i][mask[i]]
+        keep = min(len(exp), cap)
+        assert bool(ovf[i]) == (len(exp) > cap)
+        np.testing.assert_array_equal(np.asarray(out)[i, :keep], exp[:keep])
+        # padding slots are -1
+        assert (np.asarray(out)[i, keep:] == -1).all()

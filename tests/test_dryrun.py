@@ -1,0 +1,93 @@
+"""Dry-run integration: the production-mesh lower+compile path, run in a
+subprocess so the 512 fake devices never leak into this test session."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, timeout=1500):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_production_mesh_cell_compiles():
+    """One full cell on the real (16,16) 256-fake-device mesh."""
+    code = """
+import json
+from repro.launch import dryrun
+res = dryrun.run_cell("tinyllama-1.1b", "decode_32k", multi_pod=False,
+                      verbose=False)
+assert "error" not in res, res
+assert res["flops_per_device"] > 0
+assert res["collective_bytes_per_device"] > 0
+print(json.dumps({"ok": True, "dominant": res["dominant"]}))
+"""
+    r = _run(code)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert '"ok": true' in r.stdout
+
+
+@pytest.mark.slow
+def test_multi_pod_mesh_cell_compiles():
+    """The multi-pod (2,16,16) = 512-chip mesh must shard the pod axis."""
+    code = """
+import json
+from repro.launch import dryrun
+res = dryrun.run_cell("h2o-danube-1.8b", "train_4k", multi_pod=True,
+                      verbose=False)
+assert "error" not in res, res
+assert res["chips"] == 512
+print(json.dumps({"ok": True}))
+"""
+    r = _run(code)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert '"ok": true' in r.stdout
+
+
+def test_input_specs_cover_all_cells():
+    """input_specs must build for every runnable (arch × shape) cell
+    without touching devices."""
+    code = """
+from repro.configs import registry
+from repro.configs.base import SHAPES, cell_runnable
+from repro.launch import dryrun
+n = 0
+for arch, cfg in registry.all_archs().items():
+    for shp in SHAPES:
+        ok, why = cell_runnable(cfg, shp)
+        if not ok:
+            assert shp.name == "long_500k", (arch, shp.name, why)
+            continue
+        specs = dryrun.input_specs(arch, shp.name)
+        assert specs, (arch, shp.name)
+        n += 1
+print("cells", n)
+"""
+    r = _run(code, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]
+    # 10 archs × 4 shapes − 6 long_500k skips = 34 runnable cells
+    assert "cells 34" in r.stdout
+
+
+def test_mesh_factory_shapes():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.launch.mesh import make_production_mesh
+m = make_production_mesh()
+assert dict(m.shape) == {"data": 16, "model": 16}
+m2 = make_production_mesh(multi_pod=True)
+assert dict(m2.shape) == {"pod": 2, "data": 16, "model": 16}
+print("ok")
+"""
+    r = _run(code, timeout=300)
+    assert r.returncode == 0, r.stderr[-2000:]

@@ -1,0 +1,85 @@
+"""Scan-aware HLO cost model: ≡ XLA cost_analysis on scan-free graphs;
+exact trip-count weighting on scanned graphs; collective byte formulas."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import hlo_cost
+
+
+def test_scan_free_matches_xla():
+    def g(w, x):
+        return jnp.tanh(x @ w).sum()
+
+    w = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 128), jnp.float32)
+    c = jax.jit(jax.grad(g)).lower(w, x).compile()
+    rep = hlo_cost.analyse_text(c.as_text())
+    ca = c.cost_analysis()
+    assert abs(rep.flops - ca["flops"]) / ca["flops"] < 0.02
+    assert abs(rep.bytes - ca["bytes accessed"]) / ca["bytes accessed"] \
+        < 0.02
+
+
+def test_scan_trip_count_weighting():
+    L = 7
+
+    def f(w, x):
+        def body(h, wi):
+            return jnp.tanh(h @ wi), ()
+        h, _ = jax.lax.scan(body, x, w)
+        return h.sum()
+
+    w = jax.ShapeDtypeStruct((L, 32, 32), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+    c = jax.jit(f).lower(w, x).compile()
+    rep = hlo_cost.analyse_text(c.as_text())
+    assert L in rep.while_trip_counts.values()
+    # dot flops = L × 2·8·32·32 (± elementwise noise)
+    dot = L * 2 * 8 * 32 * 32
+    assert dot <= rep.flops <= dot * 1.2
+
+
+def test_nested_scan_multiplies():
+    def f(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return jnp.tanh(ci @ ci), ()
+            ci, _ = jax.lax.scan(inner, c, None, length=4)
+            return ci, ()
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return c.sum()
+
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    c = jax.jit(f).lower(x).compile()
+    rep = hlo_cost.analyse_text(c.as_text())
+    dot = 5 * 4 * 2 * 16 * 16 * 16
+    assert dot <= rep.flops <= dot * 1.3
+
+
+def test_collective_bytes_formulas():
+    txt = """
+HloModule m
+
+ENTRY %main (p: f32[64]) -> f32[64] {
+  %p = f32[64]{0} parameter(0)
+  %ar = f32[64]{0} all-reduce(%p), replica_groups=[2,4]<=[8], to_apply=%add
+  ROOT %cp = f32[64]{0} collective-permute(%ar), source_target_pairs={{0,1}}
+}
+"""
+    rep = hlo_cost.analyse_text(txt)
+    # all-reduce: 2·(n-1)/n·256 = 384; permute: 256
+    assert rep.bytes_by_collective["all-reduce"] == pytest.approx(384)
+    assert rep.bytes_by_collective["collective-permute"] == 256
+
+
+def test_dot_flops_contracting_dims():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 16, 32), jnp.float32)
+    c = jax.jit(f).lower(a, b).compile()
+    rep = hlo_cost.analyse_text(c.as_text())
+    assert rep.flops == pytest.approx(2 * 4 * 8 * 16 * 32, rel=0.01)

@@ -1,0 +1,59 @@
+"""Distributed spatial service: sharded select ≡ single-tree select;
+straggler deadline re-issue."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import rtree, str_pack
+from repro.distributed.spatial_shard import SpatialShards
+from repro.runtime.straggler import ShardPool
+
+from conftest import brute_select, uniform_rects
+
+
+def test_sharded_select_matches_brute():
+    rng = np.random.default_rng(20)
+    rects = uniform_rects(rng, 30_000, eps=0.004)
+    shards = SpatialShards.build(rects, n_partitions=6, fanout=32)
+    assert len(shards.partitions) >= 4
+    lo = rng.random((12, 2)).astype(np.float32) * 0.9
+    qs = np.concatenate([lo, lo + 0.07], axis=1).astype(np.float32)
+    res = shards.range_select(qs)
+    for i, q in enumerate(qs):
+        np.testing.assert_array_equal(res[i], brute_select(rects, q))
+
+
+def test_partition_coverage():
+    rng = np.random.default_rng(21)
+    rects = uniform_rects(rng, 5000)
+    shards = SpatialShards.build(rects, n_partitions=4)
+    total = np.concatenate([p.ids for p in shards.partitions])
+    assert len(total) == 5000 and len(set(total.tolist())) == 5000
+
+
+def test_straggler_reissue():
+    calls = {"slow": 0, "spare": 0}
+
+    def slow_shard(payload):
+        calls["slow"] += 1
+        time.sleep(1.0)
+        return "slow-answer"
+
+    def spare(payload):
+        calls["spare"] += 1
+        return "spare-answer"
+
+    pool = ShardPool([slow_shard], spares=[spare], deadline_s=0.05)
+    out = pool.query(0, "q")
+    assert out in ("spare-answer", "slow-answer")
+    assert pool.reissues == 1
+    assert calls["spare"] == 1
+    pool.shutdown()
+
+
+def test_no_reissue_when_fast():
+    pool = ShardPool([lambda p: p * 2], deadline_s=2.0)
+    assert pool.query(0, 21) == 42
+    assert pool.reissues == 0
+    pool.shutdown()

@@ -1,0 +1,52 @@
+"""STR bulk-load structural invariants (property-based)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rtree, str_pack
+
+from conftest import uniform_rects
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 3000),
+       fanout=st.sampled_from([4, 16, 64]),
+       seed=st.integers(0, 2**31 - 1),
+       sort_key=st.sampled_from([None, "lx", "ly", "hx", "hy"]))
+def test_structure_invariants(n, fanout, seed, sort_key):
+    rng = np.random.default_rng(seed)
+    rects = uniform_rects(rng, n, eps=0.01)
+    t = rtree.build_rtree(rects, fanout=fanout, sort_key=sort_key)
+    rtree.validate_structure(t)
+
+
+def test_duplicate_points_all_kept():
+    rects = np.zeros((500, 4), np.float32)     # all identical
+    t = rtree.build_rtree(rects, fanout=16)
+    rtree.validate_structure(t)
+
+
+def test_single_rect():
+    t = rtree.build_rtree(np.array([[0.1, 0.2, 0.3, 0.4]], np.float32),
+                          fanout=8)
+    assert t.height == 1
+    rtree.validate_structure(t)
+
+
+@pytest.mark.parametrize("fanout", [2, 64, 128])
+def test_height_matches_fanout(fanout):
+    rng = np.random.default_rng(1)
+    rects = uniform_rects(rng, 1000)
+    t = rtree.build_rtree(rects, fanout=fanout)
+    import math
+    expect = max(1, math.ceil(math.log(1000, fanout)))
+    # STR tiling ceils per level, so height may exceed the ideal by one
+    assert expect <= t.height <= expect + 1
+
+
+def test_int32_keys():
+    rng = np.random.default_rng(2)
+    rects = (uniform_rects(rng, 800, eps=0.01) * 1e6).astype(np.int32)
+    rects[:, 2:] = np.maximum(rects[:, 2:], rects[:, :2])
+    t = rtree.build_rtree(rects, fanout=32)
+    rtree.validate_structure(t)
