@@ -1,0 +1,60 @@
+"""kNN operator sweep — the select/join benchmark grid extended to the
+distance operator: scalar best-first (branch-and-bound heap) vs batched
+vectorized BFS per physical layout (D0/D1/D2) vs the kernel-routed path
+(V-O1+O2), for k ∈ {1, 8, 64}, with latency + algorithmic counters."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import knn_scalar, knn_vector, rtree
+
+from .common import Rows, point_rects, time_fn, uniform_points
+
+
+def run(n: int = 1_000_000, fanout: int = 64, batch: int = 64,
+        ks=(1, 8, 64), scalar_queries: int = 4, seed: int = 0):
+    rows = Rows("knn")
+    rects = point_rects(n, seed)
+    tree = rtree.build_rtree(rects, fanout=fanout)
+    qpts = uniform_points(batch, seed + 1)
+
+    scalar_fn = knn_scalar.make_knn_best_first(tree)   # hoist the f64 copy
+    for k in ks:
+        # --- scalar best-first (host heap) ---
+        t0 = time.perf_counter()
+        ctr_sum = None
+        for q in qpts[:scalar_queries]:
+            _, _, ctr = scalar_fn(q, k)
+            ctr_sum = ctr if ctr_sum is None else ctr_sum + ctr
+        dt = (time.perf_counter() - t0) / scalar_queries
+        rows.add(k=k, variant="S-BestFirst", us_per_query=dt * 1e6,
+                 **{key: v // scalar_queries
+                    for key, v in ctr_sum.asdict().items()})
+
+        # --- V-O1 batched BFS per layout ---
+        for layout in ("d1", "d2", "d0"):
+            fn = knn_vector.make_knn_bfs(tree, k=k, layout=layout)
+            dt = time_fn(fn, jnp.asarray(qpts)) / batch
+            _, _, ctr = fn(jnp.asarray(qpts))
+            rows.add(k=k, variant=f"V({layout.upper()})-O1",
+                     us_per_query=dt * 1e6, **_per_query(ctr, batch))
+
+        # --- V-O1+O2: kernel-routed distance evaluation (xla backend on
+        # CPU so wall-clock measures the algorithm, pallas on TPU) ---
+        fn = knn_vector.make_knn_bfs(tree, k=k, backend="xla")
+        dt = time_fn(fn, jnp.asarray(qpts)) / batch
+        _, _, ctr = fn(jnp.asarray(qpts))
+        rows.add(k=k, variant="V(D1)-O1+O2", us_per_query=dt * 1e6,
+                 **_per_query(ctr, batch))
+    return rows
+
+
+def _per_query(ctr, batch: int):
+    return {key: v // batch for key, v in ctr.asdict().items()}
+
+
+if __name__ == "__main__":
+    run()

@@ -19,7 +19,7 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true",
                     help="tiny sizes (CI smoke)")
     ap.add_argument("--only", default=None,
-                    help="comma list: select,sweeps,join,service,lm")
+                    help="comma list: select,sweeps,join,knn,service,lm")
     ap.add_argument("--out-dir", default="runs/bench")
     args = ap.parse_args(argv)
 
@@ -60,6 +60,11 @@ def main(argv=None):
         all_rows.append(bench_join.run_fanout(
             n=n_join, fanouts=(16, 64, 256) if not args.full else
             (16, 32, 64, 128, 256, 512)))
+    if want("knn"):
+        from . import bench_knn
+        print(f"[knn sweep]  n={n_sel}")
+        all_rows.append(bench_knn.run(n=n_sel,
+                                      ks=(1, 8) if args.quick else (1, 8, 64)))
     if want("service"):
         from . import bench_service
         print(f"[spatial service]  n={n_service}")

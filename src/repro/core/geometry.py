@@ -70,6 +70,127 @@ def area(lx, ly, hx, hy):
     return jnp.maximum(hx - lx, 0) * jnp.maximum(hy - ly, 0)
 
 
+# ---------------------------------------------------------------------------
+# Point-to-rect distance primitives (kNN subsystem)
+#
+# All distances are SQUARED Euclidean: the k-NN ordering is invariant under
+# sqrt, and dropping it keeps the per-entry work at the paper's
+# compare/fma-only instruction mix (no transcendentals on the VPU hot path).
+# Axis deltas are clamped to _DELTA_CLAMP before squaring so padded (empty)
+# MBRs produce a large-but-finite distance instead of f32 inf — same
+# finite-padding policy as pad_values above.
+# ---------------------------------------------------------------------------
+
+_DELTA_CLAMP = np.float32(1.0e18)      # clamp²=1e36 < f32 max, still "huge"
+DIST_PAD = np.float32(3.0e38)          # distance slot for invalid lanes
+# d < this ⇔ lane held a real entry.  Must sit strictly between the largest
+# computable real distance (2·_DELTA_CLAMP² = 2e36) and DIST_PAD: invalid
+# lanes are always *explicitly* set to DIST_PAD by the operators, so the
+# threshold only needs to separate those from genuine (possibly clamped)
+# distances.
+DIST_VALID_MAX = np.float32(1.0e37)
+
+
+def _axis_gap(p, lo, hi):
+    """Per-axis outside-gap max(lo-p, p-hi, 0), clamped finite."""
+    return jnp.minimum(jnp.maximum(jnp.maximum(lo - p, p - hi), 0),
+                       _DELTA_CLAMP)
+
+
+def mindist(px, py, lx, ly, hx, hy):
+    """Squared MINDIST(point, rect) (Roussopoulos & Kelley): 0 inside the
+    rect, else squared distance to the nearest face/corner.  Broadcasts over
+    array args; 2 gap stages + 2 fma — the D1-form SIMD sequence."""
+    dx = _axis_gap(px, lx, hx)
+    dy = _axis_gap(py, ly, hy)
+    return dx * dx + dy * dy
+
+
+def mindist_pairs(p, lo, hi):
+    """D2-form squared MINDIST on interleaved ``(x, y)`` pairs.
+
+    ``p``: (..., 2) query point pairs; ``lo``/``hi``: (..., 2) MBR corner
+    pairs.  One gap stage over the pair + pair-reduction, mirroring the
+    paper's 2-stage D2 evaluation."""
+    d = _axis_gap(p, lo, hi)
+    d = d * d
+    return d[..., 0] + d[..., 1]
+
+
+def minmaxdist(px, py, lx, ly, hx, hy):
+    """Squared MINMAXDIST(point, rect) (Roussopoulos & Kelley).
+
+    The minimum over axes k of (distance to the *nearer* face on axis k)² +
+    Σ_{i≠k} (distance to the *farther* face on axis i)².  Any non-empty rect
+    is guaranteed to contain an object within this distance, which makes the
+    k-th smallest MINMAXDIST over a frontier a sound upper bound for k-NN
+    pruning.  For degenerate (point) rects it equals mindist."""
+    cx = (lx + hx) * 0.5
+    cy = (ly + hy) * 0.5
+    # nearer face per axis
+    rmx = jnp.where(px <= cx, lx, hx)
+    rmy = jnp.where(py <= cy, ly, hy)
+    # farther face per axis
+    rMx = jnp.where(px >= cx, lx, hx)
+    rMy = jnp.where(py >= cy, ly, hy)
+    dmx = jnp.minimum(jnp.abs(px - rmx), _DELTA_CLAMP)
+    dmy = jnp.minimum(jnp.abs(py - rmy), _DELTA_CLAMP)
+    dMx = jnp.minimum(jnp.abs(px - rMx), _DELTA_CLAMP)
+    dMy = jnp.minimum(jnp.abs(py - rMy), _DELTA_CLAMP)
+    return jnp.minimum(dmx * dmx + dMy * dMy, dmy * dmy + dMx * dMx)
+
+
+def mindist_np(px, py, lx, ly, hx, hy) -> np.ndarray:
+    """Numpy twin of ``mindist`` for host-side code (the scalar baseline's
+    heap loop and the shard router), unclamped — host paths never see the
+    padded-MBR sentinel coordinates.  Broadcasts over array args."""
+    dx = np.maximum(np.maximum(lx - px, px - hx), 0.0)
+    dy = np.maximum(np.maximum(ly - py, py - hy), 0.0)
+    return dx * dx + dy * dy
+
+
+def minmaxdist_np(px, py, lx, ly, hx, hy) -> np.ndarray:
+    """Numpy twin of ``minmaxdist`` (see there for the bound's semantics)."""
+    cx = (lx + hx) * 0.5
+    cy = (ly + hy) * 0.5
+    dmx = np.abs(px - np.where(px <= cx, lx, hx))
+    dmy = np.abs(py - np.where(py <= cy, ly, hy))
+    dMx = np.abs(px - np.where(px >= cx, lx, hx))
+    dMy = np.abs(py - np.where(py >= cy, ly, hy))
+    return np.minimum(dmx * dmx + dMy * dMy, dmy * dmy + dMx * dMx)
+
+
+def mindist_matrix_np(points, rects) -> np.ndarray:
+    """Squared point-to-rect MINDIST matrix (numpy, host-side).
+
+    points: (B, 2) or (2,); rects: (N, 4) → (B, N) float64.  The one shared
+    definition behind the brute-force oracle and the shard router (the jnp
+    operators use ``mindist`` above).
+    """
+    pts = np.atleast_2d(np.asarray(points, np.float64))
+    r = np.asarray(rects, np.float64)
+    return mindist_np(pts[:, 0, None], pts[:, 1, None], r[None, :, 0],
+                      r[None, :, 1], r[None, :, 2], r[None, :, 3])
+
+
+def brute_force_knn(rects, points, k):
+    """Oracle: k nearest rects to each query point (numpy, O(B·N)).
+
+    rects: (N, 4); points: (B, 2) or (2,).  Returns (ids (B, k), sq-dists
+    (B, k)) sorted by distance (ties broken by id); rows are padded with
+    (-1, inf) when k > N.
+    """
+    d = mindist_matrix_np(points, rects)                     # (B, N)
+    b, n = d.shape
+    kk = min(k, n)
+    order = np.argsort(d, axis=1, kind="stable")[:, :kk]     # ties → low id
+    ids = np.full((b, k), -1, np.int64)
+    out = np.full((b, k), np.inf, np.float64)
+    ids[:, :kk] = order
+    out[:, :kk] = np.take_along_axis(d, order, axis=1)
+    return ids, out
+
+
 def brute_force_select(rects, query):
     """Oracle: ids of all rects intersecting ``query`` (numpy)."""
     lx, ly, hx, hy = rects[:, 0], rects[:, 1], rects[:, 2], rects[:, 3]

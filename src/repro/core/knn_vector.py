@@ -1,0 +1,205 @@
+"""Vectorized k-nearest-neighbor over the SIMD-ified R-tree.
+
+The paper's select machinery (layout-aware SIMD predicates + queue-based
+traversal + prefetch) transplanted to the distance operator:
+
+  V-O1     — batched level-synchronous traversal (``make_knn_bfs``): one
+             dense squared-MINDIST evaluation per (query, frontier-node)
+             over the D0/D1/D2 physical layouts, frontier pruning against a
+             per-query upper bound τ, mask→cumsum compaction enqueue
+             (compaction.py — the compress-store analogue).
+  V-O1+O2  — the same loop with the distance evaluation routed through the
+             Pallas kernel (kernels/rtree_knn.py): frontier ids ride the
+             scalar-prefetch operand so node blocks are DMA'd HBM→VMEM ahead
+             of the VPU math (backend='pallas'/'pallas_interpret'/'xla').
+
+Pruning bound: after scoring a level, τ is tightened to the k-th smallest
+squared MINMAXDIST among the frontier's children (each non-empty child MBR
+guarantees one object within its MINMAXDIST, children partition the data, so
+k children ⇒ k objects within τ).  A child with MINDIST > τ cannot hold any
+of the k nearest and is dropped before compaction.  At the leaf level the
+k best candidates are extracted with ``jax.lax.top_k`` over the scored
+frontier.  Results are exact whenever no frontier capacity overflowed
+(``Counters.overflow`` reports it, as in select).
+
+Distances throughout are squared Euclidean (geometry.py convention).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .compaction import compact_rows
+from .counters import Counters
+from .geometry import (DIST_PAD, DIST_VALID_MAX, mindist, mindist_pairs,
+                       minmaxdist)
+from .layouts import LevelD0, LevelD1, LevelD2, d0_unpack, tree_layout
+from .rtree import RTree
+
+
+# ---------------------------------------------------------------------------
+# Layout-specific batched distance evaluation
+# ---------------------------------------------------------------------------
+
+def _dists_for_level(layer, ids: jax.Array, points: jax.Array):
+    """Score one level's frontier children against the query points.
+
+    ids: (B, C) node ids (-1 pad); points: (B, 2).
+    Returns (mindist (B, C, F), minmaxdist (B, C, F), child_ids (B, C, F),
+    n_stages); invalid lanes carry DIST_PAD.
+    """
+    safe = jnp.maximum(ids, 0)
+    px = points[:, 0, None, None]
+    py = points[:, 1, None, None]
+    if isinstance(layer, LevelD1):
+        c = layer.coords[safe]                      # (B, C, 4, F)
+        lx, ly, hx, hy = c[:, :, 0], c[:, :, 1], c[:, :, 2], c[:, :, 3]
+        md = mindist(px, py, lx, ly, hx, hy)
+        ptr = layer.ptr[safe]
+        stages = 4
+    elif isinstance(layer, LevelD2):
+        lo = layer.lo[safe]                         # (B, C, 2F) interleaved
+        hi = layer.hi[safe]
+        b, cc, f2 = lo.shape
+        lo = lo.reshape(b, cc, f2 // 2, 2)
+        hi = hi.reshape(b, cc, f2 // 2, 2)
+        p = points[:, None, None, :]
+        md = mindist_pairs(p, lo, hi)
+        lx, ly = lo[..., 0], lo[..., 1]
+        hx, hy = hi[..., 0], hi[..., 1]
+        ptr = layer.ptr[safe]
+        stages = 2
+    elif isinstance(layer, LevelD0):
+        e = layer.entries[safe]                     # (B, C, F, 5)
+        lx, ly, hx, hy, ptr = d0_unpack(e)
+        md = mindist(px, py, lx, ly, hx, hy)
+        stages = 4
+    else:
+        raise TypeError(type(layer))
+    mmd = minmaxdist(px, py, lx, ly, hx, hy)
+    valid = (ids >= 0)[:, :, None] & (ptr >= 0)
+    md = jnp.where(valid, md, DIST_PAD)
+    mmd = jnp.where(valid, mmd, DIST_PAD)
+    return md, mmd, ptr, stages
+
+
+def knn_frontier_caps(tree: RTree, k: int, slack: int = 4,
+                      min_cap: int = 64) -> Tuple[int, ...]:
+    """Frontier capacity entering each level (root-1 … leaf).
+
+    The τ-ball at level li (distance li from the leaves) covers ~k/F^li
+    nodes for point data; ``slack`` absorbs MBR overlap and boundary effects.
+    Caps are clamped to the level's node count.
+    """
+    f = tree.fanout
+    caps = []
+    for li in range(tree.height - 2, -1, -1):
+        need = -(-k // (f ** li)) * slack
+        caps.append(int(min(tree.levels[li].n_nodes, max(min_cap, need))))
+    return tuple(caps)
+
+
+def make_knn_bfs(tree: RTree, k: int, layout: str = "d1",
+                 caps: Optional[Sequence[int]] = None,
+                 backend: Optional[str] = None):
+    """Build the jitted batched kNN: points (B, 2) → (ids, dists, Counters).
+
+    ids: (B, k) rect ids sorted by distance (-1 pad when k > n_rects);
+    dists: (B, k) squared distances (+inf pad).  ``backend`` as in
+    make_select_bfs: None → layout-specific jnp math; 'pallas' /
+    'pallas_interpret' / 'xla' → kernels/ops.py distance evaluation over the
+    level-global D1 arrays (requires layout='d1').
+    """
+    if k <= 0:
+        raise ValueError("k must be positive")
+    if backend is not None and layout != "d1":
+        raise ValueError("kernel backend requires layout d1")
+    # kernel backends consume the level-global SoA arrays directly — don't
+    # materialize (and keep alive) an unused layout copy of the tree
+    layers = None if backend is not None else tree_layout(tree, layout)
+    if caps is None:
+        caps = knn_frontier_caps(tree, k)
+    caps = tuple(caps)
+    if len(caps) != tree.height - 1:
+        raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
+    levels = tree.levels if backend is not None else None
+    height = tree.height   # hoisted so run's closure doesn't pin the RTree
+
+    @jax.jit
+    def run(layers_, levels_, points: jax.Array):
+        b = points.shape[0]
+        ids = jnp.zeros((b, 1), jnp.int32)  # root frontier
+        tau = jnp.full((b,), DIST_PAD, jnp.float32)
+        nodes = jnp.int32(0)
+        preds = jnp.int32(0)
+        vops = jnp.int32(0)
+        enq = jnp.int32(0)
+        pruned = jnp.int32(0)
+        waste = jnp.int32(0)
+        ovf = jnp.zeros((b,), bool)
+        res_ids = res_d = None
+        for li in range(height - 1, -1, -1):
+            if backend is not None:
+                from repro.kernels import ops as _kops
+                lvl = levels_[li]
+                md, mmd = _kops.knn_level_dists(
+                    ids, points, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child,
+                    backend=backend)
+                ptr = lvl.child[jnp.maximum(ids, 0)]
+                stages = 4
+            else:
+                md, mmd, ptr, stages = _dists_for_level(layers_[li], ids,
+                                                        points)
+            f = md.shape[-1]
+            fcnt = (ids >= 0).sum(axis=1)
+            nodes = nodes + fcnt.sum()
+            # internal levels evaluate BOTH mindist and minmaxdist per lane
+            # (the scalar baseline counts both too); the leaf needs only
+            # mindist — keep the scalar-vs-vector predicate ratio honest
+            ev = stages if li == 0 else 2 * stages
+            preds = preds + fcnt.sum() * f * ev
+            vops = vops + fcnt.sum() * ev
+            entry_valid = md < DIST_VALID_MAX
+            waste = waste + fcnt.sum() * f - entry_valid.sum()
+            flat_d = md.reshape(b, -1)
+            flat_ptr = ptr.reshape(b, -1)
+            if li == 0:
+                if flat_d.shape[1] < k:   # k > total leaf candidates
+                    pad = k - flat_d.shape[1]
+                    flat_d = jnp.concatenate(
+                        [flat_d, jnp.full((b, pad), DIST_PAD, flat_d.dtype)],
+                        axis=1)
+                    flat_ptr = jnp.concatenate(
+                        [flat_ptr, jnp.full((b, pad), -1, flat_ptr.dtype)],
+                        axis=1)
+                neg_d, pos = jax.lax.top_k(-flat_d, k)
+                res_d = -neg_d
+                res_ids = jnp.take_along_axis(flat_ptr, pos, axis=1)
+                found = res_d < DIST_VALID_MAX
+                res_ids = jnp.where(found, res_ids, -1)
+                res_d = jnp.where(found, res_d, jnp.inf)
+            else:
+                mflat = mmd.reshape(b, -1)
+                # τ soundness needs k *distinct* children within the bound
+                # (each guarantees one object).  With fewer than k lanes the
+                # truncated quantile would only guarantee C·F objects, so
+                # skip tightening; when lanes ≥ k but valid children < k the
+                # DIST_PAD lanes push the k-th value huge — no-op, sound.
+                if mflat.shape[1] >= k:
+                    kth = -jax.lax.top_k(-mflat, k)[0][:, k - 1]
+                    tau = jnp.minimum(tau, kth)
+                keep = entry_valid & (md <= tau[:, None, None])
+                pruned = pruned + (entry_valid.sum() - keep.sum())
+                cap = caps[height - 1 - li]
+                ids, _, o = compact_rows(flat_ptr, keep.reshape(b, -1), cap)
+                ovf = ovf | o
+                enq = enq + keep.sum()
+        ctr = Counters(nodes_visited=nodes, predicates=preds, vector_ops=vops,
+                       enqueued=enq, pruned_inner=pruned, masked_waste=waste,
+                       overflow=ovf.any().astype(jnp.int32))
+        return res_ids, res_d, ctr
+
+    return functools.partial(run, layers, levels)

@@ -27,8 +27,9 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import rtree, select_vector
+from repro.core import knn_vector, rtree, select_vector
 from repro.core.geometry import intersects as np_intersects
+from repro.core.geometry import mindist_matrix_np
 
 
 @dataclasses.dataclass
@@ -45,6 +46,7 @@ class SpatialShards:
         self.fanout = fanout
         self.router_mbrs = np.stack([p.mbr for p in partitions])
         self._selects = {}
+        self._knns = {}
 
     @classmethod
     def build(cls, rects: np.ndarray, n_partitions: int, fanout: int = 64,
@@ -112,3 +114,111 @@ class SpatialShards:
                 results[local_q].append(part.ids[found])
         return [np.sort(np.concatenate(r)) if r else
                 np.empty((0,), np.int64) for r in results]
+
+    # ------------------------------------------------------------------
+    # k-nearest-neighbor
+    # ------------------------------------------------------------------
+
+    def _knn_for(self, pi: int, k: int):
+        """One make_knn_bfs per (partition, k): the closure materializes the
+        tree layout once; jax.jit retraces per batch shape on its own."""
+        key = (pi, k)
+        if key not in self._knns:
+            self._knns[key] = knn_vector.make_knn_bfs(
+                self.partitions[pi].tree, k=k)
+        return self._knns[key]
+
+    def _knn_partition(self, pi: int, points: np.ndarray, k: int):
+        """Run one partition's batched kNN; local → global rect ids.
+
+        The query subset is padded up to its own next power of two, so a
+        (partition, k) pair compiles at most log2(max batch)+1 traces while
+        each partition only does work proportional to the queries actually
+        routed to it (phase-1 subsets partition the batch; phase-2 subsets
+        are usually tiny).
+        """
+        import jax.numpy as jnp
+        part = self.partitions[pi]
+        b = len(points)
+        bucket = 1 << (b - 1).bit_length()
+        if bucket > b:
+            # pad with copies of a real query, not zeros: the overflow flag
+            # is any() over all rows, and an arbitrary (0,0) row could
+            # overflow the frontier caps even when no real query does —
+            # a false "results may be approximate" warning
+            pad = np.repeat(points[:1], bucket - b, axis=0)
+            points = np.concatenate([points, pad], axis=0)
+        fn = self._knn_for(pi, k)
+        ids, dists, ctr = fn(jnp.asarray(points))
+        ids = np.asarray(ids)[:b]
+        dists = np.asarray(dists, np.float64)[:b]
+        gids = np.where(ids >= 0, part.ids[np.maximum(ids, 0)], -1)
+        return gids, dists, bool(ctr.overflow)
+
+    def warm_knn(self, batch: int, k: int) -> None:
+        """Pre-compile every partition's kNN at every power-of-two bucket up
+        to ``batch`` so serving loops never pay an XLA compile (routed
+        subsets can land in any bucket ≤ the full batch's)."""
+        buckets = []
+        bucket = 1 << (max(batch, 1) - 1).bit_length()
+        while bucket >= 1:
+            buckets.append(bucket)
+            bucket //= 2
+        for pi in range(len(self.partitions)):
+            for bk in buckets:
+                self._knn_partition(pi, np.zeros((bk, 2), np.float32), k)
+
+    def knn(self, points: np.ndarray, k: int
+            ) -> Tuple[np.ndarray, np.ndarray, bool]:
+        """Distributed exact kNN → (global ids (B, k), sq-dists (B, k),
+        overflow flag).
+
+        Two-phase routing on the partition MBRs (the replicated root-router
+        one level up): phase 1 answers every query on its *primary* partition
+        (smallest MBR MINDIST) which yields a k-th-distance bound τ; phase 2
+        re-asks only partitions whose MBR MINDIST ≤ τ — for point data and
+        ≥ a few partitions, most queries never leave their primary shard.
+        The per-query top-k streams are merged by (distance, id).
+
+        ``overflow`` mirrors the single-tree Counters.overflow: True means
+        some partition's frontier cap dropped candidates and the result may
+        be approximate (rebuild with larger ``knn_frontier_caps`` to clear).
+        """
+        points = np.asarray(points, np.float32)
+        b = len(points)
+        p = len(self.partitions)
+        dmat = mindist_matrix_np(points, self.router_mbrs)   # (B, P)
+        primary = np.argmin(dmat, axis=1)
+        cand_ids = np.full((b, k), -1, np.int64)
+        cand_d = np.full((b, k), np.inf)
+        overflow = False
+        # ---- phase 1: primary partitions ----
+        for pi in range(p):
+            sel = np.nonzero(primary == pi)[0]
+            if len(sel) == 0:
+                continue
+            gids, dists, ovf = self._knn_partition(pi, points[sel], k)
+            cand_ids[sel], cand_d[sel] = gids, dists
+            overflow |= ovf
+        # τ: current k-th best (inf when the primary held < k rects)
+        tau = cand_d[:, k - 1].copy()
+        # ---- phase 2: secondary partitions within τ ----
+        # τ slack: partition distances are f32 (jax) while the router matrix
+        # is exact f64, so widen the bound a hair — only ever *adds* fan-out,
+        # never skips a partition that could hold a true k-th neighbor
+        for pi in range(p):
+            tau_cmp = tau * (1.0 + 1e-5) + 1e-30
+            sel = np.nonzero((primary != pi) & (dmat[:, pi] <= tau_cmp))[0]
+            if len(sel) == 0:
+                continue
+            gids, dists, ovf = self._knn_partition(pi, points[sel], k)
+            overflow |= ovf
+            merged_d = np.concatenate([cand_d[sel], dists], axis=1)
+            merged_i = np.concatenate([cand_ids[sel], gids], axis=1)
+            # top-k merge ordered by (distance, global id) — deterministic
+            # under cross-shard distance ties
+            order = np.lexsort((merged_i, merged_d))[:, :k]
+            cand_d[sel] = np.take_along_axis(merged_d, order, axis=1)
+            cand_ids[sel] = np.take_along_axis(merged_i, order, axis=1)
+            tau[sel] = cand_d[sel, k - 1]
+        return cand_ids, cand_d, overflow

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .rtree_join import join_pair_masks as _join_pallas
+from .rtree_knn import knn_level_dists as _knn_pallas
 from .rtree_select import select_level_masks as _select_pallas
 
 
@@ -37,6 +38,17 @@ def select_level_masks(ids, queries, lx, ly, hx, hy, child,
         return _ref.select_level_masks_ref(ids, queries, lx, ly, hx, hy, child)
     return _select_pallas(ids, queries, lx, ly, hx, hy, child,
                           interpret=(b == "pallas_interpret" or not _on_tpu()))
+
+
+def knn_level_dists(ids, points, lx, ly, hx, hy, child,
+                    backend: str = "auto"):
+    """kNN BFS level-step distances: (B,C) ids × (B,2) points →
+    (mindist, minmaxdist) each (B,C,F) f32 with DIST_PAD on invalid lanes."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _ref.knn_level_dists_ref(ids, points, lx, ly, hx, hy, child)
+    return _knn_pallas(ids, points, lx, ly, hx, hy, child,
+                       interpret=(b == "pallas_interpret" or not _on_tpu()))
 
 
 def join_pair_masks(o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords,

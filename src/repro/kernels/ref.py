@@ -9,7 +9,21 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.geometry import intersects
+from repro.core.geometry import DIST_PAD, intersects, mindist, minmaxdist
+
+
+def knn_level_dists_ref(ids, points, lx, ly, hx, hy, child):
+    """Oracle for kernels.rtree_knn.knn_level_dists."""
+    safe = jnp.maximum(ids, 0)                      # (B, C)
+    glx, gly = lx[safe], ly[safe]                   # (B, C, F)
+    ghx, ghy = hx[safe], hy[safe]
+    px = points[:, 0, None, None]
+    py = points[:, 1, None, None]
+    md = mindist(px, py, glx, gly, ghx, ghy)
+    mmd = minmaxdist(px, py, glx, gly, ghx, ghy)
+    valid = (child[safe] >= 0) & (ids >= 0)[:, :, None]
+    pad = jnp.float32(DIST_PAD)
+    return jnp.where(valid, md, pad), jnp.where(valid, mmd, pad)
 
 
 def select_level_masks_ref(ids, queries, lx, ly, hx, hy, child):

@@ -1,6 +1,13 @@
-"""Compaction (the compress-store analogue) ≡ numpy boolean-mask oracle."""
+"""Compaction (the compress-store analogue) ≡ numpy boolean-mask oracle.
+
+Entirely property-based: the module is skipped when hypothesis is absent
+(``pip install -r requirements-dev.txt`` brings it in).
+"""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.compaction import compact_1d, compact_rows

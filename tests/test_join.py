@@ -3,7 +3,6 @@ the paper's pruning claims (O3 prunes outer entries, O4/O5 prune inner)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import join_scalar, join_vector, rtree
 
@@ -109,18 +108,5 @@ def test_different_heights():
         ref = brute_join(np.asarray(o.rects), np.asarray(i.rects))
         assert got == ref
 
-
-@settings(max_examples=12, deadline=None)
-@given(na=st.integers(10, 800), nb=st.integers(10, 800),
-       fanout=st.sampled_from([8, 32]), seed=st.integers(0, 2**31 - 1),
-       o3=st.booleans(), o4=st.booleans())
-def test_property_join_matches_brute(na, nb, fanout, seed, o3, o4):
-    rng = np.random.default_rng(seed)
-    ra = uniform_rects(rng, na, eps=0.02)
-    rb = uniform_rects(rng, nb, eps=0.02)
-    ta = rtree.build_rtree(ra, fanout=fanout, sort_key="lx")
-    tb = rtree.build_rtree(rb, fanout=fanout, sort_key="lx")
-    jn = join_vector.make_join_bfs(ta, tb, result_cap=1 << 18, o3=o3, o4=o4)
-    pairs, n, _ = jn()
-    got = set(map(tuple, np.asarray(pairs[:int(n)])))
-    assert got == brute_join(ra, rb)
+# the hypothesis property sweep lives in test_properties.py (skipped when
+# hypothesis is not installed, so plain tests here always collect)

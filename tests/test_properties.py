@@ -1,0 +1,83 @@
+"""Hypothesis property sweeps for select / join / STR pack / kNN.
+
+Collected into one module so the plain unit tests keep collecting when
+hypothesis is absent: ``pytest.importorskip`` skips only this file, and the
+sweeps run whenever the dev requirements (requirements-dev.txt) are
+installed.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import join_vector, knn_vector, rtree, select_vector
+from repro.core.geometry import brute_force_knn
+
+from conftest import brute_join, brute_select, uniform_rects
+
+
+def _queries(rng, b, side):
+    lo = rng.random((b, 2)).astype(np.float32) * (1 - side)
+    return np.concatenate([lo, lo + side], axis=1).astype(np.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(10, 2000), fanout=st.sampled_from([8, 32, 64]),
+       seed=st.integers(0, 2**31 - 1), side=st.floats(0.001, 0.5))
+def test_property_select_matches_brute(n, fanout, seed, side):
+    rng = np.random.default_rng(seed)
+    rects = uniform_rects(rng, n, eps=0.005)
+    t = rtree.build_rtree(rects, fanout=fanout)
+    qs = _queries(rng, 2, np.float32(side))
+    sel = select_vector.make_select_bfs(t, result_cap=max(n, 64))
+    res, counts, ctr = sel(jnp.asarray(qs))
+    for i, q in enumerate(qs):
+        got = np.sort(np.asarray(res[i][:int(counts[i])]))
+        assert np.array_equal(got, brute_select(rects, q))
+
+
+@settings(max_examples=12, deadline=None)
+@given(na=st.integers(10, 800), nb=st.integers(10, 800),
+       fanout=st.sampled_from([8, 32]), seed=st.integers(0, 2**31 - 1),
+       o3=st.booleans(), o4=st.booleans())
+def test_property_join_matches_brute(na, nb, fanout, seed, o3, o4):
+    rng = np.random.default_rng(seed)
+    ra = uniform_rects(rng, na, eps=0.02)
+    rb = uniform_rects(rng, nb, eps=0.02)
+    ta = rtree.build_rtree(ra, fanout=fanout, sort_key="lx")
+    tb = rtree.build_rtree(rb, fanout=fanout, sort_key="lx")
+    jn = join_vector.make_join_bfs(ta, tb, result_cap=1 << 18, o3=o3, o4=o4)
+    pairs, n, _ = jn()
+    got = set(map(tuple, np.asarray(pairs[:int(n)])))
+    assert got == brute_join(ra, rb)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 3000),
+       fanout=st.sampled_from([4, 16, 64]),
+       seed=st.integers(0, 2**31 - 1),
+       sort_key=st.sampled_from([None, "lx", "ly", "hx", "hy"]))
+def test_structure_invariants(n, fanout, seed, sort_key):
+    rng = np.random.default_rng(seed)
+    rects = uniform_rects(rng, n, eps=0.01)
+    t = rtree.build_rtree(rects, fanout=fanout, sort_key=sort_key)
+    rtree.validate_structure(t)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 1500), fanout=st.sampled_from([8, 32]),
+       k=st.sampled_from([1, 3, 16]), seed=st.integers(0, 2**31 - 1),
+       layout=st.sampled_from(["d0", "d1", "d2"]))
+def test_property_knn_matches_brute(n, fanout, k, seed, layout):
+    rng = np.random.default_rng(seed)
+    rects = uniform_rects(rng, n, eps=0.01)
+    t = rtree.build_rtree(rects, fanout=fanout)
+    pts = rng.random((2, 2)).astype(np.float32)
+    fn = knn_vector.make_knn_bfs(t, k=k, layout=layout)
+    ids, d, ctr = fn(jnp.asarray(pts))
+    _, od = brute_force_knn(rects, pts, k)
+    assert not bool(ctr.overflow)
+    np.testing.assert_allclose(np.sort(np.asarray(d), axis=1),
+                               np.sort(od, axis=1), rtol=1e-4, atol=1e-6)

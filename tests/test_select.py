@@ -2,7 +2,6 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import flat as flatmod
 from repro.core import rtree, select_scalar, select_vector
@@ -111,17 +110,5 @@ def test_empty_result():
     res, counts, ctr = sel(jnp.asarray(q))
     assert int(counts[0]) == 0
 
-
-@settings(max_examples=20, deadline=None)
-@given(n=st.integers(10, 2000), fanout=st.sampled_from([8, 32, 64]),
-       seed=st.integers(0, 2**31 - 1), side=st.floats(0.001, 0.5))
-def test_property_select_matches_brute(n, fanout, seed, side):
-    rng = np.random.default_rng(seed)
-    rects = uniform_rects(rng, n, eps=0.005)
-    t = rtree.build_rtree(rects, fanout=fanout)
-    qs = _queries(rng, 2, np.float32(side))
-    sel = select_vector.make_select_bfs(t, result_cap=max(n, 64))
-    res, counts, ctr = sel(jnp.asarray(qs))
-    for i, q in enumerate(qs):
-        got = np.sort(np.asarray(res[i][:int(counts[i])]))
-        assert np.array_equal(got, brute_select(rects, q))
+# the hypothesis property sweep lives in test_properties.py (skipped when
+# hypothesis is not installed, so plain tests here always collect)

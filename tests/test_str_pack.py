@@ -1,23 +1,11 @@
-"""STR bulk-load structural invariants (property-based)."""
+"""STR bulk-load structural invariants (the hypothesis property sweep lives
+in test_properties.py so these plain tests collect without hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core import rtree, str_pack
 
 from conftest import uniform_rects
-
-
-@settings(max_examples=25, deadline=None)
-@given(n=st.integers(1, 3000),
-       fanout=st.sampled_from([4, 16, 64]),
-       seed=st.integers(0, 2**31 - 1),
-       sort_key=st.sampled_from([None, "lx", "ly", "hx", "hy"]))
-def test_structure_invariants(n, fanout, seed, sort_key):
-    rng = np.random.default_rng(seed)
-    rects = uniform_rects(rng, n, eps=0.01)
-    t = rtree.build_rtree(rects, fanout=fanout, sort_key=sort_key)
-    rtree.validate_structure(t)
 
 
 def test_duplicate_points_all_kept():
