@@ -52,8 +52,7 @@ def run(n: int = 100_000, fanout: int = 64, eps: float = 0.0005,
     from .common import time_fn
     for name, kw in variants:
         jn = join_vector.make_join_bfs(ta, tb, result_cap=result_cap, **kw)
-        dt = time_fn(jn)
-        pairs, cnt, ctr = jn()
+        dt, (pairs, cnt, ctr) = time_fn(jn)
         rows.add(variant=name, ms=dt * 1e3, pairs=int(cnt), **ctr.asdict())
     return rows
 
@@ -76,8 +75,7 @@ def run_fanout(n: int = 100_000, eps: float = 0.0005, seed: int = 0,
                                               o5="dense"))]:
             jn = join_vector.make_join_bfs(ta, tb, result_cap=result_cap,
                                            **kw)
-            dt = time_fn(jn)
-            _, cnt, ctr = jn()
+            dt, (_, cnt, ctr) = time_fn(jn)
             d = ctr.asdict()
             rows.add(fanout=f, variant=name, ms=dt * 1e3, pairs=int(cnt),
                      predicates=d["predicates"],

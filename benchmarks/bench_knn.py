@@ -37,16 +37,16 @@ def run(n: int = 1_000_000, fanout: int = 64, batch: int = 64,
         # --- V-O1 batched BFS per layout ---
         for layout in ("d1", "d2", "d0"):
             fn = knn_vector.make_knn_bfs(tree, k=k, layout=layout)
-            dt = time_fn(fn, jnp.asarray(qpts)) / batch
-            _, _, ctr = fn(jnp.asarray(qpts))
+            dt, (_, _, ctr) = time_fn(fn, jnp.asarray(qpts))
+            dt /= batch
             rows.add(k=k, variant=f"V({layout.upper()})-O1",
                      us_per_query=dt * 1e6, **_per_query(ctr, batch))
 
         # --- V-O1+O2: kernel-routed distance evaluation (xla backend on
         # CPU so wall-clock measures the algorithm, pallas on TPU) ---
         fn = knn_vector.make_knn_bfs(tree, k=k, backend="xla")
-        dt = time_fn(fn, jnp.asarray(qpts)) / batch
-        _, _, ctr = fn(jnp.asarray(qpts))
+        dt, (_, _, ctr) = time_fn(fn, jnp.asarray(qpts))
+        dt /= batch
         rows.add(k=k, variant="V(D1)-O1+O2", us_per_query=dt * 1e6,
                  **_per_query(ctr, batch))
     return rows

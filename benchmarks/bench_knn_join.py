@@ -1,0 +1,61 @@
+"""kNN-join operator sweep — the all-pairs distance operator: scalar nested
+best-first vs batched vectorized BFS per physical layout (D0/D1/D2) vs the
+kernel-routed path with the leaf-specialized pair-distance variant, for
+k ∈ {1, 8, 64}, with latency + algorithmic counters."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import knn_join_scalar, knn_join_vector, rtree
+
+from .common import Rows, point_rects, time_fn
+
+
+def run(n: int = 1_000_000, fanout: int = 64, batch: int = 64,
+        ks=(1, 8, 64), eps: float = 0.0005, scalar_queries: int = 4,
+        seed: int = 0):
+    rows = Rows("knn_join")
+    inner = point_rects(n, seed)
+    tree = rtree.build_rtree(inner, fanout=fanout)
+    outer = point_rects(batch, seed + 1, eps=eps)
+
+    scalar_fn = knn_join_scalar.make_knn_join_best_first(tree)
+    for k in ks:
+        # --- scalar nested best-first (host heap per outer rect) ---
+        t0 = time.perf_counter()
+        ctr_sum = None
+        for q in outer[:scalar_queries]:
+            _, _, ctr = scalar_fn(q, k)
+            ctr_sum = ctr if ctr_sum is None else ctr_sum + ctr
+        dt = (time.perf_counter() - t0) / scalar_queries
+        rows.add(k=k, variant="S-BestFirst", us_per_query=dt * 1e6,
+                 **{key: v // scalar_queries
+                    for key, v in ctr_sum.asdict().items()})
+
+        # --- V-O1 batched BFS per layout ---
+        for layout in ("d1", "d2", "d0"):
+            fn = knn_join_vector.make_knn_join_bfs(tree, k=k, layout=layout)
+            dt, (_, _, ctr) = time_fn(fn, jnp.asarray(outer))
+            dt /= batch
+            rows.add(k=k, variant=f"V({layout.upper()})-O1",
+                     us_per_query=dt * 1e6, **_per_query(ctr, batch))
+
+        # --- V-O1+O2: kernel-routed pair distances with the leaf-
+        # specialized variant (xla backend on CPU, pallas on TPU) ---
+        fn = knn_join_vector.make_knn_join_bfs(tree, k=k, backend="xla")
+        dt, (_, _, ctr) = time_fn(fn, jnp.asarray(outer))
+        dt /= batch
+        rows.add(k=k, variant="V(D1)-O1+O2", us_per_query=dt * 1e6,
+                 **_per_query(ctr, batch))
+    return rows
+
+
+def _per_query(ctr, batch: int):
+    return {key: v // batch for key, v in ctr.asdict().items()}
+
+
+if __name__ == "__main__":
+    run()

@@ -30,15 +30,15 @@ def run(archs=("tinyllama-1.1b", "grok-1-314b", "falcon-mamba-7b",
                                 d_model=cfg.d_model)
         step = ts.make_train_step(model, oc, donate=False)
         b = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
-        dt = time_fn(step, params, ostate, None, b, iters=3)
+        dt, _ = time_fn(step, params, ostate, None, b, iters=3)
         rows.add(arch=arch, phase="train_step", ms=dt * 1e3)
 
         pre = make_prefill_step(model, max_len=seq + 8)
         pb = {k: v for k, v in b.items() if k != "labels"}
         cache, tok, pos = pre(params, pb)
         dec = make_decode_step(model, donate_cache=False)
-        dt = time_fn(dec, params, cache, tok, pos, jax.random.PRNGKey(1),
-                     iters=3)
+        dt, _ = time_fn(dec, params, cache, tok, pos, jax.random.PRNGKey(1),
+                        iters=3)
         rows.add(arch=arch, phase="decode_step", ms=dt * 1e3)
     return rows
 

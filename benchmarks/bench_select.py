@@ -38,8 +38,9 @@ def run(n: int = 1_000_000, fanout: int = 64, selectivity: float = 0.001,
 
     # --- V: partially vectorized (DFS stack, dense per-node predicate) ---
     dfs = select_vector.make_select_dfs_vector(ft, result_cap=result_cap)
-    dt = time_fn(lambda: [dfs(jnp.asarray(q)) for q in qs]) / batch
-    _, _, ctr = dfs(jnp.asarray(qs[0]))
+    dt, outs = time_fn(lambda: [dfs(jnp.asarray(q)) for q in qs])
+    dt /= batch
+    ctr = outs[0][2]
     rows.add(variant="V(D1)", us_per_query=dt * 1e6,
              **jax_ctr(ctr))
 
@@ -52,15 +53,15 @@ def run(n: int = 1_000_000, fanout: int = 64, selectivity: float = 0.001,
         sel = select_vector.make_select_bfs(tree, layout=layout,
                                             result_cap=result_cap,
                                             caps=caps)
-        dt = time_fn(sel, jnp.asarray(qs)) / batch
-        _, _, ctr = sel(jnp.asarray(qs))
+        dt, (_, _, ctr) = time_fn(sel, jnp.asarray(qs))
+        dt /= batch
         rows.add(variant=f"V({layout.upper()})-O1", us_per_query=dt * 1e6,
                  **jax_ctr(ctr, batch))
     sel_k = select_vector.make_select_bfs(tree, layout="d1",
                                           result_cap=result_cap,
                                           caps=caps, backend="xla")
-    dt = time_fn(sel_k, jnp.asarray(qs)) / batch
-    _, _, ctr = sel_k(jnp.asarray(qs))
+    dt, (_, _, ctr) = time_fn(sel_k, jnp.asarray(qs))
+    dt /= batch
     rows.add(variant="V(D1)-O1+O2", us_per_query=dt * 1e6,
              **jax_ctr(ctr, batch))
     return rows

@@ -25,8 +25,8 @@ def run_fanout(n: int = 1_000_000, selectivity: float = 0.001,
             sel = select_vector.make_select_bfs(tree, layout=layout,
                                                 result_cap=result_cap,
                                                 caps=caps)
-            dt = time_fn(sel, jnp.asarray(qs)) / batch
-            _, _, ctr = sel(jnp.asarray(qs))
+            dt, (_, _, ctr) = time_fn(sel, jnp.asarray(qs))
+            dt /= batch
             d = ctr.asdict()
             rows.add(fanout=f, layout=layout, us_per_query=dt * 1e6,
                      nodes=d["nodes_visited"] // batch,
@@ -48,8 +48,8 @@ def run_selectivity(n: int = 1_000_000, fanout: int = 64, batch: int = 64,
         for layout in ("d1", "d2"):
             sel = select_vector.make_select_bfs(tree, layout=layout,
                                                 result_cap=cap, caps=caps)
-            dt = time_fn(sel, jnp.asarray(qs)) / batch
-            _, counts, ctr = sel(jnp.asarray(qs))
+            dt, (_, counts, ctr) = time_fn(sel, jnp.asarray(qs))
+            dt /= batch
             rows.add(selectivity=s, layout=layout, us_per_query=dt * 1e6,
                      mean_results=float(np.asarray(counts).mean()),
                      nodes=int(ctr.asdict()["nodes_visited"]) // batch)

@@ -20,12 +20,12 @@ def run(n: int = 500_000, partitions: int = 8, fanout: int = 64,
 
     mono = rtree.build_rtree(rects, fanout=fanout)
     sel = select_vector.make_select_bfs(mono, result_cap=cap)
-    dt = time_fn(sel, jnp.asarray(qs))
+    dt, _ = time_fn(sel, jnp.asarray(qs))
     rows.add(config="monolithic", qps=batch / dt)
 
     shards = SpatialShards.build(rects, partitions, fanout=fanout)
     shards.range_select(qs)            # warm compile
-    dt = time_fn(lambda: shards.range_select(qs))
+    dt, _ = time_fn(lambda: shards.range_select(qs))
     rows.add(config=f"{len(shards.partitions)}-partitions",
              qps=batch / dt)
     return rows

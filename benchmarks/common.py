@@ -31,8 +31,16 @@ def square_queries(b: int, selectivity: float, seed: int = 1) -> np.ndarray:
     return np.concatenate([lo, lo + side], axis=1).astype(np.float32)
 
 
-def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
-    """Median seconds per call; blocks on jax outputs."""
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5):
+    """(median seconds per call, output of the first call).
+
+    Blocks on jax outputs.  Returning the first call's output lets bench
+    cells read Counters (or any other result) without re-running a full
+    traversal after timing — the timed loop's outputs are identical for the
+    deterministic jitted operators benchmarked here.  With ``warmup=0`` the
+    first call is timed (cold start, compile included), so total call count
+    stays warmup + iters either way.
+    """
     def call():
         out = fn(*args)
         for leaf in jax.tree_util.tree_leaves(out):
@@ -40,14 +48,19 @@ def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
                 leaf.block_until_ready()
         return out
 
+    first = None
     for _ in range(warmup):
-        call()
+        out = call()
+        if first is None:
+            first = out
     ts = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        call()
+        out = call()
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+        if first is None:
+            first = out
+    return float(np.median(ts)), first
 
 
 class Rows:

@@ -19,7 +19,8 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true",
                     help="tiny sizes (CI smoke)")
     ap.add_argument("--only", default=None,
-                    help="comma list: select,sweeps,join,knn,service,lm")
+                    help="comma list: select,sweeps,join,knn,knn-join,"
+                         "service,lm")
     ap.add_argument("--out-dir", default="runs/bench")
     args = ap.parse_args(argv)
 
@@ -65,6 +66,11 @@ def main(argv=None):
         print(f"[knn sweep]  n={n_sel}")
         all_rows.append(bench_knn.run(n=n_sel,
                                       ks=(1, 8) if args.quick else (1, 8, 64)))
+    if want("knn-join"):
+        from . import bench_knn_join
+        print(f"[knn-join sweep]  n={n_sel}")
+        all_rows.append(bench_knn_join.run(
+            n=n_sel, ks=(1, 8) if args.quick else (1, 8, 64)))
     if want("service"):
         from . import bench_service
         print(f"[spatial service]  n={n_service}")

@@ -37,6 +37,41 @@ def compact_rows(vals: jax.Array, mask: jax.Array, cap: int, fill: int = -1):
     return out[:, :cap], count, count > cap
 
 
+def beam_rows(vals: jax.Array, dists: jax.Array, mask: jax.Array, cap: int,
+              fill: int = -1):
+    """Best-first beam compaction: the ``cap`` smallest-``dists`` qualifying
+    entries per row, distance-ordered (``lax.top_k`` on negated distances —
+    ties resolve to the lowest lane, mirroring the oracle's stable argsort).
+
+    Same contract as ``compact_rows`` → (out (B, cap), count (B,), overflow
+    (B,)): when ``count <= cap`` the kept *set* is identical to compact_rows'
+    (only the intra-row order differs); on overflow the drop is best-first —
+    every dropped entry's distance is ≥ the worst kept one, so downstream
+    results degrade to an approximate beam with that distance bound instead
+    of losing arbitrary entries.
+
+    vals: (B, M) int32; dists: (B, M) float32 (DIST_* convention of
+    geometry.py); mask: (B, M) bool.
+    """
+    from .geometry import DIST_PAD, DIST_VALID_MAX
+    if vals.ndim != 2:
+        raise ValueError("beam_rows expects (B, M)")
+    b, m = vals.shape
+    mask = mask.astype(jnp.bool_)
+    d = jnp.where(mask, dists, DIST_PAD)
+    v = jnp.where(mask, vals, fill)
+    if m < cap:
+        d = jnp.concatenate(
+            [d, jnp.full((b, cap - m), DIST_PAD, d.dtype)], axis=1)
+        v = jnp.concatenate(
+            [v, jnp.full((b, cap - m), fill, v.dtype)], axis=1)
+    neg_d, pos = jax.lax.top_k(-d, cap)
+    out = jnp.take_along_axis(v, pos, axis=1)
+    out = jnp.where(-neg_d < DIST_VALID_MAX, out, fill)
+    count = mask.sum(axis=1).astype(jnp.int32)
+    return out, count, count > cap
+
+
 def compact_1d(vals: jax.Array, mask: jax.Array, cap: int, fill: int = -1):
     """1-D compaction (single queue): (M,) → (cap,), count, overflow."""
     out, count, ovf = compact_rows(vals[None], mask[None], cap, fill)

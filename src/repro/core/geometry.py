@@ -140,6 +140,69 @@ def minmaxdist(px, py, lx, ly, hx, hy):
     return jnp.minimum(dmx * dmx + dMy * dMy, dmy * dmy + dMx * dMx)
 
 
+# ---------------------------------------------------------------------------
+# Rect-to-rect distance primitives (kNN-join subsystem)
+#
+# The kNN-join generalizes the point-query gap to an interval gap: the
+# distance from query interval [a_lo, a_hi] to MBR interval [b_lo, b_hi] is
+# max(a_lo - b_hi, b_lo - a_hi, 0).  With a degenerate (point) query every
+# rect primitive reduces exactly to its point twin above, so the two operator
+# families share one distance semantics.
+# ---------------------------------------------------------------------------
+
+
+def rect_axis_gap(a_lo, a_hi, b_lo, b_hi):
+    """Per-axis interval-to-interval outside gap, clamped finite."""
+    return jnp.minimum(jnp.maximum(jnp.maximum(a_lo - b_hi, b_lo - a_hi), 0),
+                       _DELTA_CLAMP)
+
+
+def mindist_rect(qlx, qly, qhx, qhy, lx, ly, hx, hy):
+    """Squared MINDIST(rect, rect): 0 when the rects intersect, else the
+    squared distance between their nearest faces/corners.  Broadcasts over
+    array args; 2 gap stages + 2 fma — the D1-form SIMD sequence."""
+    dx = rect_axis_gap(qlx, qhx, lx, hx)
+    dy = rect_axis_gap(qly, qhy, ly, hy)
+    return dx * dx + dy * dy
+
+
+def mindist_rect_pairs(q_lo, q_hi, lo, hi):
+    """D2-form squared MINDIST(rect, rect) on interleaved ``(x, y)`` pairs.
+
+    ``q_lo/q_hi``: (..., 2) query corner pairs; ``lo/hi``: (..., 2) MBR corner
+    pairs.  One gap stage over the pair + pair-reduction."""
+    d = rect_axis_gap(q_lo, q_hi, lo, hi)
+    d = d * d
+    return d[..., 0] + d[..., 1]
+
+
+def _face_gap(a_lo, a_hi, face):
+    """Gap from query interval [a_lo, a_hi] to the coordinate ``face``."""
+    return jnp.minimum(jnp.maximum(jnp.maximum(a_lo - face, face - a_hi), 0),
+                       _DELTA_CLAMP)
+
+
+def minmaxdist_rect(qlx, qly, qhx, qhy, lx, ly, hx, hy):
+    """Squared MINMAXDIST(rect, rect) — the Roussopoulos bound generalized to
+    rect queries.
+
+    Every face of a (tight) MBR touches at least one object; an object on the
+    nearer x-face sits at gap ``min(gap(lx), gap(hx))`` on x and at most
+    ``max(gap(ly), gap(hy))`` on y (the interval gap is convex in the
+    coordinate, so its max over the MBR interval is attained at a face).
+    Minimizing over the axis choice gives an upper bound on the distance to
+    *some* object inside the MBR, which makes the k-th smallest value over a
+    frontier a sound kNN-join τ.  Degenerate point queries reduce exactly to
+    ``minmaxdist``."""
+    gxl = _face_gap(qlx, qhx, lx)
+    gxh = _face_gap(qlx, qhx, hx)
+    gyl = _face_gap(qly, qhy, ly)
+    gyh = _face_gap(qly, qhy, hy)
+    ngx, mgx = jnp.minimum(gxl, gxh), jnp.maximum(gxl, gxh)
+    ngy, mgy = jnp.minimum(gyl, gyh), jnp.maximum(gyl, gyh)
+    return jnp.minimum(ngx * ngx + mgy * mgy, ngy * ngy + mgx * mgx)
+
+
 def mindist_np(px, py, lx, ly, hx, hy) -> np.ndarray:
     """Numpy twin of ``mindist`` for host-side code (the scalar baseline's
     heap loop and the shard router), unclamped — host paths never see the
@@ -160,6 +223,24 @@ def minmaxdist_np(px, py, lx, ly, hx, hy) -> np.ndarray:
     return np.minimum(dmx * dmx + dMy * dMy, dmy * dmy + dMx * dMx)
 
 
+def mindist_rect_np(qlx, qly, qhx, qhy, lx, ly, hx, hy) -> np.ndarray:
+    """Numpy twin of ``mindist_rect`` (host-side, unclamped)."""
+    dx = np.maximum(np.maximum(qlx - hx, lx - qhx), 0.0)
+    dy = np.maximum(np.maximum(qly - hy, ly - qhy), 0.0)
+    return dx * dx + dy * dy
+
+
+def minmaxdist_rect_np(qlx, qly, qhx, qhy, lx, ly, hx, hy) -> np.ndarray:
+    """Numpy twin of ``minmaxdist_rect`` (see there for the bound)."""
+    def face_gap(a_lo, a_hi, face):
+        return np.maximum(np.maximum(a_lo - face, face - a_hi), 0.0)
+    gxl, gxh = face_gap(qlx, qhx, lx), face_gap(qlx, qhx, hx)
+    gyl, gyh = face_gap(qly, qhy, ly), face_gap(qly, qhy, hy)
+    ngx, mgx = np.minimum(gxl, gxh), np.maximum(gxl, gxh)
+    ngy, mgy = np.minimum(gyl, gyh), np.maximum(gyl, gyh)
+    return np.minimum(ngx * ngx + mgy * mgy, ngy * ngy + mgx * mgx)
+
+
 def mindist_matrix_np(points, rects) -> np.ndarray:
     """Squared point-to-rect MINDIST matrix (numpy, host-side).
 
@@ -173,6 +254,18 @@ def mindist_matrix_np(points, rects) -> np.ndarray:
                       r[None, :, 1], r[None, :, 2], r[None, :, 3])
 
 
+def mindist_rect_matrix_np(rects_a, rects_b) -> np.ndarray:
+    """Squared rect-to-rect MINDIST matrix (numpy, host-side).
+
+    rects_a: (B, 4) or (4,); rects_b: (N, 4) → (B, N) float64.  The shared
+    definition behind the kNN-join oracle and the shard router."""
+    a = np.atleast_2d(np.asarray(rects_a, np.float64))
+    b = np.asarray(rects_b, np.float64)
+    return mindist_rect_np(a[:, 0, None], a[:, 1, None], a[:, 2, None],
+                           a[:, 3, None], b[None, :, 0], b[None, :, 1],
+                           b[None, :, 2], b[None, :, 3])
+
+
 def brute_force_knn(rects, points, k):
     """Oracle: k nearest rects to each query point (numpy, O(B·N)).
 
@@ -181,6 +274,24 @@ def brute_force_knn(rects, points, k):
     (-1, inf) when k > N.
     """
     d = mindist_matrix_np(points, rects)                     # (B, N)
+    b, n = d.shape
+    kk = min(k, n)
+    order = np.argsort(d, axis=1, kind="stable")[:, :kk]     # ties → low id
+    ids = np.full((b, k), -1, np.int64)
+    out = np.full((b, k), np.inf, np.float64)
+    ids[:, :kk] = order
+    out[:, :kk] = np.take_along_axis(d, order, axis=1)
+    return ids, out
+
+
+def brute_force_knn_join(outer_rects, inner_rects, k):
+    """Oracle: k nearest inner rects to each outer rect (numpy, O(B·N)).
+
+    outer_rects: (B, 4) or (4,); inner_rects: (N, 4).  Returns (ids (B, k),
+    sq-dists (B, k)) sorted by distance (ties broken by id); rows are padded
+    with (-1, inf) when k > N.
+    """
+    d = mindist_rect_matrix_np(outer_rects, inner_rects)     # (B, N)
     b, n = d.shape
     kk = min(k, n)
     order = np.argsort(d, axis=1, kind="stable")[:, :kk]     # ties → low id

@@ -1,0 +1,175 @@
+"""Vectorized batched kNN-join over the SIMD-ified R-tree.
+
+The all-pairs distance operator: for every rect in an *outer* set, its k
+nearest entries of an *inner* R-tree, under squared rect-to-rect MINDIST
+(geometry.mindist_rect — a degenerate outer rect reduces exactly to the
+point-kNN operator).  The traversal is the join pair-frontier descended
+level-synchronously, specialized to the case where every outer element is a
+leaf-level rect: the pair frontier factorizes into one row of inner node ids
+per outer rect, a (B, C) frontier running on knn_vector's shared traversal
+engine (``_make_distance_bfs``) while child gathering reuses join_vector's
+layout dispatch (``_gather_children``) for D0/D1 and scores D2 natively in
+its pair-interleaved form.
+
+Per level:
+
+  score  — squared rect MINDIST + rect MINMAXDIST of every (outer rect,
+           frontier-child) cell; at the *leaf* level only MINDIST is
+           evaluated (the τ bound is never consumed below the leaves) — the
+           kernel path routes this through the leaf-specialized Pallas
+           variant that skips the MINMAXDIST store entirely.
+  τ      — per outer rect, tightened to the k-th smallest rect MINMAXDIST
+           among the frontier's children (each non-empty child MBR
+           guarantees one object within that bound).
+  prune  — children with MINDIST > τ cannot hold any of the k nearest.
+  beam   — enqueue via ``compaction.beam_rows``: when the qualifying
+           children exceed the level cap, the best-MINDIST beam per outer
+           rect survives (``lax.top_k`` on negated distances) and
+           ``Counters.overflow`` flags the result as approximate-with-bound.
+
+Results are exact whenever no overflow was flagged, matching the brute-force
+oracle ``geometry.brute_force_knn_join`` up to distance ties.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .counters import Counters
+from .geometry import (DIST_PAD, mindist_rect, mindist_rect_pairs,
+                       minmaxdist_rect)
+from .join_vector import _gather_children
+from .knn_vector import _make_distance_bfs, knn_frontier_caps
+from .layouts import LevelD2, tree_layout
+from .rtree import RTree
+
+
+def _rect_dists_for_level(layer, ids: jax.Array, qrects: jax.Array,
+                          leaf: bool):
+    """Score one level's frontier children against the outer query rects.
+
+    ids: (B, C) inner node ids (-1 pad); qrects: (B, 4).
+    Returns (mindist (B, C, F), minmaxdist (B, C, F) or None at the leaf,
+    child_ids (B, C, F), n_stages); invalid lanes carry DIST_PAD.
+
+    D2 scores MINDIST in its native pair-interleaved form (one gap stage on
+    pairs + pair reduction — stages=2, matching what actually executes);
+    D0/D1 gather through join_vector's layout dispatch on the flattened pair
+    frontier — one code path here and in the join.  The MINMAXDIST bound is
+    evaluated on the de-interleaved corners for every layout (as in
+    knn_vector's D2 path — the bound has no cheaper pair form).
+    """
+    b, c = ids.shape
+    if isinstance(layer, LevelD2):
+        safe = jnp.maximum(ids, 0)
+        lo = layer.lo[safe]                         # (B, C, 2F) interleaved
+        hi = layer.hi[safe]
+        f2 = lo.shape[-1]
+        lo = lo.reshape(b, c, f2 // 2, 2)
+        hi = hi.reshape(b, c, f2 // 2, 2)
+        q_lo = qrects[:, None, None, 0:2]
+        q_hi = qrects[:, None, None, 2:4]
+        md = mindist_rect_pairs(q_lo, q_hi, lo, hi)
+        lx, ly = lo[..., 0], lo[..., 1]
+        hx, hy = hi[..., 0], hi[..., 1]
+        ptr = layer.ptr[safe]
+        stages = 2
+    else:
+        (lx, ly, hx, hy, ptr), stages = _gather_children(layer,
+                                                         ids.reshape(-1))
+        f = lx.shape[-1]
+        lx, ly, hx, hy = (a.reshape(b, c, f) for a in (lx, ly, hx, hy))
+        ptr = ptr.reshape(b, c, f)
+        md = mindist_rect(qrects[:, 0, None, None], qrects[:, 1, None, None],
+                          qrects[:, 2, None, None], qrects[:, 3, None, None],
+                          lx, ly, hx, hy)
+    valid = (ids >= 0)[:, :, None] & (ptr >= 0)
+    md = jnp.where(valid, md, DIST_PAD)
+    if leaf:
+        return md, None, ptr, stages
+    mmd = minmaxdist_rect(qrects[:, 0, None, None], qrects[:, 1, None, None],
+                          qrects[:, 2, None, None], qrects[:, 3, None, None],
+                          lx, ly, hx, hy)
+    mmd = jnp.where(valid, mmd, DIST_PAD)
+    return md, mmd, ptr, stages
+
+
+def make_knn_join_bfs(tree: RTree, k: int, layout: str = "d1",
+                      caps: Optional[Sequence[int]] = None,
+                      backend: Optional[str] = None):
+    """Build the jitted batched kNN-join: rects (B, 4) → (ids, dists,
+    Counters).
+
+    ids: (B, k) inner rect ids sorted by distance (-1 pad when k > n_rects);
+    dists: (B, k) squared rect MINDISTs (+inf pad).  ``backend`` as in
+    make_knn_bfs: None → layout-specific jnp math; 'pallas' /
+    'pallas_interpret' / 'xla' → kernels/ops.py pair-distance evaluation over
+    the level-global D1 arrays (requires layout='d1'), with the
+    leaf-specialized variant (no MINMAXDIST store) at the leaf level.
+    """
+    if k <= 0:
+        raise ValueError("k must be positive")
+    if backend is not None and layout != "d1":
+        raise ValueError("kernel backend requires layout d1")
+    layers = None if backend is not None else tree_layout(tree, layout)
+    if caps is None:
+        caps = knn_frontier_caps(tree, k)
+    caps = tuple(caps)
+    if len(caps) != tree.height - 1:
+        raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
+    levels = tree.levels if backend is not None else None
+
+    def score(layers_, levels_, li, ids, qrects, leaf):
+        if backend is not None:
+            from repro.kernels import ops as _kops
+            lvl = levels_[li]
+            md, mmd = _kops.knn_join_level_dists(
+                ids, qrects, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child,
+                leaf=leaf, backend=backend)
+            return md, mmd, lvl.child[jnp.maximum(ids, 0)], 4
+        return _rect_dists_for_level(layers_[li], ids, qrects, leaf)
+
+    # the traversal loop (τ tightening, MINDIST pruning, beam enqueue, leaf
+    # top-k, counters) is knn_vector's — only the scoring differs
+    run = _make_distance_bfs(tree.height, k, caps, score)
+    return functools.partial(run, layers, levels)
+
+
+def knn_join(tree_o: RTree, tree_i: RTree, k: int, layout: str = "d1",
+             caps: Optional[Sequence[int]] = None,
+             backend: Optional[str] = None, batch: int = 4096
+             ) -> Tuple[np.ndarray, np.ndarray, Counters]:
+    """All-pairs kNN-join of two trees: every data rect of ``tree_o`` against
+    the k nearest data rects of ``tree_i``.
+
+    Returns (ids (N_o, k), sq-dists (N_o, k), summed Counters), row i being
+    the answer for outer rect i (tree_o.rects order).  The outer set is
+    streamed in ``batch``-row chunks through one compiled ``make_knn_join_bfs``
+    engine — the outer tree contributes its rect set, the inner tree the
+    index; chunks are padded to the batch size so the engine compiles once.
+    """
+    fn = make_knn_join_bfs(tree_i, k=k, layout=layout, caps=caps,
+                           backend=backend)
+    outer = np.asarray(tree_o.rects, np.float32)
+    n = len(outer)
+    ids = np.full((n, k), -1, np.int64)
+    dists = np.full((n, k), np.inf, np.float64)
+    ctr_sum = None
+    for lo in range(0, n, batch):
+        chunk = outer[lo:lo + batch]
+        if len(chunk) < batch:
+            # pad with copies of a real row so padding can't trip the
+            # overflow flag (same trick as spatial_shard._knn_partition)
+            pad = np.repeat(chunk[:1], batch - len(chunk), axis=0)
+            full = np.concatenate([chunk, pad], axis=0)
+        else:
+            full = chunk
+        cid, cd, ctr = fn(jnp.asarray(full))
+        ids[lo:lo + batch] = np.asarray(cid)[:len(chunk)]
+        dists[lo:lo + batch] = np.asarray(cd, np.float64)[:len(chunk)]
+        ctr_sum = ctr if ctr_sum is None else ctr_sum + ctr
+    return ids, dists, ctr_sum

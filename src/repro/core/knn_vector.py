@@ -22,6 +22,13 @@ k best candidates are extracted with ``jax.lax.top_k`` over the scored
 frontier.  Results are exact whenever no frontier capacity overflowed
 (``Counters.overflow`` reports it, as in select).
 
+Overflow degrades to a *best-first beam*, not a lossy drop: frontier
+enqueue goes through ``compaction.beam_rows``, so when a level's qualifying
+children exceed the cap the per-query best-MINDIST beam survives and every
+dropped child's MINDIST is ≥ the worst kept one.  An overflowed result is
+therefore approximate-with-bound — any missed true neighbor lies beyond the
+beam's worst kept frontier MINDIST — instead of arbitrarily wrong.
+
 Distances throughout are squared Euclidean (geometry.py convention).
 """
 from __future__ import annotations
@@ -32,7 +39,7 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from .compaction import compact_rows
+from .compaction import beam_rows
 from .counters import Counters
 from .geometry import (DIST_PAD, DIST_VALID_MAX, mindist, mindist_pairs,
                        minmaxdist)
@@ -102,35 +109,23 @@ def knn_frontier_caps(tree: RTree, k: int, slack: int = 4,
     return tuple(caps)
 
 
-def make_knn_bfs(tree: RTree, k: int, layout: str = "d1",
-                 caps: Optional[Sequence[int]] = None,
-                 backend: Optional[str] = None):
-    """Build the jitted batched kNN: points (B, 2) → (ids, dists, Counters).
+def _make_distance_bfs(height: int, k: int, caps: Tuple[int, ...], score):
+    """Shared batched level-synchronous traversal behind the distance
+    operators (point kNN and kNN-join).
 
-    ids: (B, k) rect ids sorted by distance (-1 pad when k > n_rects);
-    dists: (B, k) squared distances (+inf pad).  ``backend`` as in
-    make_select_bfs: None → layout-specific jnp math; 'pallas' /
-    'pallas_interpret' / 'xla' → kernels/ops.py distance evaluation over the
-    level-global D1 arrays (requires layout='d1').
+    ``score(layers_, levels_, li, ids, queries, leaf)`` evaluates one
+    level's frontier children against the batch of queries and returns
+    (mindist (B, C, F), minmaxdist (B, C, F) | None at the leaf, child_ids
+    (B, C, F), n_stages) with DIST_PAD on invalid lanes.  The loop owns
+    everything else: counter accounting, τ tightening to the k-th smallest
+    MINMAXDIST, MINDIST pruning, the best-first beam enqueue
+    (compaction.beam_rows — overflow degrades to approximate-with-bound),
+    and leaf top-k extraction.  Keeping one loop means τ soundness and
+    beam/overflow semantics can never drift between the two operators.
     """
-    if k <= 0:
-        raise ValueError("k must be positive")
-    if backend is not None and layout != "d1":
-        raise ValueError("kernel backend requires layout d1")
-    # kernel backends consume the level-global SoA arrays directly — don't
-    # materialize (and keep alive) an unused layout copy of the tree
-    layers = None if backend is not None else tree_layout(tree, layout)
-    if caps is None:
-        caps = knn_frontier_caps(tree, k)
-    caps = tuple(caps)
-    if len(caps) != tree.height - 1:
-        raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
-    levels = tree.levels if backend is not None else None
-    height = tree.height   # hoisted so run's closure doesn't pin the RTree
-
     @jax.jit
-    def run(layers_, levels_, points: jax.Array):
-        b = points.shape[0]
+    def run(layers_, levels_, queries: jax.Array):
+        b = queries.shape[0]
         ids = jnp.zeros((b, 1), jnp.int32)  # root frontier
         tau = jnp.full((b,), DIST_PAD, jnp.float32)
         nodes = jnp.int32(0)
@@ -142,31 +137,23 @@ def make_knn_bfs(tree: RTree, k: int, layout: str = "d1",
         ovf = jnp.zeros((b,), bool)
         res_ids = res_d = None
         for li in range(height - 1, -1, -1):
-            if backend is not None:
-                from repro.kernels import ops as _kops
-                lvl = levels_[li]
-                md, mmd = _kops.knn_level_dists(
-                    ids, points, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child,
-                    backend=backend)
-                ptr = lvl.child[jnp.maximum(ids, 0)]
-                stages = 4
-            else:
-                md, mmd, ptr, stages = _dists_for_level(layers_[li], ids,
-                                                        points)
+            leaf = li == 0
+            md, mmd, ptr, stages = score(layers_, levels_, li, ids, queries,
+                                         leaf)
             f = md.shape[-1]
             fcnt = (ids >= 0).sum(axis=1)
             nodes = nodes + fcnt.sum()
             # internal levels evaluate BOTH mindist and minmaxdist per lane
             # (the scalar baseline counts both too); the leaf needs only
             # mindist — keep the scalar-vs-vector predicate ratio honest
-            ev = stages if li == 0 else 2 * stages
+            ev = stages if leaf else 2 * stages
             preds = preds + fcnt.sum() * f * ev
             vops = vops + fcnt.sum() * ev
             entry_valid = md < DIST_VALID_MAX
             waste = waste + fcnt.sum() * f - entry_valid.sum()
             flat_d = md.reshape(b, -1)
             flat_ptr = ptr.reshape(b, -1)
-            if li == 0:
+            if leaf:
                 if flat_d.shape[1] < k:   # k > total leaf candidates
                     pad = k - flat_d.shape[1]
                     flat_d = jnp.concatenate(
@@ -194,7 +181,11 @@ def make_knn_bfs(tree: RTree, k: int, layout: str = "d1",
                 keep = entry_valid & (md <= tau[:, None, None])
                 pruned = pruned + (entry_valid.sum() - keep.sum())
                 cap = caps[height - 1 - li]
-                ids, _, o = compact_rows(flat_ptr, keep.reshape(b, -1), cap)
+                # best-first beam enqueue: on overflow keep the cap best-
+                # MINDIST children per query (approximate-with-bound) instead
+                # of dropping by lane position
+                ids, _, o = beam_rows(flat_ptr, flat_d, keep.reshape(b, -1),
+                                      cap)
                 ovf = ovf | o
                 enq = enq + keep.sum()
         ctr = Counters(nodes_visited=nodes, predicates=preds, vector_ops=vops,
@@ -202,4 +193,43 @@ def make_knn_bfs(tree: RTree, k: int, layout: str = "d1",
                        overflow=ovf.any().astype(jnp.int32))
         return res_ids, res_d, ctr
 
+    return run
+
+
+def make_knn_bfs(tree: RTree, k: int, layout: str = "d1",
+                 caps: Optional[Sequence[int]] = None,
+                 backend: Optional[str] = None):
+    """Build the jitted batched kNN: points (B, 2) → (ids, dists, Counters).
+
+    ids: (B, k) rect ids sorted by distance (-1 pad when k > n_rects);
+    dists: (B, k) squared distances (+inf pad).  ``backend`` as in
+    make_select_bfs: None → layout-specific jnp math; 'pallas' /
+    'pallas_interpret' / 'xla' → kernels/ops.py distance evaluation over the
+    level-global D1 arrays (requires layout='d1').
+    """
+    if k <= 0:
+        raise ValueError("k must be positive")
+    if backend is not None and layout != "d1":
+        raise ValueError("kernel backend requires layout d1")
+    # kernel backends consume the level-global SoA arrays directly — don't
+    # materialize (and keep alive) an unused layout copy of the tree
+    layers = None if backend is not None else tree_layout(tree, layout)
+    if caps is None:
+        caps = knn_frontier_caps(tree, k)
+    caps = tuple(caps)
+    if len(caps) != tree.height - 1:
+        raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
+    levels = tree.levels if backend is not None else None
+
+    def score(layers_, levels_, li, ids, points, leaf):
+        if backend is not None:
+            from repro.kernels import ops as _kops
+            lvl = levels_[li]
+            md, mmd = _kops.knn_level_dists(
+                ids, points, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child,
+                backend=backend)
+            return md, mmd, lvl.child[jnp.maximum(ids, 0)], 4
+        return _dists_for_level(layers_[li], ids, points)
+
+    run = _make_distance_bfs(tree.height, k, caps, score)
     return functools.partial(run, layers, levels)

@@ -27,9 +27,9 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import knn_vector, rtree, select_vector
+from repro.core import knn_join_vector, knn_vector, rtree, select_vector
 from repro.core.geometry import intersects as np_intersects
-from repro.core.geometry import mindist_matrix_np
+from repro.core.geometry import mindist_matrix_np, mindist_rect_matrix_np
 
 
 @dataclasses.dataclass
@@ -47,6 +47,7 @@ class SpatialShards:
         self.router_mbrs = np.stack([p.mbr for p in partitions])
         self._selects = {}
         self._knns = {}
+        self._knn_joins = {}
 
     @classmethod
     def build(cls, rects: np.ndarray, n_partitions: int, fanout: int = 64,
@@ -128,36 +129,42 @@ class SpatialShards:
                 self.partitions[pi].tree, k=k)
         return self._knns[key]
 
-    def _knn_partition(self, pi: int, points: np.ndarray, k: int):
-        """Run one partition's batched kNN; local → global rect ids.
+    def _run_partition(self, get_engine, pi: int, queries: np.ndarray,
+                       k: int):
+        """Run one partition's batched distance engine; local → global ids.
 
         The query subset is padded up to its own next power of two, so a
         (partition, k) pair compiles at most log2(max batch)+1 traces while
         each partition only does work proportional to the queries actually
         routed to it (phase-1 subsets partition the batch; phase-2 subsets
-        are usually tiny).
+        are usually tiny).  Shared by kNN (2-col points) and kNN-join
+        (4-col rects) — the padding/overflow subtleties live in one place.
         """
         import jax.numpy as jnp
         part = self.partitions[pi]
-        b = len(points)
+        b = len(queries)
         bucket = 1 << (b - 1).bit_length()
         if bucket > b:
             # pad with copies of a real query, not zeros: the overflow flag
-            # is any() over all rows, and an arbitrary (0,0) row could
+            # is any() over all rows, and an arbitrary all-zeros row could
             # overflow the frontier caps even when no real query does —
             # a false "results may be approximate" warning
-            pad = np.repeat(points[:1], bucket - b, axis=0)
-            points = np.concatenate([points, pad], axis=0)
-        fn = self._knn_for(pi, k)
-        ids, dists, ctr = fn(jnp.asarray(points))
+            pad = np.repeat(queries[:1], bucket - b, axis=0)
+            queries = np.concatenate([queries, pad], axis=0)
+        fn = get_engine(pi, k)
+        ids, dists, ctr = fn(jnp.asarray(queries))
         ids = np.asarray(ids)[:b]
         dists = np.asarray(dists, np.float64)[:b]
         gids = np.where(ids >= 0, part.ids[np.maximum(ids, 0)], -1)
         return gids, dists, bool(ctr.overflow)
 
-    def warm_knn(self, batch: int, k: int) -> None:
-        """Pre-compile every partition's kNN at every power-of-two bucket up
-        to ``batch`` so serving loops never pay an XLA compile (routed
+    def _knn_partition(self, pi: int, points: np.ndarray, k: int):
+        return self._run_partition(self._knn_for, pi, points, k)
+
+    def _warm_buckets(self, run_partition, batch: int, k: int,
+                      width: int) -> None:
+        """Pre-compile every partition's engine at every power-of-two bucket
+        up to ``batch`` so serving loops never pay an XLA compile (routed
         subsets can land in any bucket ≤ the full batch's)."""
         buckets = []
         bucket = 1 << (max(batch, 1) - 1).bit_length()
@@ -166,7 +173,10 @@ class SpatialShards:
             bucket //= 2
         for pi in range(len(self.partitions)):
             for bk in buckets:
-                self._knn_partition(pi, np.zeros((bk, 2), np.float32), k)
+                run_partition(pi, np.zeros((bk, width), np.float32), k)
+
+    def warm_knn(self, batch: int, k: int) -> None:
+        self._warm_buckets(self._knn_partition, batch, k, width=2)
 
     def knn(self, points: np.ndarray, k: int
             ) -> Tuple[np.ndarray, np.ndarray, bool]:
@@ -181,13 +191,25 @@ class SpatialShards:
         The per-query top-k streams are merged by (distance, id).
 
         ``overflow`` mirrors the single-tree Counters.overflow: True means
-        some partition's frontier cap dropped candidates and the result may
-        be approximate (rebuild with larger ``knn_frontier_caps`` to clear).
+        some partition's frontier cap truncated to its best-first beam and
+        the result may be approximate-with-bound (rebuild with larger
+        ``knn_frontier_caps`` to clear).
         """
         points = np.asarray(points, np.float32)
-        b = len(points)
-        p = len(self.partitions)
         dmat = mindist_matrix_np(points, self.router_mbrs)   # (B, P)
+        return self._two_phase_knn(points, k, dmat, self._knn_partition)
+
+    def _two_phase_knn(self, queries: np.ndarray, k: int, dmat: np.ndarray,
+                       run_partition) -> Tuple[np.ndarray, np.ndarray, bool]:
+        """Shared two-phase routing for the distance operators (kNN and
+        kNN-join): primary-partition answer → τ bound → τ-bounded secondary
+        fan-out → deterministic cross-shard top-k merge.
+
+        ``dmat``: (B, P) exact query-to-partition-MBR squared MINDISTs;
+        ``run_partition(pi, queries, k)`` → (global ids, dists, overflow).
+        """
+        b = len(queries)
+        p = len(self.partitions)
         primary = np.argmin(dmat, axis=1)
         cand_ids = np.full((b, k), -1, np.int64)
         cand_d = np.full((b, k), np.inf)
@@ -197,7 +219,7 @@ class SpatialShards:
             sel = np.nonzero(primary == pi)[0]
             if len(sel) == 0:
                 continue
-            gids, dists, ovf = self._knn_partition(pi, points[sel], k)
+            gids, dists, ovf = run_partition(pi, queries[sel], k)
             cand_ids[sel], cand_d[sel] = gids, dists
             overflow |= ovf
         # τ: current k-th best (inf when the primary held < k rects)
@@ -211,7 +233,7 @@ class SpatialShards:
             sel = np.nonzero((primary != pi) & (dmat[:, pi] <= tau_cmp))[0]
             if len(sel) == 0:
                 continue
-            gids, dists, ovf = self._knn_partition(pi, points[sel], k)
+            gids, dists, ovf = run_partition(pi, queries[sel], k)
             overflow |= ovf
             merged_d = np.concatenate([cand_d[sel], dists], axis=1)
             merged_i = np.concatenate([cand_ids[sel], gids], axis=1)
@@ -222,3 +244,37 @@ class SpatialShards:
             cand_ids[sel] = np.take_along_axis(merged_i, order, axis=1)
             tau[sel] = cand_d[sel, k - 1]
         return cand_ids, cand_d, overflow
+
+    # ------------------------------------------------------------------
+    # kNN-join (all-pairs distance operator)
+    # ------------------------------------------------------------------
+
+    def _knn_join_for(self, pi: int, k: int):
+        key = (pi, k)
+        if key not in self._knn_joins:
+            self._knn_joins[key] = knn_join_vector.make_knn_join_bfs(
+                self.partitions[pi].tree, k=k)
+        return self._knn_joins[key]
+
+    def _knn_join_partition(self, pi: int, qrects: np.ndarray, k: int):
+        return self._run_partition(self._knn_join_for, pi, qrects, k)
+
+    def warm_knn_join(self, batch: int, k: int) -> None:
+        self._warm_buckets(self._knn_join_partition, batch, k, width=4)
+
+    def knn_join(self, qrects: np.ndarray, k: int
+                 ) -> Tuple[np.ndarray, np.ndarray, bool]:
+        """Distributed kNN-join → (global ids (B, k), sq-dists (B, k),
+        overflow flag): for each outer rect, its k nearest data rects across
+        all partitions under squared rect-to-rect MINDIST.
+
+        Identical two-phase routing to ``knn`` with the router matrix
+        generalized to rect-to-MBR MINDIST: phase 1 answers on the primary
+        partition (smallest MBR distance), phase 2 re-asks only partitions
+        whose MBR MINDIST ≤ τ, and per-query streams merge by (distance,
+        global id).  ``overflow`` True means some partition's beam truncated
+        and the result may be approximate (see knn_join_vector).
+        """
+        qrects = np.asarray(qrects, np.float32)
+        dmat = mindist_rect_matrix_np(qrects, self.router_mbrs)   # (B, P)
+        return self._two_phase_knn(qrects, k, dmat, self._knn_join_partition)

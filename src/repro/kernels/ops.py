@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from . import ref as _ref
 from .rtree_join import join_pair_masks as _join_pallas
 from .rtree_knn import knn_level_dists as _knn_pallas
+from .rtree_knn_join import knn_join_level_dists as _knn_join_pallas
 from .rtree_select import select_level_masks as _select_pallas
 
 
@@ -49,6 +50,21 @@ def knn_level_dists(ids, points, lx, ly, hx, hy, child,
         return _ref.knn_level_dists_ref(ids, points, lx, ly, hx, hy, child)
     return _knn_pallas(ids, points, lx, ly, hx, hy, child,
                        interpret=(b == "pallas_interpret" or not _on_tpu()))
+
+
+def knn_join_level_dists(ids, qrects, lx, ly, hx, hy, child, *,
+                         leaf: bool = False, backend: str = "auto"):
+    """kNN-join BFS level-step pair distances: (B,C) ids × (B,4) rects →
+    (mindist, minmaxdist) each (B,C,F) f32 with DIST_PAD on invalid lanes.
+    ``leaf=True`` selects the leaf-specialized variant (no MINMAXDIST math or
+    store) and returns None for the bound."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _ref.knn_join_level_dists_ref(ids, qrects, lx, ly, hx, hy,
+                                             child, leaf=leaf)
+    return _knn_join_pallas(ids, qrects, lx, ly, hx, hy, child, leaf=leaf,
+                            interpret=(b == "pallas_interpret"
+                                       or not _on_tpu()))
 
 
 def join_pair_masks(o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords,

@@ -9,7 +9,28 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.geometry import DIST_PAD, intersects, mindist, minmaxdist
+from repro.core.geometry import (DIST_PAD, intersects, mindist, mindist_rect,
+                                 minmaxdist, minmaxdist_rect)
+
+
+def knn_join_level_dists_ref(ids, qrects, lx, ly, hx, hy, child, *,
+                             leaf: bool = False):
+    """Oracle for kernels.rtree_knn_join.knn_join_level_dists."""
+    safe = jnp.maximum(ids, 0)                      # (B, C)
+    glx, gly = lx[safe], ly[safe]                   # (B, C, F)
+    ghx, ghy = hx[safe], hy[safe]
+    qlx = qrects[:, 0, None, None]
+    qly = qrects[:, 1, None, None]
+    qhx = qrects[:, 2, None, None]
+    qhy = qrects[:, 3, None, None]
+    valid = (child[safe] >= 0) & (ids >= 0)[:, :, None]
+    pad = jnp.float32(DIST_PAD)
+    md = mindist_rect(qlx, qly, qhx, qhy, glx, gly, ghx, ghy)
+    md = jnp.where(valid, md, pad)
+    if leaf:
+        return md, None
+    mmd = minmaxdist_rect(qlx, qly, qhx, qhy, glx, gly, ghx, ghy)
+    return md, jnp.where(valid, mmd, pad)
 
 
 def knn_level_dists_ref(ids, points, lx, ly, hx, hy, child):

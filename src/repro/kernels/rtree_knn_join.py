@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: R-tree kNN-join BFS level step (pair distances).
+
+The kNN distance kernel (rtree_knn.py) generalized to rect queries: one grid
+step scores one (outer rect, frontier-node) cell — squared rect-to-rect
+MINDIST and rect MINMAXDIST of every child MBR of the inner node against the
+outer query rect.  Frontier node ids ride the scalar-prefetch operand
+(`PrefetchScalarGridSpec`) exactly as in the select/kNN kernels, so node
+blocks are DMA'd HBM→VMEM one grid step ahead of the VPU math.
+
+Two variants share the scoring sequence:
+
+  generic — MINDIST + MINMAXDIST from one DMA of the four key-excerpt rows
+            (internal levels: the τ bound consumes MINMAXDIST).
+  leaf    — MINDIST only, skipping the MINMAXDIST math *and its output
+            store*: the leaf level (the largest frontier) never consumes the
+            bound.  The jnp path DCEs the waste under jit; an opaque
+            pallas_call cannot, hence the explicit variant (ROADMAP item).
+
+Layout: consumes the level-global D1 (SoA) arrays.  Invalid lanes (padded
+children, -1 frontier slots) carry DIST_PAD, never a qualifying distance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.geometry import DIST_PAD, mindist_rect, minmaxdist_rect
+
+# Python float: traced as a literal, not a captured const, inside the kernel.
+_PAD = float(DIST_PAD)
+
+
+def _knn_join_kernel(ids_ref, q_ref, lx_ref, ly_ref, hx_ref, hy_ref,
+                     child_ref, md_ref, mmd_ref):
+    # ids_ref (the scalar-prefetch operand) is consumed by the BlockSpec
+    # index maps, not the body
+    qlx = q_ref[0, 0]
+    qly = q_ref[0, 1]
+    qhx = q_ref[0, 2]
+    qhy = q_ref[0, 3]
+    lx = lx_ref[0, :]
+    ly = ly_ref[0, :]
+    hx = hx_ref[0, :]
+    hy = hy_ref[0, :]
+    # the shared geometry formulas are pure jnp and trace inside the kernel
+    # body, so the kernel can never drift from the ref path it is
+    # parity-tested against
+    md = mindist_rect(qlx, qly, qhx, qhy, lx, ly, hx, hy)
+    mmd = minmaxdist_rect(qlx, qly, qhx, qhy, lx, ly, hx, hy)
+    valid = child_ref[0, :] >= 0
+    md_ref[0, 0, :] = jnp.where(valid, md, _PAD)
+    mmd_ref[0, 0, :] = jnp.where(valid, mmd, _PAD)
+
+
+def _knn_join_leaf_kernel(ids_ref, q_ref, lx_ref, ly_ref, hx_ref, hy_ref,
+                          child_ref, md_ref):
+    # leaf-specialized: identical MINDIST sequence, no MINMAXDIST math or
+    # store — halves the kernel's output DMA on the largest frontier
+    qlx = q_ref[0, 0]
+    qly = q_ref[0, 1]
+    qhx = q_ref[0, 2]
+    qhy = q_ref[0, 3]
+    lx = lx_ref[0, :]
+    ly = ly_ref[0, :]
+    hx = hx_ref[0, :]
+    hy = hy_ref[0, :]
+    md = mindist_rect(qlx, qly, qhx, qhy, lx, ly, hx, hy)
+    valid = child_ref[0, :] >= 0
+    md_ref[0, 0, :] = jnp.where(valid, md, _PAD)
+
+
+@functools.partial(jax.jit, static_argnames=("leaf", "interpret"))
+def knn_join_level_dists(ids, qrects, lx, ly, hx, hy, child, *,
+                         leaf: bool = False, interpret: bool = True):
+    """Score one BFS level for a batch of kNN-join outer rects.
+
+    ids:    (B, C) int32 frontier node ids (-1 pad) — scalar-prefetched.
+    qrects: (B, 4) outer query rects.
+    lx..hy: (N, F) level-global SoA child MBR arrays (f32).
+    child:  (N, F) int32 child ids.
+    → (mindist (B, C, F), minmaxdist (B, C, F) | None) f32, DIST_PAD on
+    invalid lanes; ``leaf=True`` selects the MINMAXDIST-free variant and
+    returns None for the bound.
+    """
+    b, c = ids.shape
+    n, f = lx.shape
+    safe_ids = jnp.maximum(ids, 0)
+
+    def node_map(bi, ci, ids_s):
+        return (ids_s[bi, ci], 0)
+
+    out_spec = pl.BlockSpec((1, 1, f), lambda bi, ci, ids_s: (bi, ci, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, c),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda bi, ci, ids_s: (bi, 0)),
+            pl.BlockSpec((1, f), node_map),
+            pl.BlockSpec((1, f), node_map),
+            pl.BlockSpec((1, f), node_map),
+            pl.BlockSpec((1, f), node_map),
+            pl.BlockSpec((1, f), node_map),
+        ],
+        out_specs=[out_spec] if leaf else [out_spec, out_spec],
+    )
+    shape = jax.ShapeDtypeStruct((b, c, f), jnp.float32)
+    fn = pl.pallas_call(
+        _knn_join_leaf_kernel if leaf else _knn_join_kernel,
+        grid_spec=grid_spec,
+        out_shape=[shape] if leaf else [shape, shape],
+        interpret=interpret,
+    )
+    # Safe ids drive the index maps so padding never DMAs out of bounds;
+    # validity is recovered from the original ids' sign afterwards.
+    out = fn(safe_ids, qrects, lx, ly, hx, hy, child)
+    invalid = (ids < 0)[:, :, None]
+    if leaf:
+        return jnp.where(invalid, _PAD, out[0]), None
+    return (jnp.where(invalid, _PAD, out[0]),
+            jnp.where(invalid, _PAD, out[1]))

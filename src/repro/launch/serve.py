@@ -2,8 +2,9 @@
 feature.
 
 Builds a spatially-partitioned index fleet (distributed/spatial_shard.py),
-then serves batched range-select (and optionally join) requests with
-deadline-based straggler re-issue (runtime/straggler.py).
+then serves batched range-select, kNN, or kNN-join requests (the latter two
+with two-phase τ-bounded routing), with deadline-based straggler re-issue
+for select (runtime/straggler.py).
 
     PYTHONPATH=src python -m repro.launch.serve --n 200000 --partitions 8 \
         --batches 20 --batch-size 64 --selectivity 0.001
@@ -34,9 +35,12 @@ def make_queries(n: int, batch: int, selectivity: float, seed: int = 1):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="spatial",
-                    choices=["spatial", "knn", "lm"])
+                    choices=["spatial", "knn", "knn-join", "lm"])
     ap.add_argument("--k", type=int, default=8,
-                    help="neighbors per query (knn mode)")
+                    help="neighbors per query (knn / knn-join modes)")
+    ap.add_argument("--query-eps", type=float, default=0.002,
+                    help="half-extent of the outer query rects "
+                         "(knn-join mode)")
     ap.add_argument("--n", type=int, default=200_000)
     ap.add_argument("--partitions", type=int, default=8)
     ap.add_argument("--fanout", type=int, default=64)
@@ -51,6 +55,8 @@ def main(argv=None):
         return _serve_lm(args)
     if args.mode == "knn":
         return _serve_knn(args)
+    if args.mode == "knn-join":
+        return _serve_knn_join(args)
 
     rng = np.random.default_rng(args.seed)
     pts = rng.random((args.n, 2), dtype=np.float32)
@@ -116,6 +122,41 @@ def _serve_knn(args):
           f"(k={args.k}) in {dt:.2f}s → {qps:,.0f} q/s, {returned} neighbor "
           f"rows"
           + (", WARNING: frontier overflow — results may be approximate"
+             if overflowed else ""))
+    return {"qps": qps, "neighbors": returned, "overflow": overflowed}
+
+
+def _serve_knn_join(args):
+    """Batched kNN-join service: for each outer query rect, its k nearest
+    indexed rects across the partition fleet (rect-to-rect MINDIST) — the
+    all-pairs distance operator as a served endpoint, two-phase routed with
+    τ-bounded secondary fan-out (distributed/spatial_shard.py)."""
+    rng = np.random.default_rng(args.seed)
+    pts = rng.random((args.n, 2), dtype=np.float32)
+    rects = str_pack.points_to_rects(pts)
+    t0 = time.time()
+    shards = SpatialShards.build(rects, args.partitions, fanout=args.fanout)
+    print(f"built {len(shards.partitions)} partitions over {args.n} rects "
+          f"in {time.time() - t0:.2f}s")
+
+    eps = np.float32(args.query_eps)
+    centers = rng.random((args.batches, args.batch_size, 2), dtype=np.float32)
+    qs = np.concatenate([centers - eps, centers + eps], axis=-1)
+    shards.warm_knn_join(args.batch_size, args.k)
+
+    t0 = time.time()
+    returned = 0
+    overflowed = False
+    for b in range(args.batches):
+        ids, dists, ovf = shards.knn_join(qs[b], args.k)
+        returned += int((ids >= 0).sum())
+        overflowed |= ovf
+    dt = time.time() - t0
+    qps = args.batches * args.batch_size / dt
+    print(f"served {args.batches} batches × {args.batch_size} kNN-join "
+          f"queries (k={args.k}, eps={args.query_eps}) in {dt:.2f}s → "
+          f"{qps:,.0f} q/s, {returned} neighbor rows"
+          + (", WARNING: beam truncation — results may be approximate"
              if overflowed else ""))
     return {"qps": qps, "neighbors": returned, "overflow": overflowed}
 

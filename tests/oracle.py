@@ -1,0 +1,180 @@
+"""Differential-oracle harness for the operator family.
+
+One helper — ``assert_matches_oracle(op, layouts, backends, seeds)`` — runs
+any operator cell (physical layout × kernel backend × data seed) against its
+brute-force numpy oracle, so every new operator / layout / backend cell is
+verified the same way: build a random instance, run the vectorized cell,
+compare exactly (select/join id sets) or to distance tolerance with
+id-at-reported-distance verification (kNN / kNN-join), and assert no
+overflow was flagged.
+
+Kernel backends require layout='d1' (the level-global SoA arrays); non-d1 ×
+backend cells are skipped rather than errored so callers can request full
+matrices.
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (join_vector, knn_join_vector, knn_vector, rtree,
+                        select_vector)
+from repro.core.geometry import (brute_force_knn, brute_force_knn_join,
+                                 mindist_matrix_np, mindist_rect_matrix_np)
+
+from conftest import brute_join, brute_select, uniform_rects
+
+LAYOUTS = ("d0", "d1", "d2")
+KERNEL_BACKENDS = ("xla", "pallas_interpret")
+
+
+def _check_knn_result(ids, d, oracle_d, rects, queries, dist_matrix_fn, ctx):
+    """Shared kNN/kNN-join verification: sorted distances match the oracle,
+    returned ids are distinct and really sit at the reported distances."""
+    np.testing.assert_allclose(np.sort(d, axis=1), np.sort(oracle_d, axis=1),
+                               rtol=1e-4, atol=1e-9, err_msg=ctx)
+    for i, q in enumerate(queries):
+        valid = ids[i] >= 0
+        true_d = dist_matrix_fn(q, rects[ids[i][valid]])[0]
+        np.testing.assert_allclose(true_d, d[i][valid], rtol=1e-4,
+                                   atol=1e-9, err_msg=ctx)
+        assert len(set(ids[i][valid].tolist())) == valid.sum(), ctx
+
+
+# --------------------------------------------------------------------------
+# operator cells: make(seed, **params) → instance; run(inst, layout,
+# backend) → result; check(inst, result, ctx)
+# --------------------------------------------------------------------------
+
+class _SelectOp:
+    @staticmethod
+    def make(seed, n=2000, fanout=16, batch=4, side=0.06, **_):
+        rng = np.random.default_rng(seed)
+        rects = uniform_rects(rng, n, eps=0.005)
+        lo = rng.random((batch, 2)).astype(np.float32) * (1 - side)
+        queries = np.concatenate([lo, lo + np.float32(side)], axis=1)
+        return dict(rects=rects, queries=queries,
+                    tree=rtree.build_rtree(rects, fanout=fanout),
+                    cap=max(n, 64))
+
+    @staticmethod
+    def run(inst, layout, backend):
+        sel = select_vector.make_select_bfs(inst["tree"], layout=layout,
+                                            result_cap=inst["cap"],
+                                            backend=backend)
+        return sel(jnp.asarray(inst["queries"]))
+
+    @staticmethod
+    def check(inst, result, ctx):
+        res, counts, ctr = result
+        assert not bool(ctr.overflow), ctx
+        for i, q in enumerate(inst["queries"]):
+            got = np.sort(np.asarray(res[i][:int(counts[i])]))
+            assert np.array_equal(got, brute_select(inst["rects"], q)), ctx
+
+
+class _JoinOp:
+    @staticmethod
+    def make(seed, n=800, fanout=16, **_):
+        rng = np.random.default_rng(seed)
+        ra = uniform_rects(rng, n, eps=0.012)
+        rb = uniform_rects(rng, n, eps=0.012)
+        return dict(ra=ra, rb=rb,
+                    ta=rtree.build_rtree(ra, fanout=fanout, sort_key="lx"),
+                    tb=rtree.build_rtree(rb, fanout=fanout, sort_key="lx"))
+
+    @staticmethod
+    def run(inst, layout, backend):
+        jn = join_vector.make_join_bfs(inst["ta"], inst["tb"], layout=layout,
+                                       result_cap=1 << 17, backend=backend)
+        return jn()
+
+    @staticmethod
+    def check(inst, result, ctx):
+        pairs, n, ctr = result
+        assert not bool(ctr.overflow), ctx
+        got = set(map(tuple, np.asarray(pairs[:int(n)])))
+        assert got == brute_join(inst["ra"], inst["rb"]), ctx
+
+
+class _KnnOp:
+    @staticmethod
+    def make(seed, n=2500, fanout=16, batch=6, k=8, **_):
+        rng = np.random.default_rng(seed)
+        rects = uniform_rects(rng, n, eps=0.002)
+        queries = rng.random((batch, 2)).astype(np.float32)
+        _, od = brute_force_knn(rects, queries, k)
+        return dict(rects=rects, queries=queries, k=k, oracle_d=od,
+                    tree=rtree.build_rtree(rects, fanout=fanout))
+
+    @staticmethod
+    def run(inst, layout, backend):
+        fn = knn_vector.make_knn_bfs(inst["tree"], k=inst["k"],
+                                     layout=layout, backend=backend)
+        return fn(jnp.asarray(inst["queries"]))
+
+    @staticmethod
+    def check(inst, result, ctx):
+        ids, d, ctr = result
+        assert not bool(ctr.overflow), ctx
+        _check_knn_result(np.asarray(ids), np.asarray(d), inst["oracle_d"],
+                          inst["rects"], inst["queries"], mindist_matrix_np,
+                          ctx)
+
+
+class _KnnJoinOp:
+    @staticmethod
+    def make(seed, n=2500, fanout=16, batch=6, k=8, eps=0.01, **_):
+        rng = np.random.default_rng(seed)
+        rects = uniform_rects(rng, n, eps=0.002)
+        outer = uniform_rects(rng, batch, eps=eps)
+        _, od = brute_force_knn_join(outer, rects, k)
+        return dict(rects=rects, queries=outer, k=k, oracle_d=od,
+                    tree=rtree.build_rtree(rects, fanout=fanout))
+
+    @staticmethod
+    def run(inst, layout, backend):
+        fn = knn_join_vector.make_knn_join_bfs(inst["tree"], k=inst["k"],
+                                               layout=layout,
+                                               backend=backend)
+        return fn(jnp.asarray(inst["queries"]))
+
+    @staticmethod
+    def check(inst, result, ctx):
+        ids, d, ctr = result
+        assert not bool(ctr.overflow), ctx
+        _check_knn_result(np.asarray(ids), np.asarray(d), inst["oracle_d"],
+                          inst["rects"], inst["queries"],
+                          mindist_rect_matrix_np, ctx)
+
+
+OPS = {
+    "select": _SelectOp,
+    "join": _JoinOp,
+    "knn": _KnnOp,
+    "knn_join": _KnnJoinOp,
+}
+
+
+def assert_matches_oracle(op: str, layouts=LAYOUTS, backends=(None,),
+                          seeds=(0,), **params):
+    """Run operator ``op`` over the (layout × backend × seed) matrix against
+    its brute-force oracle.  ``backends`` entries are None (layout-specific
+    jnp math) or kernel backends ('xla' / 'pallas_interpret'); kernel cells
+    only exist for layout='d1' and are skipped elsewhere.  ``params`` tune
+    the instance (n, fanout, batch, k, ...).  Returns the number of cells
+    actually verified (callers may assert coverage)."""
+    spec = OPS[op]
+    cells = 0
+    for seed in seeds:
+        inst = spec.make(seed, **params)
+        for layout, backend in itertools.product(layouts, backends):
+            if backend is not None and layout != "d1":
+                continue
+            ctx = f"{op} layout={layout} backend={backend} seed={seed}"
+            spec.check(inst, spec.run(inst, layout, backend), ctx)
+            cells += 1
+    assert cells > 0, f"no runnable cells for {op}: {layouts} × {backends}"
+    return cells

@@ -1,0 +1,38 @@
+"""Benchmark plumbing smoke tests: time_fn returns its warmup output so
+bench cells read Counters without re-running a traversal (ROADMAP item)."""
+import numpy as np
+
+from benchmarks.common import time_fn
+
+
+def test_time_fn_returns_warmup_output():
+    calls = []
+
+    def fn(x):
+        calls.append(x)
+        return len(calls)
+
+    dt, out = time_fn(fn, "q", warmup=1, iters=3)
+    # the returned output is the FIRST (warmup) call's — bench cells that
+    # read Counters from it are not re-running the operator afterwards
+    assert out == 1
+    assert len(calls) == 4          # 1 warmup + 3 timed, nothing extra
+    assert dt >= 0.0
+
+
+def test_time_fn_counters_come_from_warmup():
+    """End-to-end: a bench-style cell gets identical Counters from the
+    warmup output as a fresh call would produce (deterministic operator),
+    with zero extra operator invocations."""
+    import jax.numpy as jnp
+    from repro.core import knn_vector, rtree
+
+    rng = np.random.default_rng(0)
+    pts = rng.random((64, 2)).astype(np.float32)
+    rects = np.concatenate([pts, pts], axis=1)
+    tree = rtree.build_rtree(rects, fanout=8)
+    fn = knn_vector.make_knn_bfs(tree, k=4)
+    q = jnp.asarray(rng.random((4, 2)).astype(np.float32))
+    _, (_, _, ctr) = time_fn(fn, q, warmup=1, iters=2)
+    _, _, ctr_fresh = fn(q)
+    assert ctr.asdict() == ctr_fresh.asdict()

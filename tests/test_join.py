@@ -7,6 +7,7 @@ import pytest
 from repro.core import join_scalar, join_vector, rtree
 
 from conftest import brute_join, uniform_rects
+from oracle import KERNEL_BACKENDS, LAYOUTS, assert_matches_oracle
 
 
 @pytest.fixture(scope="module")
@@ -57,6 +58,15 @@ def test_vector_join_variants(trees, kw):
     got = set(map(tuple, np.asarray(pairs[:int(n)])))
     assert got == brute_join(ra, rb)
     assert not bool(ctr.overflow)
+
+
+def test_join_matches_oracle_harness():
+    """The plain layout × backend matrix via the shared differential
+    harness (optimization-flag variants stay in VARIANTS above)."""
+    assert_matches_oracle("join", layouts=LAYOUTS, backends=(None,),
+                          seeds=(11,))
+    assert_matches_oracle("join", layouts=("d1",),
+                          backends=KERNEL_BACKENDS, seeds=(11,))
 
 
 def test_o3_o4_reduce_predicates(trees):

@@ -37,6 +37,54 @@ def test_select_kernel_sweep(b, c, f, dtype):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(exp))
 
 
+@pytest.mark.parametrize("b,c,f", [(1, 1, 128), (4, 8, 128), (3, 5, 256),
+                                   (2, 7, 64)])
+@pytest.mark.parametrize("leaf", [False, True])
+def test_knn_join_kernel_sweep(b, c, f, leaf):
+    """Pallas pair-distance kernel ≡ ref.py XLA path, bit-exact on float32,
+    for both the generic and the leaf-specialized (no MINMAXDIST store)
+    variants.  The ref runs under jit — exactly how the operators consume it
+    (backend='xla' inside the jitted BFS) — so both sides see the same XLA
+    FMA contraction; the eager ref differs by 1 ULP."""
+    import functools
+
+    import jax
+    rng = np.random.default_rng(f * b + c + leaf)
+    n = 32
+    lx, ly, hx, hy, child = _nodes(rng, n, f, np.float32)
+    ids = rng.integers(-1, n, (b, c)).astype(np.int32)
+    qs = rng.random((b, 4)).astype(np.float32)
+    qs[:, 2:] = qs[:, :2] + 0.15
+    got = ops.knn_join_level_dists(ids, qs, lx, ly, hx, hy, child,
+                                   leaf=leaf, backend="pallas_interpret")
+    ref_fn = jax.jit(functools.partial(ref.knn_join_level_dists_ref,
+                                       leaf=leaf))
+    exp = ref_fn(ids, jnp.asarray(qs), lx, ly, hx, hy, child)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(exp[0]))
+    if leaf:
+        assert got[1] is None and exp[1] is None
+    else:
+        np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(exp[1]))
+
+
+def test_knn_join_leaf_variant_matches_generic_mindist():
+    """The leaf specialization changes what is *stored*, never the MINDIST
+    values themselves."""
+    rng = np.random.default_rng(7)
+    n, b, c, f = 16, 3, 4, 128
+    lx, ly, hx, hy, child = _nodes(rng, n, f, np.float32)
+    ids = rng.integers(-1, n, (b, c)).astype(np.int32)
+    qs = rng.random((b, 4)).astype(np.float32)
+    qs[:, 2:] = qs[:, :2] + 0.1
+    md_leaf, _ = ops.knn_join_level_dists(ids, qs, lx, ly, hx, hy, child,
+                                          leaf=True,
+                                          backend="pallas_interpret")
+    md_gen, _ = ops.knn_join_level_dists(ids, qs, lx, ly, hx, hy, child,
+                                         leaf=False,
+                                         backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(md_leaf), np.asarray(md_gen))
+
+
 @pytest.mark.parametrize("p,fo,fi", [(1, 8, 128), (5, 16, 128),
                                      (3, 32, 256), (7, 8, 256),
                                      (2, 64, 128)])

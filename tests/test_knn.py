@@ -11,6 +11,7 @@ from repro.core.geometry import (brute_force_knn, mindist, mindist_matrix_np,
 from repro.distributed.spatial_shard import SpatialShards
 
 from conftest import uniform_rects
+from oracle import KERNEL_BACKENDS, LAYOUTS, assert_matches_oracle
 
 
 def _true_sq_dist(rects, p, ids):
@@ -85,28 +86,16 @@ def test_scalar_best_first(tree_and_rects):
 
 
 # ---------------------------------------------------------------------------
-# batched vector BFS ≡ brute force (all layouts × k)
+# batched vector BFS ≡ brute force (all layouts × k) — via the shared
+# differential-oracle harness (tests/oracle.py), which also checks that
+# returned ids really sit at the reported distances and are distinct
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("layout", ["d0", "d1", "d2"])
+@pytest.mark.parametrize("layout", LAYOUTS)
 @pytest.mark.parametrize("k", [1, 8, 64])
-def test_vector_knn_matches_oracle(tree_and_rects, layout, k):
-    t, rects = tree_and_rects
-    rng = np.random.default_rng(32)
-    pts = rng.random((8, 2)).astype(np.float32)
-    fn = knn_vector.make_knn_bfs(t, k=k, layout=layout)
-    ids, d, ctr = fn(jnp.asarray(pts))
-    ids, d = np.asarray(ids), np.asarray(d)
-    assert not bool(ctr.overflow)
-    _, od = brute_force_knn(rects, pts, k)
-    np.testing.assert_allclose(np.sort(d, axis=1), np.sort(od, axis=1),
-                               rtol=1e-4, atol=1e-9)
-    # returned ids really are at the reported distances (ties-safe check)
-    for i, p in enumerate(pts):
-        valid = ids[i] >= 0
-        np.testing.assert_allclose(_true_sq_dist(rects, p, ids[i][valid]),
-                                   d[i][valid], rtol=1e-4, atol=1e-9)
-        assert len(set(ids[i][valid].tolist())) == valid.sum()  # distinct
+def test_vector_knn_matches_oracle(layout, k):
+    assert_matches_oracle("knn", layouts=(layout,), backends=(None,),
+                          seeds=(32,), k=k)
 
 
 def test_vector_counters_show_pruning(tree_and_rects):
@@ -119,16 +108,10 @@ def test_vector_counters_show_pruning(tree_and_rects):
     assert int(ctr.nodes_visited) < 4 * t.n_nodes_total()
 
 
-def test_kernel_backend_matches_jnp(tree_and_rects):
-    t, rects = tree_and_rects
-    rng = np.random.default_rng(34)
-    pts = rng.random((3, 2)).astype(np.float32)
-    base = knn_vector.make_knn_bfs(t, k=8)
-    _, d0, _ = base(jnp.asarray(pts))
-    for backend in ("xla", "pallas_interpret"):
-        fn = knn_vector.make_knn_bfs(t, k=8, backend=backend)
-        _, d, _ = fn(jnp.asarray(pts))
-        np.testing.assert_allclose(np.asarray(d), np.asarray(d0), rtol=1e-6)
+@pytest.mark.parametrize("backend", KERNEL_BACKENDS)
+def test_kernel_backend_matches_oracle(backend):
+    assert_matches_oracle("knn", layouts=("d1",), backends=(backend,),
+                          seeds=(34,), k=8)
 
 
 # ---------------------------------------------------------------------------

@@ -12,8 +12,9 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import join_vector, knn_vector, rtree, select_vector
-from repro.core.geometry import brute_force_knn
+from repro.core import (join_vector, knn_join_vector, knn_vector, rtree,
+                        select_vector)
+from repro.core.geometry import brute_force_knn, brute_force_knn_join
 
 from conftest import brute_join, brute_select, uniform_rects
 
@@ -81,3 +82,84 @@ def test_property_knn_matches_brute(n, fanout, k, seed, layout):
     assert not bool(ctr.overflow)
     np.testing.assert_allclose(np.sort(np.asarray(d), axis=1),
                                np.sort(od, axis=1), rtol=1e-4, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 1500), fanout=st.sampled_from([8, 32]),
+       k=st.sampled_from([1, 3, 16]), seed=st.integers(0, 2**31 - 1),
+       eps=st.floats(0.0, 0.05))
+def test_property_knn_join_layout_invariance(n, fanout, k, seed, eps):
+    """Result distances match the oracle and are invariant across D0/D1/D2
+    (the physical layout may only change counters, never answers)."""
+    rng = np.random.default_rng(seed)
+    rects = uniform_rects(rng, n, eps=0.005)
+    t = rtree.build_rtree(rects, fanout=fanout)
+    outer = uniform_rects(rng, 2, eps=np.float32(eps))
+    _, od = brute_force_knn_join(outer, rects, k)
+    per_layout = []
+    for layout in ("d0", "d1", "d2"):
+        fn = knn_join_vector.make_knn_join_bfs(t, k=k, layout=layout)
+        ids, d, ctr = fn(jnp.asarray(outer))
+        assert not bool(ctr.overflow)
+        d = np.sort(np.asarray(d), axis=1)
+        np.testing.assert_allclose(d, np.sort(od, axis=1), rtol=1e-4,
+                                   atol=1e-6)
+        per_layout.append(d)
+    # D2 evaluates MINDIST in pair-interleaved form — same op sequence, but
+    # XLA may fuse differently-shaped graphs with different roundings, so
+    # invariance is asserted to tight fp tolerance rather than bitwise
+    np.testing.assert_allclose(per_layout[0], per_layout[1], rtol=1e-6,
+                               atol=1e-12)
+    np.testing.assert_allclose(per_layout[1], per_layout[2], rtol=1e-6,
+                               atol=1e-12)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(32, 1200), fanout=st.sampled_from([8, 32]),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_knn_join_tau_monotone_in_k(n, fanout, seed):
+    """The k-th neighbor distance (the final τ) is monotone nondecreasing in
+    k, and a smaller k's answer is a prefix of a larger k's (distance-wise)."""
+    rng = np.random.default_rng(seed)
+    rects = uniform_rects(rng, n, eps=0.004)
+    t = rtree.build_rtree(rects, fanout=fanout)
+    outer = uniform_rects(rng, 2, eps=0.01)
+    prev_kth = None
+    prev_d = None
+    for k in (1, 4, 16):
+        fn = knn_join_vector.make_knn_join_bfs(t, k=k)
+        _, d, ctr = fn(jnp.asarray(outer))
+        assert not bool(ctr.overflow)
+        d = np.sort(np.asarray(d, np.float64), axis=1)
+        if prev_d is not None:
+            kp = prev_d.shape[1]
+            np.testing.assert_allclose(d[:, :kp], prev_d, rtol=1e-6)
+            assert (d[:, k - 1] >= prev_kth - 1e-9).all()
+        prev_kth = d[:, k - 1]
+        prev_d = d
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(256, 1500), seed=st.integers(0, 2**31 - 1),
+       cap=st.sampled_from([1, 2, 4]))
+def test_property_knn_join_beam_within_bound(n, seed, cap):
+    """Beam-fallback results stay within the exact results' distance bound:
+    distances are elementwise ≥ the exact ones (the beam only loses
+    candidates) and every returned id sits at its true distance."""
+    from repro.core.geometry import mindist_rect_matrix_np
+    rng = np.random.default_rng(seed)
+    rects = uniform_rects(rng, n, eps=0.004)
+    t = rtree.build_rtree(rects, fanout=8)
+    outer = uniform_rects(rng, 2, eps=0.01)
+    k = 8
+    _, od = brute_force_knn_join(outer, rects, k)
+    caps = tuple(cap for _ in range(t.height - 1))
+    fn = knn_join_vector.make_knn_join_bfs(t, k=k, caps=caps)
+    ids, d, _ = fn(jnp.asarray(outer))
+    ids, d = np.asarray(ids), np.asarray(d, np.float64)
+    assert (np.sort(d, axis=1) >= np.sort(od, axis=1) - 1e-6).all()
+    for i in range(len(outer)):
+        valid = ids[i] >= 0
+        true_d = mindist_rect_matrix_np(outer[i], rects[ids[i][valid]])[0]
+        np.testing.assert_allclose(true_d, d[i][valid], rtol=1e-4,
+                                   atol=1e-9)

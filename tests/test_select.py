@@ -7,6 +7,14 @@ from repro.core import flat as flatmod
 from repro.core import rtree, select_scalar, select_vector
 
 from conftest import brute_select, uniform_rects
+from oracle import LAYOUTS, assert_matches_oracle
+
+
+def test_select_matches_oracle_harness():
+    """The layout × backend matrix via the shared differential harness
+    (tests/oracle.py)."""
+    assert_matches_oracle("select", layouts=LAYOUTS,
+                          backends=(None, "xla"), seeds=(5,))
 
 
 def _queries(rng, b, side):
