@@ -1,0 +1,99 @@
+"""Fused vs unfused whole-level traversal: dispatches + wall-clock.
+
+The headline claim of the fused kernels is *fewer device-program launches
+per query batch* — each BFS level collapses from a score kernel plus 2-3
+XLA emission stages over materialized (B, C, F) intermediates to one fused
+launch (``Counters.dispatches``, see core/counters.py for the stage model).
+This bench records, for select and kNN on a tree of height ≥ 3:
+
+  dispatches   — unfused vs fused per query batch (deterministic counter)
+  ms           — median wall-clock per batch, measured on the xla backend
+                 (the interpret-comparable mode: both paths run the same
+                 jitted jnp math, so the comparison isolates the algorithm
+                 rather than the Pallas interpreter)
+
+and writes the acceptance summary to ``BENCH_fused.json``:
+``dispatch_ratio`` ≥ 3 for both operators is the asserted bar
+(``python -m benchmarks.bench_fused --dryrun`` exits non-zero below it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax.numpy as jnp
+
+from repro.core import knn_vector, rtree, select_vector
+
+from .common import Rows, point_rects, square_queries, time_fn, uniform_points
+
+
+def run(n: int = 200_000, fanout: int = 16, batch: int = 16, k: int = 8,
+        result_cap: int = 4096, backend: str = "xla",
+        out_json: str = "BENCH_fused.json", seed: int = 0):
+    rows = Rows("fused")
+    rects = point_rects(n, seed)
+    tree = rtree.build_rtree(rects, fanout=fanout)
+    qs = jnp.asarray(square_queries(batch, 0.001, seed + 1))
+    pts = jnp.asarray(uniform_points(batch, seed + 2))
+    summary = {"n": n, "fanout": fanout, "height": tree.height,
+               "batch": batch, "backend": backend, "ops": {}}
+
+    cells = (
+        ("select",
+         lambda fused: select_vector.make_select_bfs(
+             tree, result_cap=result_cap, backend=backend, fused=fused), qs),
+        ("knn",
+         lambda fused: knn_vector.make_knn_bfs(
+             tree, k=k, backend=backend, fused=fused), pts),
+    )
+    for name, make, arg in cells:
+        res = {}
+        for fused in (False, True):
+            dt, out = time_fn(make(fused), arg)
+            ctr = out[-1]
+            variant = "fused" if fused else "unfused"
+            res[variant] = {"ms": dt * 1e3,
+                            "dispatches": int(ctr.dispatches)}
+            rows.add(op=name, variant=variant, ms=dt * 1e3,
+                     dispatches=int(ctr.dispatches),
+                     height=tree.height)
+        res["dispatch_ratio"] = (res["unfused"]["dispatches"] /
+                                 res["fused"]["dispatches"])
+        res["speedup"] = res["unfused"]["ms"] / res["fused"]["ms"]
+        summary["ops"][name] = res
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(summary, f, indent=2)
+        print(f"wrote {out_json}")
+    return rows, summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--fanout", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--dryrun", action="store_true",
+                    help="small CI-lane sizes (still height >= 3)")
+    ap.add_argument("--out", default="BENCH_fused.json")
+    args = ap.parse_args(argv)
+    n = 20_000 if args.dryrun else args.n
+    _, summary = run(n=n, fanout=args.fanout, batch=args.batch, k=args.k,
+                     out_json=args.out)
+    assert summary["height"] >= 3, "tree too shallow for the dispatch claim"
+    failures = [op for op, r in summary["ops"].items()
+                if r["dispatch_ratio"] < 3.0]
+    for op, r in summary["ops"].items():
+        print(f"{op}: dispatches {r['unfused']['dispatches']} -> "
+              f"{r['fused']['dispatches']} "
+              f"({r['dispatch_ratio']:.2f}x), wall-clock "
+              f"{r['unfused']['ms']:.2f}ms -> {r['fused']['ms']:.2f}ms "
+              f"({r['speedup']:.2f}x)")
+    if failures:
+        raise SystemExit(f"dispatch ratio < 3x for: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -20,7 +20,7 @@ def main(argv=None):
                     help="tiny sizes (CI smoke)")
     ap.add_argument("--only", default=None,
                     help="comma list: select,sweeps,join,knn,knn-join,"
-                         "service,lm")
+                         "fused,service,lm")
     ap.add_argument("--out-dir", default="runs/bench")
     args = ap.parse_args(argv)
 
@@ -71,6 +71,15 @@ def main(argv=None):
         print(f"[knn-join sweep]  n={n_sel}")
         all_rows.append(bench_knn_join.run(
             n=n_sel, ks=(1, 8) if args.quick else (1, 8, 64)))
+    if want("fused"):
+        from . import bench_fused
+        n_fused = 20_000 if args.quick else (1_000_000 if args.full
+                                             else 200_000)
+        print(f"[fused vs unfused dispatches]  n={n_fused}")
+        rows, _ = bench_fused.run(
+            n=n_fused, out_json=os.path.join(args.out_dir,
+                                             "BENCH_fused.json"))
+        all_rows.append(rows)
     if want("service"):
         from . import bench_service
         print(f"[spatial service]  n={n_service}")

@@ -14,6 +14,29 @@ import jax
 import jax.numpy as jnp
 
 
+def _scatter_compact(arrays, mask: jax.Array, cap: int, fill: int):
+    """Shared mask→prefix-sum→scatter core: compact each (B, M) array of
+    ``arrays`` under one mask into ``cap`` slots (the positions — the
+    expensive part — are computed once).  Returns (outs, count, overflow)
+    with count the per-row qualifying total (may exceed cap)."""
+    mask = mask.astype(jnp.bool_)
+    b, m = mask.shape
+    pos = jnp.cumsum(mask, axis=1) - 1                      # inclusive-1 scan
+    pos = jnp.where(mask, pos, cap)                         # park invalids
+    pos = jnp.minimum(pos, cap)                             # overflow parks too
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, m))
+    outs = []
+    for vals in arrays:
+        if vals.shape != (b, m):
+            raise ValueError(f"values must be {(b, m)}, got {vals.shape}")
+        out = jnp.full((b, cap + 1), fill, vals.dtype)
+        out = out.at[rows, pos].set(jnp.where(mask, vals, fill), mode="drop",
+                                    unique_indices=False)
+        outs.append(out[:, :cap])
+    count = mask.sum(axis=1).astype(jnp.int32)
+    return outs, count, count > cap
+
+
 def compact_rows(vals: jax.Array, mask: jax.Array, cap: int, fill: int = -1):
     """Row-wise compaction of ``vals`` where ``mask`` into ``cap`` slots.
 
@@ -24,17 +47,8 @@ def compact_rows(vals: jax.Array, mask: jax.Array, cap: int, fill: int = -1):
     """
     if vals.ndim != 2:
         raise ValueError("compact_rows expects (B, M)")
-    b, m = vals.shape
-    mask = mask.astype(jnp.bool_)
-    pos = jnp.cumsum(mask, axis=1) - 1                      # inclusive-1 scan
-    pos = jnp.where(mask, pos, cap)                         # park invalids
-    pos = jnp.minimum(pos, cap)                             # overflow parks too
-    rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, m))
-    out = jnp.full((b, cap + 1), fill, vals.dtype)
-    out = out.at[rows, pos].set(jnp.where(mask, vals, fill), mode="drop",
-                                unique_indices=False)
-    count = mask.sum(axis=1).astype(jnp.int32)
-    return out[:, :cap], count, count > cap
+    (out,), count, ovf = _scatter_compact((vals,), mask, cap, fill)
+    return out, count, ovf
 
 
 def beam_rows(vals: jax.Array, dists: jax.Array, mask: jax.Array, cap: int,
@@ -81,14 +95,5 @@ def compact_1d(vals: jax.Array, mask: jax.Array, cap: int, fill: int = -1):
 def compact_pairs(a: jax.Array, b_: jax.Array, mask: jax.Array, cap: int,
                   fill: int = -1):
     """Compact two parallel (B, M) id arrays under one mask (join pairs)."""
-    bsz, m = a.shape
-    mask = mask.astype(jnp.bool_)
-    pos = jnp.cumsum(mask, axis=1) - 1
-    pos = jnp.minimum(jnp.where(mask, pos, cap), cap)
-    rows = jnp.broadcast_to(jnp.arange(bsz)[:, None], (bsz, m))
-    oa = jnp.full((bsz, cap + 1), fill, a.dtype)
-    ob = jnp.full((bsz, cap + 1), fill, b_.dtype)
-    oa = oa.at[rows, pos].set(jnp.where(mask, a, fill), mode="drop")
-    ob = ob.at[rows, pos].set(jnp.where(mask, b_, fill), mode="drop")
-    count = mask.sum(axis=1).astype(jnp.int32)
-    return oa[:, :cap], ob[:, :cap], count, count > cap
+    (oa, ob), count, ovf = _scatter_compact((a, b_), mask, cap, fill)
+    return oa, ob, count, ovf

@@ -13,6 +13,13 @@ reproduce the paper's relative claims:
   pruned_inner       — inner entries skipped by O4/O5 shrinking
   masked_waste       — lanes evaluated but masked off (TPU branch-free waste)
   overflow           — frontier/result capacity overflow flag (0/1)
+  dispatches         — device-program launches the host loop issues: each
+                       pallas_call plus each post-kernel XLA op-stage over a
+                       materialized (B, C, F) intermediate counts as one (a
+                       pallas_call is opaque to XLA, so every stage after it
+                       is a separate round-trip on a real accelerator).  The
+                       per-level stage model is the DISPATCH_* constants
+                       below; fused kernels collapse a level to one.
 """
 from __future__ import annotations
 
@@ -20,6 +27,16 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+
+# Per-BFS-level dispatch model (see ``dispatches`` above).  Unfused levels
+# hand (B, C, F) tensors back to XLA, so each emission stage is its own
+# launch; fused levels run score→emit inside one pallas_call.
+DISPATCH_SELECT_LEVEL = 3      # score kernel + compaction scan + scatter
+DISPATCH_KNN_INNER = 4         # score + τ top-k + beam top-k + beam gather
+DISPATCH_KNN_LEAF = 3          # score + result top-k + result gather
+DISPATCH_JOIN_LEVEL = 4        # prune metadata + tile masks + scan + scatter
+DISPATCH_FUSED_LEVEL = 1       # one fused pallas_call per level
+DISPATCH_JOIN_FUSED_LEVEL = 2  # prune-metadata pre-pass + fused pallas_call
 
 
 @jax.tree_util.register_pytree_node_class
@@ -36,6 +53,8 @@ class Counters:
     branches: jax.Array | int = 0    # conditional branch points (scalar
                                      # variants only -- TPU code is
                                      # branch-free; paper S3 logical/bitwise)
+    dispatches: jax.Array | int = 0  # device-program launches (DISPATCH_*
+                                     # stage model above)
 
     def tree_flatten(self):
         f = dataclasses.fields(self)

@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 
 from .compaction import compact_pairs
-from .counters import Counters
+from .counters import (DISPATCH_JOIN_FUSED_LEVEL, DISPATCH_JOIN_LEVEL,
+                       Counters)
 from .geometry import pad_values
 from .join_scalar import elevate
 from .layouts import LevelD0, LevelD1, LevelD2, d0_unpack, tree_layout
@@ -103,7 +104,8 @@ def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
                   result_cap: int = 65536,
                   pair_caps: Optional[Sequence[int]] = None,
                   o3: bool = False, o4: bool = False,
-                  o5: Optional[str] = None, backend: Optional[str] = None):
+                  o5: Optional[str] = None, backend: Optional[str] = None,
+                  fused: bool = False):
     """Build the jitted pair-frontier join: () → (pairs (R,2), n, Counters).
 
     ``o5``: None | 'dense' | 'gather' — how flip indices are computed (both
@@ -112,12 +114,20 @@ def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
     ``backend``: None → jnp tile math; 'pallas'/'pallas_interpret'/'xla' →
     mask tiles via kernels/ops.join_pair_masks with O3/O4 tile skipping
     driven by the scalar-prefetch pruning metadata (D1 only).
+
+    ``fused=True`` (requires a kernel backend): one fused whole-level device
+    program per descent step (kernels/ops.join_level_fused) — the tile
+    predicate and the pair compress-store run in-kernel, so no
+    (P, F_out, F_in) mask intermediate is materialized; bit-compatible with
+    the unfused path (counters included, except ``dispatches``).
     """
     sorted_ok = tree_o.sort_key == "lx" and tree_i.sort_key == "lx"
     if (o3 or o4 or o5) and not sorted_ok:
         raise ValueError("O3/O4/O5 require trees built with sort_key='lx'")
     if backend is not None and layout != "d1":
         raise ValueError("kernel backend requires layout d1")
+    if fused and backend is None:
+        raise ValueError("fused join requires a kernel backend")
     h = max(tree_o.height, tree_i.height)
     to, ti = elevate(tree_o, h), elevate(tree_i, h)
     layers_o = tree_layout(to, layout)
@@ -132,7 +142,7 @@ def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
     def run(layers_o_, layers_i_):
         o_ids = jnp.zeros((1,), jnp.int32)
         i_ids = jnp.zeros((1,), jnp.int32)
-        c = Counters(*([jnp.int32(0)] * 8))
+        c = Counters(*([jnp.int32(0)] * 10))
         for t in range(h):
             li = h - 1 - t
             (olx, oly, ohx, ohy, optr), stages = _gather_children(
@@ -142,6 +152,7 @@ def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
             pair_valid = (o_ids >= 0) & (i_ids >= 0)
             o_valid = (optr >= 0) & pair_valid[:, None]
             i_valid = (iptr >= 0) & pair_valid[:, None]
+            fused_out = None
             if backend is not None:
                 from repro.kernels import ops as _kops
                 oc = layers_o_[li].coords
@@ -150,10 +161,21 @@ def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
                 ac, fm = _kops.join_prune_metadata(
                     o_ids, i_ids, oc, icr, to=to_, o3=o3,
                     o45=bool(o4 or o5))
-                m = _kops.join_pair_masks(
-                    o_ids, i_ids, ac, fm, oc, icr, to=to_,
-                    ti=min(128, icr.shape[2]), backend=backend).astype(bool)
-                m = m & o_valid[:, :, None] & i_valid[:, None, :]
+                if fused:
+                    # fused whole-level step: predicate + pair compress-
+                    # store in-kernel; only the compacted pair frontier and
+                    # its count come back (counter inputs below are the
+                    # (P, F) child gathers, never a (P, Fo, Fi) mask)
+                    fused_out = _kops.join_level_fused(
+                        o_ids, i_ids, ac, fm, oc, icr,
+                        layers_o_[li].ptr, layers_i_[li].ptr,
+                        cap=pair_caps[t], to=to_, backend=backend)
+                else:
+                    m = _kops.join_pair_masks(
+                        o_ids, i_ids, ac, fm, oc, icr, to=to_,
+                        ti=min(128, icr.shape[2]),
+                        backend=backend).astype(bool)
+                    m = m & o_valid[:, :, None] & i_valid[:, None, :]
             else:
                 # dense (F_out, F_in) tile predicate — 4 (D1/D0) or 2 (D2)
                 # compare stages
@@ -170,7 +192,11 @@ def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
             if o3:
                 max_ihx = ihx.max(axis=1)           # padding hi = -PAD
                 alive = o_valid & (olx <= max_ihx[:, None])
-                m = m & alive[:, :, None]
+                if fused_out is None:
+                    # counter modelling only — the intersect predicate
+                    # already implies ``alive`` (olx <= max ihx), so the
+                    # fused kernel's tile-granular skip loses no exactness
+                    m = m & alive[:, :, None]
                 c.pruned_outer = c.pruned_outer + \
                     (o_valid.sum() - alive.sum()).astype(jnp.int32)
             if o4 or o5:
@@ -192,18 +218,25 @@ def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
             c.vector_ops = c.vector_ops + \
                 (pair_valid.sum() * stages).astype(jnp.int32)
 
-            p, fo = optr.shape
-            fi = iptr.shape[1]
-            a_vals = jnp.broadcast_to(optr[:, :, None], (p, fo, fi))
-            b_vals = jnp.broadcast_to(iptr[:, None, :], (p, fo, fi))
-            cap = pair_caps[t]
-            oa, ob, cnt, ovf = compact_pairs(
-                a_vals.reshape(1, -1), b_vals.reshape(1, -1),
-                m.reshape(1, -1), cap)
-            c.enqueued = c.enqueued + cnt[0]
-            c.overflow = c.overflow | ovf[0].astype(jnp.int32)
-            o_ids, i_ids = oa[0], ob[0]
-            n_pairs = cnt[0]
+            if fused_out is not None:
+                o_ids, i_ids, n_pairs, f_ovf = fused_out
+                c.enqueued = c.enqueued + n_pairs
+                c.overflow = c.overflow | f_ovf.astype(jnp.int32)
+                c.dispatches = c.dispatches + DISPATCH_JOIN_FUSED_LEVEL
+            else:
+                p, fo = optr.shape
+                fi = iptr.shape[1]
+                a_vals = jnp.broadcast_to(optr[:, :, None], (p, fo, fi))
+                b_vals = jnp.broadcast_to(iptr[:, None, :], (p, fo, fi))
+                cap = pair_caps[t]
+                oa, ob, cnt, ovf = compact_pairs(
+                    a_vals.reshape(1, -1), b_vals.reshape(1, -1),
+                    m.reshape(1, -1), cap)
+                c.enqueued = c.enqueued + cnt[0]
+                c.overflow = c.overflow | ovf[0].astype(jnp.int32)
+                c.dispatches = c.dispatches + DISPATCH_JOIN_LEVEL
+                o_ids, i_ids = oa[0], ob[0]
+                n_pairs = cnt[0]
         pairs = jnp.stack([o_ids, i_ids], axis=1)
         return pairs, n_pairs, c
 

@@ -100,7 +100,7 @@ def _rect_dists_for_level(layer, ids: jax.Array, qrects: jax.Array,
 
 def make_knn_join_bfs(tree: RTree, k: int, layout: str = "d1",
                       caps: Optional[Sequence[int]] = None,
-                      backend: Optional[str] = None):
+                      backend: Optional[str] = None, fused: bool = False):
     """Build the jitted batched kNN-join: rects (B, 4) → (ids, dists,
     Counters).
 
@@ -110,11 +110,19 @@ def make_knn_join_bfs(tree: RTree, k: int, layout: str = "d1",
     'pallas_interpret' / 'xla' → kernels/ops.py pair-distance evaluation over
     the level-global D1 arrays (requires layout='d1'), with the
     leaf-specialized variant (no MINMAXDIST store) at the leaf level.
+
+    ``fused=True`` (requires a kernel backend): one fused whole-level device
+    program per level (kernels/ops.knn_join_level_fused /
+    knn_join_leaf_fused) — τ top-k, pruning, and the best-first beam run
+    in-kernel; bit-compatible with the unfused path, ``Counters.dispatches``
+    drops to 1 per level.
     """
     if k <= 0:
         raise ValueError("k must be positive")
     if backend is not None and layout != "d1":
         raise ValueError("kernel backend requires layout d1")
+    if fused and backend is None:
+        raise ValueError("fused kNN-join requires a kernel backend")
     layers = None if backend is not None else tree_layout(tree, layout)
     if caps is None:
         caps = knn_frontier_caps(tree, k)
@@ -133,15 +141,27 @@ def make_knn_join_bfs(tree: RTree, k: int, layout: str = "d1",
             return md, mmd, lvl.child[jnp.maximum(ids, 0)], 4
         return _rect_dists_for_level(layers_[li], ids, qrects, leaf)
 
+    def fused_level(levels_, li, ids, qrects, tau, leaf, cap):
+        from repro.kernels import ops as _kops
+        lvl = levels_[li]
+        args = (ids, qrects, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child)
+        if leaf:
+            return _kops.knn_join_leaf_fused(*args, k=k, backend=backend)
+        tighten = ids.shape[1] * lvl.lx.shape[1] >= k
+        return _kops.knn_join_level_fused(*args, tau, cap=cap, k=k,
+                                          tighten=tighten, backend=backend)
+
     # the traversal loop (τ tightening, MINDIST pruning, beam enqueue, leaf
     # top-k, counters) is knn_vector's — only the scoring differs
-    run = _make_distance_bfs(tree.height, k, caps, score)
+    run = _make_distance_bfs(tree.height, k, caps, score,
+                             fused_level=fused_level if fused else None)
     return functools.partial(run, layers, levels)
 
 
 def knn_join(tree_o: RTree, tree_i: RTree, k: int, layout: str = "d1",
              caps: Optional[Sequence[int]] = None,
-             backend: Optional[str] = None, batch: int = 4096
+             backend: Optional[str] = None, fused: bool = False,
+             batch: int = 4096
              ) -> Tuple[np.ndarray, np.ndarray, Counters]:
     """All-pairs kNN-join of two trees: every data rect of ``tree_o`` against
     the k nearest data rects of ``tree_i``.
@@ -153,7 +173,7 @@ def knn_join(tree_o: RTree, tree_i: RTree, k: int, layout: str = "d1",
     index; chunks are padded to the batch size so the engine compiles once.
     """
     fn = make_knn_join_bfs(tree_i, k=k, layout=layout, caps=caps,
-                           backend=backend)
+                           backend=backend, fused=fused)
     outer = np.asarray(tree_o.rects, np.float32)
     n = len(outer)
     ids = np.full((n, k), -1, np.int64)

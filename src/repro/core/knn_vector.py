@@ -40,10 +40,12 @@ import jax
 import jax.numpy as jnp
 
 from .compaction import beam_rows
-from .counters import Counters
+from .counters import (DISPATCH_FUSED_LEVEL, DISPATCH_KNN_INNER,
+                       DISPATCH_KNN_LEAF, Counters)
 from .geometry import (DIST_PAD, DIST_VALID_MAX, mindist, mindist_pairs,
                        minmaxdist)
-from .layouts import LevelD0, LevelD1, LevelD2, d0_unpack, tree_layout
+from .layouts import (LevelD0, LevelD1, LevelD2, d0_unpack,
+                      round_up_to_lanes, tree_layout)
 from .rtree import RTree
 
 
@@ -99,17 +101,21 @@ def knn_frontier_caps(tree: RTree, k: int, slack: int = 4,
 
     The τ-ball at level li (distance li from the leaves) covers ~k/F^li
     nodes for point data; ``slack`` absorbs MBR overlap and boundary effects.
-    Caps are clamped to the level's node count.
+    Caps are clamped to the level's node count, then rounded up to a
+    multiple of the TPU lane width (layouts.LANES) so fused-kernel block
+    shapes never see ragged frontiers.
     """
     f = tree.fanout
     caps = []
     for li in range(tree.height - 2, -1, -1):
         need = -(-k // (f ** li)) * slack
-        caps.append(int(min(tree.levels[li].n_nodes, max(min_cap, need))))
+        caps.append(round_up_to_lanes(
+            min(tree.levels[li].n_nodes, max(min_cap, need))))
     return tuple(caps)
 
 
-def _make_distance_bfs(height: int, k: int, caps: Tuple[int, ...], score):
+def _make_distance_bfs(height: int, k: int, caps: Tuple[int, ...], score,
+                       fused_level=None):
     """Shared batched level-synchronous traversal behind the distance
     operators (point kNN and kNN-join).
 
@@ -122,6 +128,17 @@ def _make_distance_bfs(height: int, k: int, caps: Tuple[int, ...], score):
     (compaction.beam_rows — overflow degrades to approximate-with-bound),
     and leaf top-k extraction.  Keeping one loop means τ soundness and
     beam/overflow semantics can never drift between the two operators.
+
+    ``fused_level`` (the fused-kernel alternative to ``score``) runs the
+    whole level — scoring AND the τ/prune/beam emission — as one device
+    program and returns only the compacted outputs:
+      internal: fused_level(levels_, li, ids, queries, tau, False, cap)
+                → (next_ids (B, cap), τ (B,), valid_cnt (B,), keep_cnt (B,))
+      leaf:     fused_level(levels_, li, ids, queries, tau, True, k)
+                → (res_ids (B, k), res_d (B, k), valid_cnt (B,))
+    The loop keeps identical counter semantics (valid/keep tallies replace
+    the (B, C, F) reductions) so fused and unfused runs differ only in
+    ``dispatches``.
     """
     @jax.jit
     def run(layers_, levels_, queries: jax.Array):
@@ -134,15 +151,35 @@ def _make_distance_bfs(height: int, k: int, caps: Tuple[int, ...], score):
         enq = jnp.int32(0)
         pruned = jnp.int32(0)
         waste = jnp.int32(0)
+        disp = jnp.int32(0)
         ovf = jnp.zeros((b,), bool)
         res_ids = res_d = None
         for li in range(height - 1, -1, -1):
             leaf = li == 0
+            fcnt = (ids >= 0).sum(axis=1)
+            nodes = nodes + fcnt.sum()
+            if fused_level is not None:
+                cap = k if leaf else caps[height - 1 - li]
+                out = fused_level(levels_, li, ids, queries, tau, leaf, cap)
+                f = levels_[li].lx.shape[1]
+                stages = 4                      # fused kernels are D1-only
+                ev = stages if leaf else 2 * stages
+                preds = preds + fcnt.sum() * f * ev
+                vops = vops + fcnt.sum() * ev
+                disp = disp + DISPATCH_FUSED_LEVEL
+                if leaf:
+                    res_ids, res_d, valid_cnt = out
+                    waste = waste + fcnt.sum() * f - valid_cnt.sum()
+                else:
+                    ids, tau, valid_cnt, keep_cnt = out
+                    waste = waste + fcnt.sum() * f - valid_cnt.sum()
+                    pruned = pruned + (valid_cnt.sum() - keep_cnt.sum())
+                    enq = enq + keep_cnt.sum()
+                    ovf = ovf | (keep_cnt > cap)
+                continue
             md, mmd, ptr, stages = score(layers_, levels_, li, ids, queries,
                                          leaf)
             f = md.shape[-1]
-            fcnt = (ids >= 0).sum(axis=1)
-            nodes = nodes + fcnt.sum()
             # internal levels evaluate BOTH mindist and minmaxdist per lane
             # (the scalar baseline counts both too); the leaf needs only
             # mindist — keep the scalar-vs-vector predicate ratio honest
@@ -154,6 +191,7 @@ def _make_distance_bfs(height: int, k: int, caps: Tuple[int, ...], score):
             flat_d = md.reshape(b, -1)
             flat_ptr = ptr.reshape(b, -1)
             if leaf:
+                disp = disp + DISPATCH_KNN_LEAF
                 if flat_d.shape[1] < k:   # k > total leaf candidates
                     pad = k - flat_d.shape[1]
                     flat_d = jnp.concatenate(
@@ -169,6 +207,7 @@ def _make_distance_bfs(height: int, k: int, caps: Tuple[int, ...], score):
                 res_ids = jnp.where(found, res_ids, -1)
                 res_d = jnp.where(found, res_d, jnp.inf)
             else:
+                disp = disp + DISPATCH_KNN_INNER
                 mflat = mmd.reshape(b, -1)
                 # τ soundness needs k *distinct* children within the bound
                 # (each guarantees one object).  With fewer than k lanes the
@@ -190,7 +229,8 @@ def _make_distance_bfs(height: int, k: int, caps: Tuple[int, ...], score):
                 enq = enq + keep.sum()
         ctr = Counters(nodes_visited=nodes, predicates=preds, vector_ops=vops,
                        enqueued=enq, pruned_inner=pruned, masked_waste=waste,
-                       overflow=ovf.any().astype(jnp.int32))
+                       overflow=ovf.any().astype(jnp.int32),
+                       dispatches=disp)
         return res_ids, res_d, ctr
 
     return run
@@ -198,19 +238,30 @@ def _make_distance_bfs(height: int, k: int, caps: Tuple[int, ...], score):
 
 def make_knn_bfs(tree: RTree, k: int, layout: str = "d1",
                  caps: Optional[Sequence[int]] = None,
-                 backend: Optional[str] = None):
+                 backend: Optional[str] = None, fused: bool = False):
     """Build the jitted batched kNN: points (B, 2) → (ids, dists, Counters).
 
     ids: (B, k) rect ids sorted by distance (-1 pad when k > n_rects);
     dists: (B, k) squared distances (+inf pad).  ``backend`` as in
     make_select_bfs: None → layout-specific jnp math; 'pallas' /
     'pallas_interpret' / 'xla' → kernels/ops.py distance evaluation over the
-    level-global D1 arrays (requires layout='d1').
+    level-global D1 arrays (requires layout='d1').  The kernel path uses the
+    leaf-specialized (no-MINMAXDIST) variant at the leaf level.
+
+    ``fused=True`` (requires a kernel backend): one fused whole-level device
+    program per level (kernels/ops.knn_level_fused / knn_leaf_fused) — the
+    τ top-k, MINDIST pruning, and best-first beam emission run in-kernel, so
+    the host loop consumes only the compacted (B, cap) frontier, τ, and
+    counter tallies; no (B, C, F) intermediate exists and
+    ``Counters.dispatches`` drops to 1 per level.  Bit-compatible with the
+    unfused path.
     """
     if k <= 0:
         raise ValueError("k must be positive")
     if backend is not None and layout != "d1":
         raise ValueError("kernel backend requires layout d1")
+    if fused and backend is None:
+        raise ValueError("fused kNN requires a kernel backend")
     # kernel backends consume the level-global SoA arrays directly — don't
     # materialize (and keep alive) an unused layout copy of the tree
     layers = None if backend is not None else tree_layout(tree, layout)
@@ -227,9 +278,22 @@ def make_knn_bfs(tree: RTree, k: int, layout: str = "d1",
             lvl = levels_[li]
             md, mmd = _kops.knn_level_dists(
                 ids, points, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child,
-                backend=backend)
+                leaf=leaf, backend=backend)
             return md, mmd, lvl.child[jnp.maximum(ids, 0)], 4
         return _dists_for_level(layers_[li], ids, points)
 
-    run = _make_distance_bfs(tree.height, k, caps, score)
+    def fused_level(levels_, li, ids, points, tau, leaf, cap):
+        from repro.kernels import ops as _kops
+        lvl = levels_[li]
+        args = (ids, points, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child)
+        if leaf:
+            return _kops.knn_leaf_fused(*args, k=k, backend=backend)
+        # τ soundness gate, statically identical to the unfused loop's
+        # ``mflat.shape[1] >= k`` (C·F lanes at this level)
+        tighten = ids.shape[1] * lvl.lx.shape[1] >= k
+        return _kops.knn_level_fused(*args, tau, cap=cap, k=k,
+                                     tighten=tighten, backend=backend)
+
+    run = _make_distance_bfs(tree.height, k, caps, score,
+                             fused_level=fused_level if fused else None)
     return functools.partial(run, layers, levels)

@@ -24,6 +24,15 @@ import jax.numpy as jnp
 
 from .rtree import RTree, RTreeLevel
 
+# TPU vector lane width: frontier capacities are rounded up to a multiple of
+# this so fused-kernel block shapes never see ragged frontiers.
+LANES = 128
+
+
+def round_up_to_lanes(n: int, lanes: int = LANES) -> int:
+    """Smallest multiple of ``lanes`` that is >= n (n <= 0 → lanes)."""
+    return max(-(-int(n) // lanes), 1) * lanes
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)

@@ -28,10 +28,11 @@ import jax
 import jax.numpy as jnp
 
 from .compaction import compact_1d, compact_rows
-from .counters import Counters
+from .counters import (DISPATCH_FUSED_LEVEL, DISPATCH_SELECT_LEVEL, Counters)
 from .flat import FlatTree
 from .geometry import intersects
-from .layouts import LevelD0, LevelD1, LevelD2, d0_unpack, tree_layout
+from .layouts import (LevelD0, LevelD1, LevelD2, d0_unpack,
+                      round_up_to_lanes, tree_layout)
 from .rtree import RTree
 
 
@@ -85,34 +86,46 @@ def frontier_caps(tree: RTree, result_cap: int, slack: int = 4,
 
     Level li (distance li from the leaves) can contribute at most
     ~result_cap/F^li qualifying nodes for point data; ``slack`` absorbs MBR
-    overlap.  Caps are clamped to the level's node count and floored for TPU
-    lane alignment.
+    overlap.  Caps are clamped to the level's node count, then rounded up to
+    a multiple of the TPU lane width (layouts.LANES) so fused-kernel block
+    shapes never see ragged frontiers.
     """
     f = tree.fanout
     caps = []
     for li in range(tree.height - 2, -1, -1):
         need = -(-result_cap // (f ** li)) * slack
-        caps.append(int(min(tree.levels[li].n_nodes,
-                            max(min_cap, need))))
+        caps.append(round_up_to_lanes(min(tree.levels[li].n_nodes,
+                                          max(min_cap, need))))
     if caps:
-        caps[-1] = max(caps[-1], result_cap)
+        caps[-1] = max(caps[-1], round_up_to_lanes(result_cap))
     return tuple(caps)
 
 
 def make_select_bfs(tree: RTree, layout: str = "d1", result_cap: int = 4096,
                     caps: Optional[Sequence[int]] = None,
-                    count_only: bool = False, backend: Optional[str] = None):
+                    count_only: bool = False, backend: Optional[str] = None,
+                    fused: bool = False):
     """Build the jitted batched BFS select: queries (B,4) → results.
 
     ``backend``: None → layout-specific jnp math; 'pallas'/'pallas_interpret'/
     'xla' → route mask evaluation through kernels/ops.py (D1 only) — the
     V-O1+O2 path whose node blocks ride the scalar-prefetch DMA pipeline.
 
+    ``fused=True`` (requires a kernel backend): one fused whole-level step
+    per level — the predicate AND the compress-store enqueue run inside one
+    device program (kernels/ops.select_level_fused), so the host loop
+    consumes only the compacted (B, cap) frontier and per-query counts; no
+    (B, C, F) mask intermediate exists and ``Counters.dispatches`` drops
+    from 3 per level to 1.  Results are bit-compatible with the unfused
+    path.
+
     Returns fn(queries) → (ids (B, result_cap), counts (B,), Counters)
     (ids omitted in count_only mode).
     """
     if backend is not None and layout != "d1":
         raise ValueError("kernel backend requires layout d1")
+    if fused and backend is None:
+        raise ValueError("fused select requires a kernel backend")
     layers = tree_layout(tree, layout)
     if caps is None:
         caps = frontier_caps(tree, result_cap)
@@ -130,43 +143,68 @@ def make_select_bfs(tree: RTree, layout: str = "d1", result_cap: int = 4096,
         vops = jnp.int32(0)
         enq = jnp.int32(0)
         waste = jnp.int32(0)
+        disp = jnp.int32(0)
         ovf = jnp.zeros((b,), bool)
         counts = jnp.zeros((b,), jnp.int32)
         res = None
         for li in range(tree.height - 1, -1, -1):
-            layer = layers_[li]
-            if backend is not None:
+            cap = result_cap if li == 0 else caps[tree.height - 1 - li]
+            fcnt = (ids >= 0).sum(axis=1)
+            if fused:
                 from repro.kernels import ops as _kops
                 lvl = levels_[li]
-                mask = _kops.select_level_masks(
+                f = lvl.lx.shape[1]
+                nxt, qcnt, o = _kops.select_level_fused(
                     ids, queries, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child,
-                    backend=backend).astype(bool)
-                ptr = lvl.child[jnp.maximum(ids, 0)]
+                    cap=cap, backend=backend)
+                hits = qcnt.sum()
                 stages = 4
+                disp = disp + DISPATCH_FUSED_LEVEL
+                if li == 0:
+                    counts = qcnt
+                    if not count_only:
+                        res = nxt
+                        ovf = ovf | o
+                else:
+                    ids = nxt
+                    ovf = ovf | o
+                    enq = enq + hits
             else:
-                mask, ptr, stages = _masks_for_level(layer, ids, queries)
-            f = mask.shape[-1]
-            fcnt = (ids >= 0).sum(axis=1)
+                if backend is not None:
+                    from repro.kernels import ops as _kops
+                    lvl = levels_[li]
+                    mask = _kops.select_level_masks(
+                        ids, queries, lvl.lx, lvl.ly, lvl.hx, lvl.hy,
+                        lvl.child, backend=backend).astype(bool)
+                    ptr = lvl.child[jnp.maximum(ids, 0)]
+                    stages = 4
+                else:
+                    mask, ptr, stages = _masks_for_level(ids=ids,
+                                                         queries=queries,
+                                                         layer=layers_[li])
+                f = mask.shape[-1]
+                hits = mask.sum()
+                disp = disp + DISPATCH_SELECT_LEVEL
+                flat_mask = mask.reshape(b, -1)
+                flat_ptr = ptr.reshape(b, -1)
+                if li == 0:
+                    counts = flat_mask.sum(axis=1).astype(jnp.int32)
+                    if not count_only:
+                        res, _, o = compact_rows(flat_ptr, flat_mask,
+                                                 result_cap)
+                        ovf = ovf | o
+                else:
+                    ids, _, o = compact_rows(flat_ptr, flat_mask, cap)
+                    ovf = ovf | o
+                    enq = enq + hits
             nodes = nodes + fcnt.sum()
             preds = preds + fcnt.sum() * f * stages
             vops = vops + fcnt.sum() * stages
-            hits = mask.sum()
             waste = waste + fcnt.sum() * f - hits
-            flat_mask = mask.reshape(b, -1)
-            flat_ptr = ptr.reshape(b, -1)
-            if li == 0:
-                counts = flat_mask.sum(axis=1).astype(jnp.int32)
-                if not count_only:
-                    res, _, o = compact_rows(flat_ptr, flat_mask, result_cap)
-                    ovf = ovf | o
-            else:
-                cap = caps[tree.height - 1 - li]
-                ids, _, o = compact_rows(flat_ptr, flat_mask, cap)
-                ovf = ovf | o
-                enq = enq + hits
         ctr = Counters(nodes_visited=nodes, predicates=preds, vector_ops=vops,
                        enqueued=enq, masked_waste=waste,
-                       overflow=ovf.any().astype(jnp.int32))
+                       overflow=ovf.any().astype(jnp.int32),
+                       dispatches=disp)
         if count_only:
             return counts, ctr
         return res, counts, ctr
@@ -215,7 +253,8 @@ def make_select_dfs_vector(flat: FlatTree, result_cap: int,
             lambda st: st[1] > 0, body, init)
         ctr = Counters(nodes_visited=nodes, vector_ops=vops,
                        predicates=nodes * f * 4,
-                       overflow=ovf.astype(jnp.int32))
+                       overflow=ovf.astype(jnp.int32),
+                       dispatches=jnp.int32(1))  # one fused while-loop program
         return res, rc, ctr
 
     return functools.partial(run, flat)

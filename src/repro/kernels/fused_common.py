@@ -1,0 +1,65 @@
+"""Shared plumbing for the fused whole-level kernels.
+
+All fused kernels tile their grid over (query, frontier-chunk) with
+multi-row node blocks: each grid step DMAs ``chunk`` frontier rows as
+parallel scalar-prefetched (1, F) streams (a BlockSpec block is one
+contiguous region, so R arbitrary node rows arrive as R replicated operands
+with per-row index maps) and the kernel body stitches them into one (R, F)
+tile.  Two scalar-prefetch operands ride every call: the clamped ids drive
+the DMA index maps (padding never fetches out of bounds), the raw ids give
+the body the frontier-slot validity sign.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pad_frontier(ids, chunk: int):
+    """Pad the frontier columns to a multiple of the chunk width with -1
+    (belt and braces for callers with custom, non-lane-aligned caps).
+    Returns (padded ids, rows per chunk, number of chunks)."""
+    b, c = ids.shape
+    r = min(chunk, c)
+    cpad = -(-c // r) * r
+    if cpad != c:
+        ids = jnp.concatenate(
+            [ids, jnp.full((b, cpad - c), -1, ids.dtype)], axis=1)
+    return ids, r, cpad // r
+
+
+def stack_rows(refs):
+    """R scalar-prefetch-indexed (1, F) node-row blocks → one (R, F) tile."""
+    if len(refs) == 1:
+        return refs[0][:, :]
+    return jnp.concatenate([ref[:, :] for ref in refs], axis=0)
+
+
+def compress_store(mask, vals_refs, cnt_sm, cnt_ref, cap: int):
+    """In-kernel running compress-store: scatter each (M,) ``vals`` under
+    one flat ``mask`` into its VMEM-resident ``(1, cap)`` output block at
+    the running offset carried in SMEM scratch ``cnt_sm[0]`` — the fused
+    analogue of ``compaction._scatter_compact`` (non-qualifying and
+    overflowing lanes park at ``cap`` and drop, mirroring its (cap+1)-column
+    parking slot, so the two stay bit-compatible).  ``cnt_ref`` (the (1, 1)
+    count output) is refreshed every call; the last chunk's write wins."""
+    base = cnt_sm[0]
+    pos = jnp.where(mask, jnp.minimum(base + jnp.cumsum(mask) - 1, cap), cap)
+    for vals, out_ref in vals_refs:
+        out_ref[0, :] = out_ref[0, :].at[pos].set(
+            jnp.where(mask, vals, -1), mode="drop")
+    cnt_sm[0] = base + mask.sum().astype(jnp.int32)
+    cnt_ref[0, 0] = cnt_sm[0]
+
+
+def chunk_tile(raw_ref, node_refs, bi, ci, r):
+    """Materialize one frontier chunk: (lx, ly, hx, hy, child) each (R, F)
+    plus the validity mask combining child padding with the chunk rows'
+    original frontier-slot sign."""
+    lx = stack_rows(node_refs[0::5])
+    ly = stack_rows(node_refs[1::5])
+    hx = stack_rows(node_refs[2::5])
+    hy = stack_rows(node_refs[3::5])
+    child = stack_rows(node_refs[4::5])
+    row_ok = jnp.stack([raw_ref[bi, ci * r + i] for i in range(r)]) >= 0
+    valid = (child >= 0) & row_ok[:, None]
+    return lx, ly, hx, hy, child, valid

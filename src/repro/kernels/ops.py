@@ -13,9 +13,15 @@ import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
+from .rtree_join import join_level_fused as _join_fused_pallas
 from .rtree_join import join_pair_masks as _join_pallas
+from .rtree_knn import knn_leaf_fused as _knn_leaf_fused_pallas
 from .rtree_knn import knn_level_dists as _knn_pallas
+from .rtree_knn import knn_level_fused as _knn_fused_pallas
+from .rtree_knn_join import knn_join_leaf_fused as _knn_join_leaf_fused_pallas
 from .rtree_knn_join import knn_join_level_dists as _knn_join_pallas
+from .rtree_knn_join import knn_join_level_fused as _knn_join_fused_pallas
+from .rtree_select import select_level_fused as _select_fused_pallas
 from .rtree_select import select_level_masks as _select_pallas
 
 
@@ -41,14 +47,17 @@ def select_level_masks(ids, queries, lx, ly, hx, hy, child,
                           interpret=(b == "pallas_interpret" or not _on_tpu()))
 
 
-def knn_level_dists(ids, points, lx, ly, hx, hy, child,
-                    backend: str = "auto"):
+def knn_level_dists(ids, points, lx, ly, hx, hy, child, *,
+                    leaf: bool = False, backend: str = "auto"):
     """kNN BFS level-step distances: (B,C) ids × (B,2) points →
-    (mindist, minmaxdist) each (B,C,F) f32 with DIST_PAD on invalid lanes."""
+    (mindist, minmaxdist) each (B,C,F) f32 with DIST_PAD on invalid lanes.
+    ``leaf=True`` selects the leaf-specialized variant (no MINMAXDIST math
+    or store) and returns None for the bound."""
     b = resolve_backend(backend)
     if b == "xla":
-        return _ref.knn_level_dists_ref(ids, points, lx, ly, hx, hy, child)
-    return _knn_pallas(ids, points, lx, ly, hx, hy, child,
+        return _ref.knn_level_dists_ref(ids, points, lx, ly, hx, hy, child,
+                                        leaf=leaf)
+    return _knn_pallas(ids, points, lx, ly, hx, hy, child, leaf=leaf,
                        interpret=(b == "pallas_interpret" or not _on_tpu()))
 
 
@@ -77,6 +86,98 @@ def join_pair_masks(o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords,
     return _join_pallas(o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords,
                         to=to, ti=ti,
                         interpret=(b == "pallas_interpret" or not _on_tpu()))
+
+
+# ---------------------------------------------------------------------------
+# Fused whole-level steps (``fused=True`` operator paths): one device
+# program per BFS level — score + emission (compaction / τ top-k / beam)
+# with no (B, C, F) intermediate.  backend='xla' is the bit-compatible jnp
+# twin (the differential reference the Pallas kernels are swept against).
+# ---------------------------------------------------------------------------
+
+def select_level_fused(ids, queries, lx, ly, hx, hy, child, *, cap: int,
+                       backend: str = "auto"):
+    """Fused select level: (B,C) ids × (B,4) queries → (next_ids (B,cap),
+    counts (B,), overflow (B,)) — compact_rows' contract, in one step."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _ref.select_level_fused_ref(ids, queries, lx, ly, hx, hy,
+                                           child, cap=cap)
+    return _select_fused_pallas(
+        ids, queries, lx, ly, hx, hy, child, cap=cap,
+        interpret=(b == "pallas_interpret" or not _on_tpu()))
+
+
+def knn_level_fused(ids, points, lx, ly, hx, hy, child, tau, *, cap: int,
+                    k: int, tighten: bool, backend: str = "auto"):
+    """Fused kNN internal level: → (next_ids (B,cap), τ (B,),
+    valid_cnt (B,), keep_cnt (B,))."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _ref.knn_level_fused_ref(ids, points, lx, ly, hx, hy, child,
+                                        tau, cap=cap, k=k, tighten=tighten)
+    return _knn_fused_pallas(
+        ids, points, lx, ly, hx, hy, child, tau, cap=cap, k=k,
+        tighten=tighten,
+        interpret=(b == "pallas_interpret" or not _on_tpu()))
+
+
+def knn_leaf_fused(ids, points, lx, ly, hx, hy, child, *, k: int,
+                   backend: str = "auto"):
+    """Fused kNN leaf level: → (res_ids (B,k), res_d (B,k), valid_cnt (B,));
+    missing neighbours are (-1, +inf)."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _ref.knn_leaf_fused_ref(ids, points, lx, ly, hx, hy, child,
+                                       k=k)
+    return _knn_leaf_fused_pallas(
+        ids, points, lx, ly, hx, hy, child, k=k,
+        interpret=(b == "pallas_interpret" or not _on_tpu()))
+
+
+def knn_join_level_fused(ids, qrects, lx, ly, hx, hy, child, tau, *,
+                         cap: int, k: int, tighten: bool,
+                         backend: str = "auto"):
+    """Fused kNN-join internal level (rect queries): contract as
+    ``knn_level_fused``."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _ref.knn_join_level_fused_ref(ids, qrects, lx, ly, hx, hy,
+                                             child, tau, cap=cap, k=k,
+                                             tighten=tighten)
+    return _knn_join_fused_pallas(
+        ids, qrects, lx, ly, hx, hy, child, tau, cap=cap, k=k,
+        tighten=tighten,
+        interpret=(b == "pallas_interpret" or not _on_tpu()))
+
+
+def knn_join_leaf_fused(ids, qrects, lx, ly, hx, hy, child, *, k: int,
+                        backend: str = "auto"):
+    """Fused kNN-join leaf level (rect queries): contract as
+    ``knn_leaf_fused``."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _ref.knn_join_leaf_fused_ref(ids, qrects, lx, ly, hx, hy,
+                                            child, k=k)
+    return _knn_join_leaf_fused_pallas(
+        ids, qrects, lx, ly, hx, hy, child, k=k,
+        interpret=(b == "pallas_interpret" or not _on_tpu()))
+
+
+def join_level_fused(o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords,
+                     o_ptr, i_ptr, *, cap: int, to: int = 8,
+                     backend: str = "auto"):
+    """Fused join level: pair frontier → (out_o (cap,), out_i (cap,), count,
+    overflow) — compact_pairs' contract, in one step."""
+    b = resolve_backend(backend)
+    if b == "xla":
+        return _ref.join_level_fused_ref(
+            o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords, o_ptr,
+            i_ptr, cap=cap, to=to, ti=min(128, i_coords.shape[2]))
+    return _join_fused_pallas(
+        o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords, o_ptr, i_ptr,
+        cap=cap, to=to,
+        interpret=(b == "pallas_interpret" or not _on_tpu()))
 
 
 def join_prune_metadata(o_ids, i_ids, o_coords, i_coords, *, to: int = 8,

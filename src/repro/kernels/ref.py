@@ -4,13 +4,22 @@ Each function mirrors its kernel's contract exactly — same shapes, same
 dtypes, same padding behaviour — so the kernel sweeps in
 tests/test_kernels.py can `assert_allclose` (exact for int32 masks) across
 shapes and dtypes.
+
+The ``*_fused_ref`` twins mirror the fused whole-level kernels: score +
+emission (compaction / τ top-k / beam) in one function, built from the
+unfused refs and the shared compaction helpers — so the fused jnp path is
+bit-compatible with the unfused jnp path *by construction*, and the Pallas
+fused kernels are parity-tested against these twins.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
-from repro.core.geometry import (DIST_PAD, intersects, mindist, mindist_rect,
-                                 minmaxdist, minmaxdist_rect)
+from repro.core.compaction import beam_rows, compact_pairs, compact_rows
+from repro.core.geometry import (DIST_PAD, DIST_VALID_MAX, intersects,
+                                 mindist, mindist_rect, minmaxdist,
+                                 minmaxdist_rect)
 
 
 def knn_join_level_dists_ref(ids, qrects, lx, ly, hx, hy, child, *,
@@ -33,18 +42,23 @@ def knn_join_level_dists_ref(ids, qrects, lx, ly, hx, hy, child, *,
     return md, jnp.where(valid, mmd, pad)
 
 
-def knn_level_dists_ref(ids, points, lx, ly, hx, hy, child):
-    """Oracle for kernels.rtree_knn.knn_level_dists."""
+def knn_level_dists_ref(ids, points, lx, ly, hx, hy, child, *,
+                        leaf: bool = False):
+    """Oracle for kernels.rtree_knn.knn_level_dists (``leaf=True`` mirrors
+    the leaf-specialized variant: MINDIST only, None for the bound)."""
     safe = jnp.maximum(ids, 0)                      # (B, C)
     glx, gly = lx[safe], ly[safe]                   # (B, C, F)
     ghx, ghy = hx[safe], hy[safe]
     px = points[:, 0, None, None]
     py = points[:, 1, None, None]
     md = mindist(px, py, glx, gly, ghx, ghy)
-    mmd = minmaxdist(px, py, glx, gly, ghx, ghy)
     valid = (child[safe] >= 0) & (ids >= 0)[:, :, None]
     pad = jnp.float32(DIST_PAD)
-    return jnp.where(valid, md, pad), jnp.where(valid, mmd, pad)
+    md = jnp.where(valid, md, pad)
+    if leaf:
+        return md, None
+    mmd = minmaxdist(px, py, glx, gly, ghx, ghy)
+    return md, jnp.where(valid, mmd, pad)
 
 
 def select_level_masks_ref(ids, queries, lx, ly, hx, hy, child):
@@ -59,6 +73,110 @@ def select_level_masks_ref(ids, queries, lx, ly, hx, hy, child):
     m = intersects(qlx, qly, qhx, qhy, glx, gly, ghx, ghy)
     m = m & (child[safe] >= 0) & (ids >= 0)[:, :, None]
     return m.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Fused whole-level twins
+# ---------------------------------------------------------------------------
+
+def select_level_fused_ref(ids, queries, lx, ly, hx, hy, child, *, cap: int):
+    """Twin of kernels.rtree_select.select_level_fused: masks + compress-
+    store compaction of the qualifying children over the flat level."""
+    b = ids.shape[0]
+    mask = select_level_masks_ref(ids, queries, lx, ly, hx, hy,
+                                  child).astype(bool)
+    ptr = child[jnp.maximum(ids, 0)]
+    return compact_rows(ptr.reshape(b, -1), mask.reshape(b, -1), cap)
+
+
+def _distance_level_fused_ref(md, mmd, ptr, tau, *, cap: int, k: int,
+                              tighten: bool):
+    """Shared emission stage of the fused internal-level distance twins:
+    τ top-k tightening, MINDIST pruning, best-first beam enqueue."""
+    b = md.shape[0]
+    if tighten:
+        kth = -jax.lax.top_k(-mmd.reshape(b, -1), k)[0][:, k - 1]
+        tau = jnp.minimum(tau, kth)
+    valid = md < DIST_VALID_MAX
+    keep = valid & (md <= tau[:, None, None])
+    out, _, _ = beam_rows(ptr.reshape(b, -1), md.reshape(b, -1),
+                          keep.reshape(b, -1), cap)
+    return (out, tau, valid.sum(axis=(1, 2)).astype(jnp.int32),
+            keep.sum(axis=(1, 2)).astype(jnp.int32))
+
+
+def _distance_leaf_fused_ref(md, ptr, *, k: int):
+    """Shared emission stage of the fused leaf twins: flat result top-k."""
+    b = md.shape[0]
+    flat_d = md.reshape(b, -1)
+    flat_ptr = ptr.reshape(b, -1)
+    if flat_d.shape[1] < k:                         # k > total candidates
+        pad = k - flat_d.shape[1]
+        flat_d = jnp.concatenate(
+            [flat_d, jnp.full((b, pad), jnp.float32(DIST_PAD))], axis=1)
+        flat_ptr = jnp.concatenate(
+            [flat_ptr, jnp.full((b, pad), -1, flat_ptr.dtype)], axis=1)
+    neg_d, pos = jax.lax.top_k(-flat_d, k)
+    res_d = -neg_d
+    res_ids = jnp.take_along_axis(flat_ptr, pos, axis=1)
+    found = res_d < DIST_VALID_MAX
+    res_ids = jnp.where(found, res_ids, -1)
+    res_d = jnp.where(found, res_d, jnp.inf)
+    valid_cnt = (md < DIST_VALID_MAX).sum(axis=(1, 2)).astype(jnp.int32)
+    return res_ids, res_d, valid_cnt
+
+
+def knn_level_fused_ref(ids, points, lx, ly, hx, hy, child, tau, *,
+                        cap: int, k: int, tighten: bool):
+    """Twin of kernels.rtree_knn.knn_level_fused."""
+    md, mmd = knn_level_dists_ref(ids, points, lx, ly, hx, hy, child)
+    ptr = child[jnp.maximum(ids, 0)]
+    return _distance_level_fused_ref(md, mmd, ptr, tau, cap=cap, k=k,
+                                     tighten=tighten)
+
+
+def knn_leaf_fused_ref(ids, points, lx, ly, hx, hy, child, *, k: int):
+    """Twin of kernels.rtree_knn.knn_leaf_fused."""
+    md, _ = knn_level_dists_ref(ids, points, lx, ly, hx, hy, child,
+                                leaf=True)
+    return _distance_leaf_fused_ref(md, child[jnp.maximum(ids, 0)], k=k)
+
+
+def knn_join_level_fused_ref(ids, qrects, lx, ly, hx, hy, child, tau, *,
+                             cap: int, k: int, tighten: bool):
+    """Twin of kernels.rtree_knn_join.knn_join_level_fused."""
+    md, mmd = knn_join_level_dists_ref(ids, qrects, lx, ly, hx, hy, child)
+    ptr = child[jnp.maximum(ids, 0)]
+    return _distance_level_fused_ref(md, mmd, ptr, tau, cap=cap, k=k,
+                                     tighten=tighten)
+
+
+def knn_join_leaf_fused_ref(ids, qrects, lx, ly, hx, hy, child, *, k: int):
+    """Twin of kernels.rtree_knn_join.knn_join_leaf_fused."""
+    md, _ = knn_join_level_dists_ref(ids, qrects, lx, ly, hx, hy, child,
+                                     leaf=True)
+    return _distance_leaf_fused_ref(md, child[jnp.maximum(ids, 0)], k=k)
+
+
+def join_level_fused_ref(o_ids, i_ids, alive_cnt, flip_max, o_coords,
+                         i_coords, o_ptr, i_ptr, *, cap: int, to: int = 8,
+                         ti: int = 128):
+    """Twin of kernels.rtree_join.join_level_fused: tile masks (with O3/O4/
+    O5 skipping) + child-pointer validity + pair compress-store."""
+    m = join_pair_masks_ref(o_ids, i_ids, alive_cnt, flip_max, o_coords,
+                            i_coords, to=to, ti=ti).astype(bool)
+    so, si = jnp.maximum(o_ids, 0), jnp.maximum(i_ids, 0)
+    optr, iptr = o_ptr[so], i_ptr[si]               # (P, Fo), (P, Fi)
+    pv = (o_ids >= 0) & (i_ids >= 0)
+    m = m & ((optr >= 0) & pv[:, None])[:, :, None] \
+          & ((iptr >= 0) & pv[:, None])[:, None, :]
+    p, fo = optr.shape
+    fi = iptr.shape[1]
+    av = jnp.broadcast_to(optr[:, :, None], (p, fo, fi))
+    bv = jnp.broadcast_to(iptr[:, None, :], (p, fo, fi))
+    oa, ob, cnt, ovf = compact_pairs(av.reshape(1, -1), bv.reshape(1, -1),
+                                     m.reshape(1, -1), cap)
+    return oa[0], ob[0], cnt[0], ovf[0]
 
 
 def join_pair_masks_ref(o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords,

@@ -20,6 +20,15 @@ beyond ``flip_max`` skips the 4-stage predicate entirely (`pl.when`) and
 writes zeros — the instruction-saving the paper measures, realized as
 skipped VPU work on TPU.  The (outer, inner) node rows themselves arrive via
 scalar-prefetched DMA (O2, as in the select kernel).
+
+**Whole-level (fused)** — ``join_level_fused``: one ``pallas_call``
+processes the entire pair frontier.  Each grid step evaluates one pair's
+full (F_out × F_in) predicate tile (O3/O4/O5 skipping applied as dense
+masks) and compress-stores the qualifying (outer-child, inner-child) id
+pairs at a running offset (SMEM) into shared (1, cap) output blocks that
+stay resident in VMEM across the whole grid — bit-compatible with
+``compact_pairs`` over the flat (P·F_out·F_in) lanes, with no
+(P, F_out, F_in) HBM mask intermediate and no post-kernel XLA round-trip.
 """
 from __future__ import annotations
 
@@ -29,6 +38,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .fused_common import compress_store as _compress_store
 
 
 def _join_kernel(o_ids, i_ids, alive_cnt, flip_max, o_ref, i_ref,
@@ -108,3 +119,107 @@ def join_pair_masks(o_ids, i_ids, alive_cnt, flip_max,
     # validity is re-applied here, exactly as in the select wrapper.
     valid = ((o_ids >= 0) & (i_ids >= 0))[:, None, None].astype(jnp.int32)
     return fn(safe_o, safe_i, alive_cnt, flip_max, o_coords, i_coords) * valid
+
+
+# ---------------------------------------------------------------------------
+# Fused whole-level kernel: tile predicate + in-kernel pair compress-store
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cap", "to", "interpret"))
+def join_level_fused(o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords,
+                     o_ptr, i_ptr, *, cap: int, to: int = 8,
+                     interpret: bool = True):
+    """Evaluate AND compact one pair-frontier level, fused.
+
+    o_ids/i_ids: (P,) int32 node ids (-1 pad) — scalar-prefetched.
+    alive_cnt / flip_max: O3 / O4-O5 pruning bounds (join_prune_metadata).
+    o_coords/i_coords: (N, 4, F) D1 coords arrays; o_ptr/i_ptr: (N, F) int32
+    child-id arrays of the two levels.
+    → (out_o (cap,), out_i (cap,) compacted child-id pairs (-1 pad),
+    count (may exceed cap), overflow bool) — ``compact_pairs``'s contract
+    applied to the flat (P·F_out·F_in) lanes.
+    """
+    p = o_ids.shape[0]
+    fo, fi = o_coords.shape[2], i_coords.shape[2]
+    to = min(to, fo)
+    if fo % to:
+        raise ValueError(f"outer fanout {fo} not divisible by tile {to}")
+    na = fo // to
+    if flip_max.shape != (p, na):
+        raise ValueError(f"flip_max must be {(p, na)}, got {flip_max.shape}")
+    ti = min(128, fi)
+    safe_o = jnp.maximum(o_ids, 0)
+    safe_i = jnp.maximum(i_ids, 0)
+
+    def kernel(so_ref, si_ref, ro_ref, ri_ref, ac_ref, fm_ref,
+               oc_ref, ic_ref, op_ref, ip_ref,
+               oo_ref, oi_ref, cnt_ref, cnt_sm):
+        pi = pl.program_id(0)
+
+        @pl.when(pi == 0)
+        def _():
+            cnt_sm[0] = 0
+            oo_ref[0, :] = jnp.full((cap,), -1, jnp.int32)
+            oi_ref[0, :] = jnp.full((cap,), -1, jnp.int32)
+
+        olx = oc_ref[0, 0, :][:, None]
+        oly = oc_ref[0, 1, :][:, None]
+        ohx = oc_ref[0, 2, :][:, None]
+        ohy = oc_ref[0, 3, :][:, None]
+        ilx = ic_ref[0, 0, :][None, :]
+        ily = ic_ref[0, 1, :][None, :]
+        ihx = ic_ref[0, 2, :][None, :]
+        ihy = ic_ref[0, 3, :][None, :]
+        m = (olx <= ihx) & (ohx >= ilx) & (oly <= ihy) & (ohy >= ily)
+        # O3/O4/O5 tile skipping as dense masks — identical semantics to the
+        # per-tile `pl.when` skip of the unfused kernel (a skipped tile is an
+        # all-zero tile either way)
+        r_idx = jax.lax.broadcasted_iota(jnp.int32, (fo, fi), 0)
+        c_idx = jax.lax.broadcasted_iota(jnp.int32, (fo, fi), 1)
+        fm_rows = jnp.repeat(
+            jnp.stack([fm_ref[pi, a] for a in range(na)]), to)
+        m = m & (((r_idx // to) * to) < ac_ref[pi]) & \
+            (((c_idx // ti) * ti) < fm_rows[:, None])
+        optr = op_ref[0, :]
+        iptr = ip_ref[0, :]
+        valid_pair = (ro_ref[pi] >= 0) & (ri_ref[pi] >= 0)
+        m = m & valid_pair & (optr >= 0)[:, None] & (iptr >= 0)[None, :]
+        mf = m.reshape(-1)
+        av = jnp.broadcast_to(optr[:, None], (fo, fi)).reshape(-1)
+        bv = jnp.broadcast_to(iptr[None, :], (fo, fi)).reshape(-1)
+        _compress_store(mf, [(av, oo_ref), (bv, oi_ref)], cnt_sm, cnt_ref,
+                        cap)
+
+    def shared(pi, so, si, ro, ri, ac, fm):
+        return (0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(p,),
+        in_specs=[
+            pl.BlockSpec((1, 4, fo),
+                         lambda pi, so, si, ro, ri, ac, fm: (so[pi], 0, 0)),
+            pl.BlockSpec((1, 4, fi),
+                         lambda pi, so, si, ro, ri, ac, fm: (si[pi], 0, 0)),
+            pl.BlockSpec((1, fo),
+                         lambda pi, so, si, ro, ri, ac, fm: (so[pi], 0)),
+            pl.BlockSpec((1, fi),
+                         lambda pi, so, si, ro, ri, ac, fm: (si[pi], 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, cap), shared),
+                   pl.BlockSpec((1, cap), shared),
+                   pl.BlockSpec((1, 1), shared)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+    )
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((1, cap), jnp.int32),
+                   jax.ShapeDtypeStruct((1, cap), jnp.int32),
+                   jax.ShapeDtypeStruct((1, 1), jnp.int32)],
+        interpret=interpret,
+    )
+    oo, oi, cnt = fn(safe_o, safe_i, o_ids, i_ids, alive_cnt, flip_max,
+                     o_coords, i_coords, o_ptr, i_ptr)
+    count = cnt[0, 0]
+    return oo[0], oi[0], count, count > cap

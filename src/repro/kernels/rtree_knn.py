@@ -1,19 +1,49 @@
-"""Pallas TPU kernel: R-tree kNN BFS level step (V-O1+O2 for distances).
+"""Pallas TPU kernels: R-tree kNN BFS level step (V-O1+O2 for distances).
 
-One grid step scores one (query, frontier-node) cell: squared MINDIST and
-squared MINMAXDIST of every child MBR of the node against the query point.
-Exactly like the select kernel, the frontier node ids ride the
-**scalar-prefetch operand** (`PrefetchScalarGridSpec`) so the BlockSpec index
-maps translate the id in SMEM into the HBM rows of the node's SoA arrays and
-Pallas' pipelined DMA fetches the node block for step k+1 while step k
-computes — the paper's software prefetching (O2) mapped to the TPU DMA
-pipeline.  One DMA of the four key-excerpt rows feeds *both* distance
-evaluations (MINDIST for pruning/scoring, MINMAXDIST for the τ bound), which
-is the point of fusing them into one kernel.
+Two generations of kernel live here:
 
-Layout: consumes the level-global D1 (SoA) arrays, one (1, F) row per key
-excerpt per node.  Invalid lanes (padded children, -1 frontier slots) carry
-DIST_PAD, never a qualifying distance.
+**Per-cell (unfused)** — ``knn_level_dists``: one grid step scores one
+(query, frontier-node) cell (squared MINDIST + squared MINMAXDIST of every
+child MBR against the query point) and hands the raw (B, C, F) distance
+tensors back to XLA for τ tightening, pruning, and beam compaction.  The
+frontier node ids ride the **scalar-prefetch operand**
+(`PrefetchScalarGridSpec`) so node blocks are DMA'd HBM→VMEM one grid step
+ahead of the VPU math — the paper's software prefetching (O2) mapped onto
+the TPU DMA pipeline.  ``leaf=True`` selects the leaf-specialized variant
+(no MINMAXDIST math or store — the τ bound is never consumed below the
+leaves), ported from the pair-distance kernel (rtree_knn_join.py).
+
+**Whole-level (fused)** — ``knn_level_fused`` / ``knn_leaf_fused``: one
+``pallas_call`` processes an *entire* BFS level.  The grid tiles over
+(query, τ-pass/emit-pass, frontier-chunk); each step DMAs a multi-row node
+block (``chunk`` frontier rows as parallel scalar-prefetched streams) and
+the emission stage runs *inside* the kernel:
+
+  pass 0 — running top-k of squared MINMAXDIST in VMEM scratch across the
+           frontier chunks; at the last chunk τ is tightened to the k-th
+           smallest (min with the carried-in τ) and written out.
+  pass 1 — MINDIST ≤ τ pruning, then a running best-first beam (distance,
+           child-id) of width ``cap`` merged chunk-by-chunk in VMEM scratch
+           (``lax.top_k`` on negated distances — a stable merge, so ties
+           resolve exactly as one flat top-k over the level would); at the
+           last chunk the compacted (cap,) frontier row and the per-query
+           valid/keep tallies land in the outputs.
+
+The host loop therefore receives only the compacted (B, cap) frontier, τ,
+and two counter tallies per level — no (B, C, F) HBM intermediate and no
+per-level XLA round-trips (compare ``ref.knn_level_fused_ref``, the
+bit-compatible jnp twin).  The leaf kernel is the single-pass analogue that
+merges a running (distance, id) top-k of the *results* and never touches
+MINMAXDIST.  In-kernel ``top_k``/scatter validate under interpret mode;
+Mosaic lowering of those emission ops on real TPU is tracked in ROADMAP.
+
+The generic machinery (`fused_inner_call` / `fused_leaf_call`) is shared
+with the rect-query kNN-join kernels, which pass their own distance
+formulas — one implementation, two operand widths.
+
+Layout: all kernels consume the level-global D1 (SoA) arrays, one (1, F)
+row per key excerpt per node.  Invalid lanes (padded children, -1 frontier
+slots) carry DIST_PAD, never a qualifying distance.
 """
 from __future__ import annotations
 
@@ -24,10 +54,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.geometry import DIST_PAD, mindist, minmaxdist
+from repro.core.geometry import DIST_PAD, DIST_VALID_MAX, mindist, minmaxdist
 
-# Python float: traced as a literal, not a captured const, inside the kernel.
+from .fused_common import chunk_tile as _chunk_tile
+from .fused_common import pad_frontier as _pad_frontier
+
+# Python floats: traced as literals, not captured consts, inside the kernels.
 _PAD = float(DIST_PAD)
+_VMAX = float(DIST_VALID_MAX)
 
 
 def _knn_kernel(ids_ref, p_ref, lx_ref, ly_ref, hx_ref, hy_ref, child_ref,
@@ -53,16 +87,31 @@ def _knn_kernel(ids_ref, p_ref, lx_ref, ly_ref, hx_ref, hy_ref, child_ref,
     mmd_ref[0, 0, :] = jnp.where(valid, mmd, _PAD)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _knn_leaf_kernel(ids_ref, p_ref, lx_ref, ly_ref, hx_ref, hy_ref,
+                     child_ref, md_ref):
+    # leaf-specialized: identical MINDIST sequence, no MINMAXDIST math or
+    # store — halves the kernel's output DMA on the largest frontier
+    # (ported from the pair-distance kernel, ROADMAP item)
+    px = p_ref[0, 0]
+    py = p_ref[0, 1]
+    md = mindist(px, py, lx_ref[0, :], ly_ref[0, :], hx_ref[0, :],
+                 hy_ref[0, :])
+    valid = child_ref[0, :] >= 0
+    md_ref[0, 0, :] = jnp.where(valid, md, _PAD)
+
+
+@functools.partial(jax.jit, static_argnames=("leaf", "interpret"))
 def knn_level_dists(ids, points, lx, ly, hx, hy, child, *,
-                    interpret: bool = True):
+                    leaf: bool = False, interpret: bool = True):
     """Score one BFS level for a batch of kNN queries.
 
     ids:    (B, C) int32 frontier node ids (-1 pad) — scalar-prefetched.
     points: (B, 2) query points.
     lx..hy: (N, F) level-global SoA child MBR arrays (f32).
     child:  (N, F) int32 child ids.
-    → (mindist (B, C, F), minmaxdist (B, C, F)) f32, DIST_PAD on invalid.
+    → (mindist (B, C, F), minmaxdist (B, C, F) | None) f32, DIST_PAD on
+    invalid lanes; ``leaf=True`` selects the MINMAXDIST-free variant and
+    returns None for the bound.
     """
     b, c = ids.shape
     n, f = lx.shape
@@ -71,6 +120,7 @@ def knn_level_dists(ids, points, lx, ly, hx, hy, child, *,
     def node_map(bi, ci, ids_s):
         return (ids_s[bi, ci], 0)
 
+    out_spec = pl.BlockSpec((1, 1, f), lambda bi, ci, ids_s: (bi, ci, 0))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, c),
@@ -82,22 +132,261 @@ def knn_level_dists(ids, points, lx, ly, hx, hy, child, *,
             pl.BlockSpec((1, f), node_map),
             pl.BlockSpec((1, f), node_map),
         ],
-        out_specs=[
-            pl.BlockSpec((1, 1, f), lambda bi, ci, ids_s: (bi, ci, 0)),
-            pl.BlockSpec((1, 1, f), lambda bi, ci, ids_s: (bi, ci, 0)),
-        ],
+        out_specs=[out_spec] if leaf else [out_spec, out_spec],
     )
+    shape = jax.ShapeDtypeStruct((b, c, f), jnp.float32)
     fn = pl.pallas_call(
-        _knn_kernel,
+        _knn_leaf_kernel if leaf else _knn_kernel,
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((b, c, f), jnp.float32),
-                   jax.ShapeDtypeStruct((b, c, f), jnp.float32)],
+        out_shape=[shape] if leaf else [shape, shape],
         interpret=interpret,
     )
     # Original ids enter the kernel for the validity sign test; safe ids drive
     # the index maps so padding never DMAs out of bounds.  The ids used for
     # indexing are the prefetch operand, so pass safe ids there and recover
     # validity from the broadcasted original sign afterwards.
-    md, mmd = fn(safe_ids, points, lx, ly, hx, hy, child)
+    out = fn(safe_ids, points, lx, ly, hx, hy, child)
     invalid = (ids < 0)[:, :, None]
-    return (jnp.where(invalid, _PAD, md), jnp.where(invalid, _PAD, mmd))
+    if leaf:
+        return jnp.where(invalid, _PAD, out[0]), None
+    return (jnp.where(invalid, _PAD, out[0]),
+            jnp.where(invalid, _PAD, out[1]))
+
+
+# ---------------------------------------------------------------------------
+# Fused whole-level kernels (shared point / rect machinery)
+# ---------------------------------------------------------------------------
+
+def fused_inner_call(ids, queries, lx, ly, hx, hy, child, tau, *,
+                     cap: int, k: int, tighten: bool, chunk: int,
+                     interpret: bool, md_fn, mmd_fn):
+    """One fused pallas_call for an internal BFS level (generic over the
+    query operand: ``md_fn``/``mmd_fn`` map (query scalars, lx, ly, hx, hy)
+    → (R, F) distances).  Returns (next_ids (B, cap), tau (B,),
+    valid_cnt (B,), keep_cnt (B,)) — the bit-compatible fusion of
+    score → τ top-k → prune → beam_rows (see ref.knn_level_fused_ref).
+    """
+    b, _ = ids.shape
+    n, f = lx.shape
+    qw = queries.shape[1]
+    ids, r, nc = _pad_frontier(ids, chunk)
+    safe = jnp.maximum(ids, 0)
+
+    def kernel(safe_ref, raw_ref, q_ref, *rest):
+        node_refs = rest[:5 * r]
+        tau_in_ref = rest[5 * r]
+        out_ref, tau_out_ref, stats_ref = rest[5 * r + 1:5 * r + 4]
+        topk_ref, beam_d_ref, beam_v_ref, cnt_sm, tau_sm = rest[5 * r + 4:]
+        bi = pl.program_id(0)
+        ps = pl.program_id(1)
+        ci = pl.program_id(2)
+        last = ci == nc - 1
+
+        @pl.when((ps == 0) & (ci == 0))
+        def _():
+            tau_sm[0] = tau_in_ref[0, 0]
+            cnt_sm[0] = 0
+            cnt_sm[1] = 0
+            topk_ref[0, :] = jnp.full((k,), _PAD, jnp.float32)
+            beam_d_ref[0, :] = jnp.full((cap,), _PAD, jnp.float32)
+            beam_v_ref[0, :] = jnp.full((cap,), -1, jnp.int32)
+
+        glx, gly, ghx, ghy, child_t, valid = _chunk_tile(
+            raw_ref, node_refs, bi, ci, r)
+        q = tuple(q_ref[0, i] for i in range(qw))
+
+        @pl.when(ps == 0)
+        def _():
+            # τ pass: running top-k of the MINMAXDIST bound.  The set of k
+            # smallest values is chunk-order invariant, so the k-th value is
+            # bitwise the one a flat top-k over the level would produce.
+            if tighten:
+                mmd = jnp.where(valid, mmd_fn(q, glx, gly, ghx, ghy), _PAD)
+                cand = jnp.concatenate([topk_ref[0, :], mmd.reshape(-1)])
+                topk_ref[0, :] = -jax.lax.top_k(-cand, k)[0]
+
+                @pl.when(last)
+                def _():
+                    tau_sm[0] = jnp.minimum(tau_sm[0], topk_ref[0, k - 1])
+
+            @pl.when(last)
+            def _():
+                tau_out_ref[0, 0] = tau_sm[0]
+
+        @pl.when(ps == 1)
+        def _():
+            # emit pass: MINDIST ≤ τ prune, then stable best-first beam
+            # merge — previously-kept entries precede the new chunk in the
+            # concat, so lax.top_k's lowest-index tie-breaking reproduces
+            # the flat beam_rows order exactly.
+            md = jnp.where(valid, md_fn(q, glx, gly, ghx, ghy), _PAD)
+            keep = valid & (md <= tau_sm[0])
+            cnt_sm[0] = cnt_sm[0] + valid.sum().astype(jnp.int32)
+            cnt_sm[1] = cnt_sm[1] + keep.sum().astype(jnp.int32)
+            cd = jnp.concatenate([beam_d_ref[0, :],
+                                  jnp.where(keep, md, _PAD).reshape(-1)])
+            cv = jnp.concatenate([beam_v_ref[0, :],
+                                  jnp.where(keep, child_t, -1).reshape(-1)])
+            neg, pos = jax.lax.top_k(-cd, cap)
+            beam_d_ref[0, :] = -neg
+            beam_v_ref[0, :] = jnp.take_along_axis(cv, pos, axis=0)
+
+            @pl.when(last)
+            def _():
+                found = beam_d_ref[0, :] < _VMAX
+                out_ref[0, :] = jnp.where(found, beam_v_ref[0, :], -1)
+                stats_ref[0, 0] = cnt_sm[0]
+                stats_ref[0, 1] = cnt_sm[1]
+
+    def bmap(bi, ps, ci, s, rw):
+        return (bi, 0)
+
+    in_specs = [pl.BlockSpec((1, qw), bmap)]
+    for i in range(r):
+        def node_map(bi, ps, ci, s, rw, i=i):
+            return (s[bi, ci * r + i], 0)
+        in_specs += [pl.BlockSpec((1, f), node_map)] * 5
+    in_specs.append(pl.BlockSpec((1, 1), bmap))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, 2, nc),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((1, cap), bmap),
+                   pl.BlockSpec((1, 1), bmap),
+                   pl.BlockSpec((1, 2), bmap)],
+        scratch_shapes=[
+            pltpu.VMEM((1, k), jnp.float32),      # running MINMAXDIST top-k
+            pltpu.VMEM((1, cap), jnp.float32),    # beam distances
+            pltpu.VMEM((1, cap), jnp.int32),      # beam child ids
+            pltpu.SMEM((2,), jnp.int32),          # valid / keep tallies
+            pltpu.SMEM((1,), jnp.float32),        # τ carried across passes
+        ],
+    )
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, cap), jnp.int32),
+                   jax.ShapeDtypeStruct((b, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((b, 2), jnp.int32)],
+        interpret=interpret,
+    )
+    operands = [queries] + [lx, ly, hx, hy, child] * r + \
+        [tau.reshape(b, 1).astype(jnp.float32)]
+    out_ids, tau_out, stats = fn(safe, ids, *operands)
+    return out_ids, tau_out[:, 0], stats[:, 0], stats[:, 1]
+
+
+def fused_leaf_call(ids, queries, lx, ly, hx, hy, child, *, k: int,
+                    chunk: int, interpret: bool, md_fn):
+    """One fused pallas_call for the leaf level: running (distance, id)
+    top-k of the results merged across frontier chunks — MINDIST only (the
+    leaf never consumes the MINMAXDIST bound, so the specialization is
+    structural here, not a variant flag).  Returns (res_ids (B, k),
+    res_d (B, k), valid_cnt (B,)); missing neighbours are (-1, +inf)."""
+    b, _ = ids.shape
+    n, f = lx.shape
+    qw = queries.shape[1]
+    ids, r, nc = _pad_frontier(ids, chunk)
+    safe = jnp.maximum(ids, 0)
+
+    def kernel(safe_ref, raw_ref, q_ref, *rest):
+        node_refs = rest[:5 * r]
+        ids_ref, d_ref, stats_ref = rest[5 * r:5 * r + 3]
+        beam_d_ref, beam_v_ref, cnt_sm = rest[5 * r + 3:]
+        bi = pl.program_id(0)
+        ci = pl.program_id(1)
+
+        @pl.when(ci == 0)
+        def _():
+            cnt_sm[0] = 0
+            beam_d_ref[0, :] = jnp.full((k,), _PAD, jnp.float32)
+            beam_v_ref[0, :] = jnp.full((k,), -1, jnp.int32)
+
+        glx, gly, ghx, ghy, child_t, valid = _chunk_tile(
+            raw_ref, node_refs, bi, ci, r)
+        q = tuple(q_ref[0, i] for i in range(qw))
+        md = jnp.where(valid, md_fn(q, glx, gly, ghx, ghy), _PAD)
+        cnt_sm[0] = cnt_sm[0] + valid.sum().astype(jnp.int32)
+        # result ids ride unmasked (as in the flat top-k twin): any entry
+        # still at DIST_PAD is masked to (-1, inf) at the end, so invalid
+        # lanes can never surface a qualifying id
+        cd = jnp.concatenate([beam_d_ref[0, :], md.reshape(-1)])
+        cv = jnp.concatenate([beam_v_ref[0, :], child_t.reshape(-1)])
+        neg, pos = jax.lax.top_k(-cd, k)
+        beam_d_ref[0, :] = -neg
+        beam_v_ref[0, :] = jnp.take_along_axis(cv, pos, axis=0)
+
+        @pl.when(ci == nc - 1)
+        def _():
+            found = beam_d_ref[0, :] < _VMAX
+            ids_ref[0, :] = jnp.where(found, beam_v_ref[0, :], -1)
+            d_ref[0, :] = jnp.where(found, beam_d_ref[0, :], jnp.inf)
+            stats_ref[0, 0] = cnt_sm[0]
+
+    def bmap(bi, ci, s, rw):
+        return (bi, 0)
+
+    in_specs = [pl.BlockSpec((1, qw), bmap)]
+    for i in range(r):
+        def node_map(bi, ci, s, rw, i=i):
+            return (s[bi, ci * r + i], 0)
+        in_specs += [pl.BlockSpec((1, f), node_map)] * 5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nc),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((1, k), bmap),
+                   pl.BlockSpec((1, k), bmap),
+                   pl.BlockSpec((1, 1), bmap)],
+        scratch_shapes=[
+            pltpu.VMEM((1, k), jnp.float32),      # result beam distances
+            pltpu.VMEM((1, k), jnp.int32),        # result beam ids
+            pltpu.SMEM((1,), jnp.int32),          # valid tally
+        ],
+    )
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, k), jnp.int32),
+                   jax.ShapeDtypeStruct((b, k), jnp.float32),
+                   jax.ShapeDtypeStruct((b, 1), jnp.int32)],
+        interpret=interpret,
+    )
+    out_ids, out_d, stats = fn(safe, ids, *([queries] +
+                                            [lx, ly, hx, hy, child] * r))
+    return out_ids, out_d, stats[:, 0]
+
+
+def _point_md(q, lx, ly, hx, hy):
+    return mindist(q[0], q[1], lx, ly, hx, hy)
+
+
+def _point_mmd(q, lx, ly, hx, hy):
+    return minmaxdist(q[0], q[1], lx, ly, hx, hy)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "k", "tighten", "chunk",
+                                    "interpret"))
+def knn_level_fused(ids, points, lx, ly, hx, hy, child, tau, *, cap: int,
+                    k: int, tighten: bool, chunk: int = 8,
+                    interpret: bool = True):
+    """Fused internal-level step for point kNN: (B, C) frontier → compacted
+    (B, cap) next frontier + tightened τ + valid/keep tallies, one
+    pallas_call (see module docstring)."""
+    return fused_inner_call(ids, points, lx, ly, hx, hy, child, tau,
+                            cap=cap, k=k, tighten=tighten, chunk=chunk,
+                            interpret=interpret, md_fn=_point_md,
+                            mmd_fn=_point_mmd)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "interpret"))
+def knn_leaf_fused(ids, points, lx, ly, hx, hy, child, *, k: int,
+                   chunk: int = 8, interpret: bool = True):
+    """Fused leaf-level step for point kNN: (B, C) leaf frontier → the k
+    best (id, squared distance) per query, one pallas_call."""
+    return fused_leaf_call(ids, points, lx, ly, hx, hy, child, k=k,
+                           chunk=chunk, interpret=interpret,
+                           md_fn=_point_md)

@@ -16,6 +16,13 @@ Two variants share the scoring sequence:
             bound.  The jnp path DCEs the waste under jit; an opaque
             pallas_call cannot, hence the explicit variant (ROADMAP item).
 
+The fused whole-level generation (``knn_join_level_fused`` /
+``knn_join_leaf_fused``) reuses the point-kNN fused machinery
+(rtree_knn.fused_inner_call / fused_leaf_call) with the rect-to-rect
+distance formulas: one pallas_call per BFS level with the τ top-k, MINDIST
+pruning, and best-first beam emission fused in-kernel — the host receives
+only the compacted (B, cap) frontier, τ, and counter tallies.
+
 Layout: consumes the level-global D1 (SoA) arrays.  Invalid lanes (padded
 children, -1 frontier slots) carry DIST_PAD, never a qualifying distance.
 """
@@ -29,6 +36,8 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.geometry import DIST_PAD, mindist_rect, minmaxdist_rect
+
+from .rtree_knn import fused_inner_call, fused_leaf_call
 
 # Python float: traced as a literal, not a captured const, inside the kernel.
 _PAD = float(DIST_PAD)
@@ -122,3 +131,41 @@ def knn_join_level_dists(ids, qrects, lx, ly, hx, hy, child, *,
         return jnp.where(invalid, _PAD, out[0]), None
     return (jnp.where(invalid, _PAD, out[0]),
             jnp.where(invalid, _PAD, out[1]))
+
+
+# ---------------------------------------------------------------------------
+# Fused whole-level kernels (rect-query instantiation of the shared
+# machinery in rtree_knn.py)
+# ---------------------------------------------------------------------------
+
+def _rect_md(q, lx, ly, hx, hy):
+    return mindist_rect(q[0], q[1], q[2], q[3], lx, ly, hx, hy)
+
+
+def _rect_mmd(q, lx, ly, hx, hy):
+    return minmaxdist_rect(q[0], q[1], q[2], q[3], lx, ly, hx, hy)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cap", "k", "tighten", "chunk",
+                                    "interpret"))
+def knn_join_level_fused(ids, qrects, lx, ly, hx, hy, child, tau, *,
+                         cap: int, k: int, tighten: bool, chunk: int = 8,
+                         interpret: bool = True):
+    """Fused internal-level step for kNN-join outer rects: (B, C) frontier →
+    compacted (B, cap) next frontier + tightened τ + valid/keep tallies, one
+    pallas_call (see rtree_knn.py module docstring)."""
+    return fused_inner_call(ids, qrects, lx, ly, hx, hy, child, tau,
+                            cap=cap, k=k, tighten=tighten, chunk=chunk,
+                            interpret=interpret, md_fn=_rect_md,
+                            mmd_fn=_rect_mmd)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "interpret"))
+def knn_join_leaf_fused(ids, qrects, lx, ly, hx, hy, child, *, k: int,
+                        chunk: int = 8, interpret: bool = True):
+    """Fused leaf-level step for kNN-join: the k best (id, squared rect
+    MINDIST) per outer rect, one pallas_call — structurally leaf-specialized
+    (no MINMAXDIST path exists in the leaf machinery at all)."""
+    return fused_leaf_call(ids, qrects, lx, ly, hx, hy, child, k=k,
+                           chunk=chunk, interpret=interpret, md_fn=_rect_md)

@@ -1,15 +1,30 @@
-"""Pallas TPU kernel: R-tree select BFS level step (paper §3, V-O1+O2).
+"""Pallas TPU kernels: R-tree select BFS level step (paper §3, V-O1+O2).
 
-One grid step evaluates the select predicate of one (query, frontier-node)
-cell.  The frontier node ids ride the **scalar-prefetch operand**
-(`PrefetchScalarGridSpec`): the BlockSpec index maps translate the id in SMEM
-into the HBM row of the node's SoA arrays, so Pallas' pipelined DMA fetches
-the node block for grid step k+1 *while step k computes* — the TPU-native
-equivalent of the paper's `pf_distance` software prefetching (O2).  The
-queue itself (O1) is the frontier array; compaction (compress-store
-analogue) runs as XLA cumsum+scatter outside the kernel (compaction.py).
+**Per-cell (unfused)** — ``select_level_masks``: one grid step evaluates the
+select predicate of one (query, frontier-node) cell.  The frontier node ids
+ride the **scalar-prefetch operand** (`PrefetchScalarGridSpec`): the
+BlockSpec index maps translate the id in SMEM into the HBM row of the node's
+SoA arrays, so Pallas' pipelined DMA fetches the node block for grid step
+k+1 *while step k computes* — the TPU-native equivalent of the paper's
+`pf_distance` software prefetching (O2).  The queue itself (O1) is the
+frontier array; compaction (compress-store analogue) runs as XLA
+cumsum+scatter outside the kernel (compaction.py) over a materialized
+(B, C, F) mask.
 
-Layout: the kernel consumes the level-global D1 (SoA) arrays — one (1, F)
+**Whole-level (fused)** — ``select_level_fused``: one ``pallas_call``
+processes the entire BFS level.  The grid tiles over (query,
+frontier-chunk) with multi-row node blocks, and the compress-store enqueue
+runs *inside* the kernel: mask → in-chunk prefix sum → scatter at a running
+per-query offset (SMEM) directly into the (1, cap) output frontier block,
+which stays resident in VMEM across the query's chunks — the TPU analogue
+of the paper's one-instruction ``_mm512_mask_compress_store`` enqueue (O1),
+with no (B, C, F) HBM intermediate and no post-kernel XLA round-trip.
+Bit-compatible with ``compact_rows`` over the flat level (same positions,
+same overflow parking); see ``ref.select_level_fused_ref`` for the jnp
+twin.  In-kernel scatter validates under interpret mode; Mosaic lowering on
+real TPU is tracked in ROADMAP.
+
+Layout: the kernels consume the level-global D1 (SoA) arrays — one (1, F)
 row per key excerpt per node.  F should be a multiple of 128 for full lane
 utilization on real TPUs; other F work but pad lanes (recorded as
 masked_waste in the roofline notes).
@@ -22,6 +37,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from .fused_common import chunk_tile as _chunk_tile
+from .fused_common import compress_store as _compress_store
+from .fused_common import pad_frontier as _pad_frontier
 
 
 def _select_kernel(ids_ref, q_ref, lx_ref, ly_ref, hx_ref, hy_ref, child_ref,
@@ -81,3 +100,77 @@ def select_level_masks(ids, queries, lx, ly, hx, hy, child, *,
     # index map so padding never DMAs out of bounds.
     return fn(safe_ids, queries, lx, ly, hx, hy, child) * \
         ((ids >= 0)[:, :, None]).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Fused whole-level kernel: predicate + in-kernel compress-store enqueue
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cap", "chunk", "interpret"))
+def select_level_fused(ids, queries, lx, ly, hx, hy, child, *, cap: int,
+                       chunk: int = 8, interpret: bool = True):
+    """Evaluate one BFS level AND compact the qualifying children, fused.
+
+    ids:     (B, C) int32 frontier node ids (-1 pad) — scalar-prefetched.
+    queries: (B, 4) query rects.
+    lx..hy:  (N, F) level-global SoA child MBR arrays.
+    child:   (N, F) int32 child ids.
+    → (next_ids (B, cap) compacted child ids (-1 pad), counts (B,) total
+    qualifying children (may exceed cap), overflow (B,) bool) — exactly
+    ``compact_rows``'s contract applied to the level's flat (C·F) lanes.
+    """
+    b, _ = ids.shape
+    n, f = lx.shape
+    ids, r, nc = _pad_frontier(ids, chunk)
+    safe = jnp.maximum(ids, 0)
+
+    def kernel(safe_ref, raw_ref, q_ref, *rest):
+        node_refs = rest[:5 * r]
+        out_ref, cnt_ref, cnt_sm = rest[5 * r:]
+        bi = pl.program_id(0)
+        ci = pl.program_id(1)
+
+        @pl.when(ci == 0)
+        def _():
+            cnt_sm[0] = 0
+            out_ref[0, :] = jnp.full((cap,), -1, jnp.int32)
+
+        glx, gly, ghx, ghy, child_t, valid = _chunk_tile(
+            raw_ref, node_refs, bi, ci, r)
+        qlx = q_ref[0, 0]
+        qly = q_ref[0, 1]
+        qhx = q_ref[0, 2]
+        qhy = q_ref[0, 3]
+        m = (qlx <= ghx) & (qhx >= glx) & (qly <= ghy) & (qhy >= gly)
+        m = (m & valid).reshape(-1)
+        _compress_store(m, [(child_t.reshape(-1), out_ref)], cnt_sm,
+                        cnt_ref, cap)
+
+    def bmap(bi, ci, s, rw):
+        return (bi, 0)
+
+    in_specs = [pl.BlockSpec((1, 4), bmap)]
+    for i in range(r):
+        def node_map(bi, ci, s, rw, i=i):
+            return (s[bi, ci * r + i], 0)
+        in_specs += [pl.BlockSpec((1, f), node_map)] * 5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nc),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((1, cap), bmap),
+                   pl.BlockSpec((1, 1), bmap)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+    )
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, cap), jnp.int32),
+                   jax.ShapeDtypeStruct((b, 1), jnp.int32)],
+        interpret=interpret,
+    )
+    out_ids, counts = fn(safe, ids, *([queries] +
+                                      [lx, ly, hx, hy, child] * r))
+    counts = counts[:, 0]
+    return out_ids, counts, counts > cap

@@ -1,16 +1,18 @@
 """Differential-oracle harness for the operator family.
 
-One helper — ``assert_matches_oracle(op, layouts, backends, seeds)`` — runs
-any operator cell (physical layout × kernel backend × data seed) against its
-brute-force numpy oracle, so every new operator / layout / backend cell is
-verified the same way: build a random instance, run the vectorized cell,
-compare exactly (select/join id sets) or to distance tolerance with
-id-at-reported-distance verification (kNN / kNN-join), and assert no
-overflow was flagged.
+One helper — ``assert_matches_oracle(op, layouts, backends, seeds, fused)``
+— runs any operator cell (physical layout × kernel backend × data seed ×
+fused) against its brute-force numpy oracle, so every new operator / layout
+/ backend cell is verified the same way: build a random instance, run the
+vectorized cell, compare exactly (select/join id sets) or to distance
+tolerance with id-at-reported-distance verification (kNN / kNN-join), and
+assert no overflow was flagged.
 
 Kernel backends require layout='d1' (the level-global SoA arrays); non-d1 ×
 backend cells are skipped rather than errored so callers can request full
-matrices.
+matrices.  Fused cells (whole-level kernels with in-kernel emission) only
+exist on kernel backends, so fused × backend=None cells are skipped the
+same way.
 """
 from __future__ import annotations
 
@@ -60,10 +62,10 @@ class _SelectOp:
                     cap=max(n, 64))
 
     @staticmethod
-    def run(inst, layout, backend):
+    def run(inst, layout, backend, fused=False):
         sel = select_vector.make_select_bfs(inst["tree"], layout=layout,
                                             result_cap=inst["cap"],
-                                            backend=backend)
+                                            backend=backend, fused=fused)
         return sel(jnp.asarray(inst["queries"]))
 
     @staticmethod
@@ -86,9 +88,14 @@ class _JoinOp:
                     tb=rtree.build_rtree(rb, fanout=fanout, sort_key="lx"))
 
     @staticmethod
-    def run(inst, layout, backend):
+    def run(inst, layout, backend, fused=False):
+        # fused interpret cells compact in-kernel against the full result
+        # buffer every grid step — keep the caps honest (they comfortably
+        # clear this instance's pair counts) so the sweep stays tractable
+        cap = 16384 if fused else 1 << 17
         jn = join_vector.make_join_bfs(inst["ta"], inst["tb"], layout=layout,
-                                       result_cap=1 << 17, backend=backend)
+                                       result_cap=cap, backend=backend,
+                                       fused=fused)
         return jn()
 
     @staticmethod
@@ -110,9 +117,10 @@ class _KnnOp:
                     tree=rtree.build_rtree(rects, fanout=fanout))
 
     @staticmethod
-    def run(inst, layout, backend):
+    def run(inst, layout, backend, fused=False):
         fn = knn_vector.make_knn_bfs(inst["tree"], k=inst["k"],
-                                     layout=layout, backend=backend)
+                                     layout=layout, backend=backend,
+                                     fused=fused)
         return fn(jnp.asarray(inst["queries"]))
 
     @staticmethod
@@ -135,10 +143,10 @@ class _KnnJoinOp:
                     tree=rtree.build_rtree(rects, fanout=fanout))
 
     @staticmethod
-    def run(inst, layout, backend):
+    def run(inst, layout, backend, fused=False):
         fn = knn_join_vector.make_knn_join_bfs(inst["tree"], k=inst["k"],
                                                layout=layout,
-                                               backend=backend)
+                                               backend=backend, fused=fused)
         return fn(jnp.asarray(inst["queries"]))
 
     @staticmethod
@@ -159,22 +167,28 @@ OPS = {
 
 
 def assert_matches_oracle(op: str, layouts=LAYOUTS, backends=(None,),
-                          seeds=(0,), **params):
-    """Run operator ``op`` over the (layout × backend × seed) matrix against
-    its brute-force oracle.  ``backends`` entries are None (layout-specific
-    jnp math) or kernel backends ('xla' / 'pallas_interpret'); kernel cells
-    only exist for layout='d1' and are skipped elsewhere.  ``params`` tune
-    the instance (n, fanout, batch, k, ...).  Returns the number of cells
-    actually verified (callers may assert coverage)."""
+                          seeds=(0,), fused=(False,), **params):
+    """Run operator ``op`` over the (layout × backend × seed × fused) matrix
+    against its brute-force oracle.  ``backends`` entries are None
+    (layout-specific jnp math) or kernel backends ('xla' /
+    'pallas_interpret'); kernel cells only exist for layout='d1' and are
+    skipped elsewhere, and fused cells only exist on kernel backends.
+    ``params`` tune the instance (n, fanout, batch, k, ...).  Returns the
+    number of cells actually verified (callers may assert coverage)."""
     spec = OPS[op]
     cells = 0
     for seed in seeds:
         inst = spec.make(seed, **params)
-        for layout, backend in itertools.product(layouts, backends):
+        for layout, backend, fu in itertools.product(layouts, backends,
+                                                     fused):
             if backend is not None and layout != "d1":
                 continue
-            ctx = f"{op} layout={layout} backend={backend} seed={seed}"
-            spec.check(inst, spec.run(inst, layout, backend), ctx)
+            if fu and backend is None:
+                continue
+            ctx = f"{op} layout={layout} backend={backend} seed={seed} " \
+                  f"fused={fu}"
+            spec.check(inst, spec.run(inst, layout, backend, fused=fu), ctx)
             cells += 1
-    assert cells > 0, f"no runnable cells for {op}: {layouts} × {backends}"
+    assert cells > 0, \
+        f"no runnable cells for {op}: {layouts} × {backends} × {fused}"
     return cells

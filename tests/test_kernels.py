@@ -40,6 +40,52 @@ def test_select_kernel_sweep(b, c, f, dtype):
 @pytest.mark.parametrize("b,c,f", [(1, 1, 128), (4, 8, 128), (3, 5, 256),
                                    (2, 7, 64)])
 @pytest.mark.parametrize("leaf", [False, True])
+def test_knn_kernel_sweep(b, c, f, leaf):
+    """Pallas point-distance kernel ≡ ref.py XLA path for both the generic
+    and the leaf-specialized (no MINMAXDIST store) variants (the leaf
+    variant ported from the pair-distance kernel).  MINDIST is bit-exact;
+    the MINMAXDIST bound is compared to 1 ULP — its ``d·d + d·d`` form is
+    FMA-contractible and XLA contracts differently for the kernel's (F,)
+    row trace than for the ref's (B, C, F) gather trace (pre-existing
+    since PR 1; τ pruning is sound under either rounding)."""
+    import functools
+
+    import jax
+    rng = np.random.default_rng(f * b + c + 2 * leaf)
+    n = 32
+    lx, ly, hx, hy, child = _nodes(rng, n, f, np.float32)
+    ids = rng.integers(-1, n, (b, c)).astype(np.int32)
+    pts = rng.random((b, 2)).astype(np.float32)
+    got = ops.knn_level_dists(ids, pts, lx, ly, hx, hy, child, leaf=leaf,
+                              backend="pallas_interpret")
+    ref_fn = jax.jit(functools.partial(ref.knn_level_dists_ref, leaf=leaf))
+    exp = ref_fn(ids, jnp.asarray(pts), lx, ly, hx, hy, child)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(exp[0]))
+    if leaf:
+        assert got[1] is None and exp[1] is None
+    else:
+        np.testing.assert_allclose(np.asarray(got[1]), np.asarray(exp[1]),
+                                   rtol=2e-7, atol=0)
+
+
+def test_knn_leaf_variant_matches_generic_mindist():
+    """The point-kNN leaf specialization changes what is *stored*, never the
+    MINDIST values themselves."""
+    rng = np.random.default_rng(8)
+    n, b, c, f = 16, 3, 4, 128
+    lx, ly, hx, hy, child = _nodes(rng, n, f, np.float32)
+    ids = rng.integers(-1, n, (b, c)).astype(np.int32)
+    pts = rng.random((b, 2)).astype(np.float32)
+    md_leaf, _ = ops.knn_level_dists(ids, pts, lx, ly, hx, hy, child,
+                                     leaf=True, backend="pallas_interpret")
+    md_gen, _ = ops.knn_level_dists(ids, pts, lx, ly, hx, hy, child,
+                                    leaf=False, backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(md_leaf), np.asarray(md_gen))
+
+
+@pytest.mark.parametrize("b,c,f", [(1, 1, 128), (4, 8, 128), (3, 5, 256),
+                                   (2, 7, 64)])
+@pytest.mark.parametrize("leaf", [False, True])
 def test_knn_join_kernel_sweep(b, c, f, leaf):
     """Pallas pair-distance kernel ≡ ref.py XLA path, bit-exact on float32,
     for both the generic and the leaf-specialized (no MINMAXDIST store)

@@ -116,8 +116,10 @@ def test_knn_join_oracle_matrix_extended():
     """The full matrix at larger instances — the slow-lane sweep."""
     cells = assert_matches_oracle(
         "knn_join", layouts=LAYOUTS, backends=(None,) + KERNEL_BACKENDS,
-        seeds=(0, 1, 2), n=12_000, batch=10, k=16, fanout=32)
-    assert cells == 3 * (3 + 2)     # 3 seeds × (3 layouts + 2 d1 kernels)
+        seeds=(0, 1, 2), fused=(False, True), n=12_000, batch=10, k=16,
+        fanout=32)
+    # 3 seeds × (3 layouts jnp + 2 d1 kernel backends × unfused/fused)
+    assert cells == 3 * (3 + 2 * 2)
 
 
 # ---------------------------------------------------------------------------
