@@ -1,0 +1,127 @@
+"""k-at-a-time distance browsing vs repeated fixed-k restarts.
+
+The browse operator's claim: asking for "the next k" should not cost a
+fresh root-to-leaf traversal per request.  This bench serves ``steps``
+successive batches of k neighbors per query point two ways:
+
+  browse   — one resumable session (core/knn_browse.py): the first
+             ``next_batch`` descends; later batches re-activate only the
+             τ-deferred frontier remainder (or are pure pool slices).
+  restart  — the fixed-k operator re-asked with a growing k
+             (make_knn_bfs(k), make_knn_bfs(2k), …, make_knn_bfs(steps·k)),
+             i.e. what a client must do without a resumable cursor — each
+             ask re-traverses from the root and re-pays the larger top-k.
+
+Both sides are compiled before timing.  The summary (BENCH_browse.json)
+records per-side total wall-clock, per-batch latency, the browse speedup,
+and the number of resume descents actually run — the deterministic
+"resumes ≤ steps" counter that makes the win explainable.  ``--dryrun``
+shrinks sizes for the CI slow lane and asserts the outputs of the two
+sides agree (prefix consistency end-to-end).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import knn_browse, knn_vector, rtree
+
+from .common import Rows, point_rects, time_fn, uniform_points
+
+
+def _run_browse(start, pts, steps):
+    cur = start(pts)
+    out = []
+    for _ in range(steps):
+        out.append(cur.next_batch())
+    return cur, out
+
+
+def run(n: int = 200_000, fanout: int = 16, batch: int = 16, k: int = 8,
+        steps: int = 8, out_json: str = "BENCH_browse.json", seed: int = 0,
+        check: bool = False):
+    rows = Rows("browse")
+    rects = point_rects(n, seed)
+    tree = rtree.build_rtree(rects, fanout=fanout)
+    pts = jnp.asarray(uniform_points(batch, seed + 2))
+    summary = {"n": n, "fanout": fanout, "height": tree.height,
+               "batch": batch, "k": k, "steps": steps}
+
+    # ---- browse: one resumable session, `steps` batches of k ----
+    start = knn_browse.make_browse_bfs(tree, k=k)
+    cur, warm_out = _run_browse(start, pts, steps)      # compile + warm
+    t0 = time.time()
+    iters = 3
+    for _ in range(iters):
+        cur, out = _run_browse(start, pts, steps)
+    browse_s = (time.time() - t0) / iters
+    summary["browse"] = {
+        "total_ms": browse_s * 1e3,
+        "ms_per_batch": browse_s * 1e3 / steps,
+        "descents": int(cur.state.descents),
+        "overflow": bool(cur.overflow.any()),
+    }
+    rows.add(variant="browse", ms=browse_s * 1e3,
+             ms_per_batch=browse_s * 1e3 / steps,
+             descents=int(cur.state.descents), height=tree.height)
+
+    # ---- restart: fixed-k re-asked with growing k ----
+    fns = [knn_vector.make_knn_bfs(tree, k=k * (s + 1))
+           for s in range(steps)]
+    restart_out = None
+    restart_s = 0.0
+    for s, fn in enumerate(fns):
+        dt, restart_out = time_fn(fn, pts, warmup=1, iters=3)
+        restart_s += dt
+    summary["restart"] = {
+        "total_ms": restart_s * 1e3,
+        "ms_per_batch": restart_s * 1e3 / steps,
+    }
+    rows.add(variant="restart", ms=restart_s * 1e3,
+             ms_per_batch=restart_s * 1e3 / steps,
+             descents=steps, height=tree.height)
+    summary["speedup"] = restart_s / browse_s
+
+    if check:
+        # end-to-end prefix consistency: the browsed stream equals the
+        # largest restart's answer
+        bd = np.concatenate([d for _, d in out], axis=1)
+        fd = np.asarray(restart_out[1])
+        np.testing.assert_array_equal(bd, fd)
+        assert not summary["browse"]["overflow"]
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(summary, f, indent=2)
+        print(f"wrote {out_json}")
+    return rows, summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--fanout", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--dryrun", action="store_true",
+                    help="small CI-lane sizes + output-equality check")
+    ap.add_argument("--out", default="BENCH_browse.json")
+    args = ap.parse_args(argv)
+    n = 20_000 if args.dryrun else args.n
+    _, summary = run(n=n, fanout=args.fanout, batch=args.batch, k=args.k,
+                     steps=args.steps, out_json=args.out, check=args.dryrun)
+    b, r = summary["browse"], summary["restart"]
+    print(f"browse : {b['total_ms']:.2f}ms total, "
+          f"{b['ms_per_batch']:.2f}ms/batch, {b['descents']} descents")
+    print(f"restart: {r['total_ms']:.2f}ms total, "
+          f"{r['ms_per_batch']:.2f}ms/batch, {summary['steps']} descents")
+    print(f"speedup: {summary['speedup']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

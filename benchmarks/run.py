@@ -20,7 +20,7 @@ def main(argv=None):
                     help="tiny sizes (CI smoke)")
     ap.add_argument("--only", default=None,
                     help="comma list: select,sweeps,join,knn,knn-join,"
-                         "fused,service,lm")
+                         "fused,browse,service,lm")
     ap.add_argument("--out-dir", default="runs/bench")
     args = ap.parse_args(argv)
 
@@ -79,6 +79,15 @@ def main(argv=None):
         rows, _ = bench_fused.run(
             n=n_fused, out_json=os.path.join(args.out_dir,
                                              "BENCH_fused.json"))
+        all_rows.append(rows)
+    if want("browse"):
+        from . import bench_browse
+        n_browse = 20_000 if args.quick else (1_000_000 if args.full
+                                              else 200_000)
+        print(f"[browse vs fixed-k restarts]  n={n_browse}")
+        rows, _ = bench_browse.run(
+            n=n_browse, out_json=os.path.join(args.out_dir,
+                                              "BENCH_browse.json"))
         all_rows.append(rows)
     if want("service"):
         from . import bench_service

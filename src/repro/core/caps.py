@@ -1,0 +1,123 @@
+"""Unified frontier-capacity policy for every traversal operator.
+
+All four operators size their per-level frontiers the same way: the level at
+distance ``e`` from the leaves can contribute roughly ``target / fanout^e``
+qualifying entries for point-like data, padded by a ``slack`` factor for MBR
+overlap, clamped, and (for the batched row frontiers) rounded up to the TPU
+lane width so fused-kernel block shapes never see ragged frontiers.  Before
+this module each operator carried its own copy of that formula
+(``select_vector.frontier_caps``, ``knn_vector.knn_frontier_caps``,
+``join_vector.default_pair_caps``) with the 128-lane round-up sprinkled
+across them; ``geometric_caps`` is the one implementation and the one place
+``layouts.round_up_to_lanes`` is applied.
+
+The named policies below reproduce the historical caps bit-for-bit
+(tests/test_traversal.py freezes the bench configurations as a regression).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+from .layouts import round_up_to_lanes
+
+
+def geometric_caps(n_steps: int, fanout: int, target: int, *, slack: int,
+                   min_cap: Optional[int] = None,
+                   max_cap: Optional[int] = None,
+                   level_sizes: Optional[Sequence[int]] = None,
+                   lane_round: bool = True,
+                   final: Optional[str] = None) -> Tuple[int, ...]:
+    """Geometric frontier caps, one per descent step (coarse → fine).
+
+    Step ``i`` targets the level at distance ``e = n_steps - 1 - i`` from
+    the finest step and gets ``ceil(target / fanout^e) * slack`` slots,
+    clamped to ``[min_cap, max_cap]`` (max first, then min — the historical
+    order) and to ``level_sizes[e]`` when given.  ``lane_round`` applies the
+    TPU lane round-up (the only call site of ``round_up_to_lanes`` in the
+    caps machinery).  ``final``:
+
+      None      — leave the last step as computed (kNN frontier policy)
+      'boost'   — raise the last step to at least ``target`` (select: the
+                  leaf-entering frontier must clear the result budget)
+      'target'  — overwrite the last step with ``target`` exactly (join:
+                  the last step *is* the result-pair buffer)
+    """
+    caps = []
+    for step in range(n_steps):
+        e = n_steps - 1 - step
+        cap = -(-int(target) // max(fanout ** e, 1)) * slack
+        if max_cap is not None:
+            cap = min(cap, max_cap)
+        if min_cap is not None:
+            cap = max(min_cap, cap)
+        if level_sizes is not None:
+            cap = min(cap, int(level_sizes[e]))
+        caps.append(cap)
+    if caps and final == "boost":
+        # max-then-round equals round-then-max (round-up is monotone), so
+        # the lane round-up still happens in exactly one place below
+        caps[-1] = max(caps[-1], int(target))
+    elif caps and final == "target":
+        caps[-1] = int(target)
+    if lane_round and final != "target":
+        caps = [round_up_to_lanes(c) for c in caps]
+    elif lane_round:
+        caps = [round_up_to_lanes(c) for c in caps[:-1]] + [caps[-1]]
+    return tuple(caps)
+
+
+def select_frontier_caps(tree, result_cap: int, slack: int = 4,
+                         min_cap: int = 128) -> Tuple[int, ...]:
+    """Select frontier capacity entering each level (root-1 … leaf): the
+    historical ``select_vector.frontier_caps`` policy."""
+    return geometric_caps(
+        tree.height - 1, tree.fanout, result_cap, slack=slack,
+        min_cap=min_cap,
+        level_sizes=[lvl.n_nodes for lvl in tree.levels],
+        final="boost")
+
+
+def knn_frontier_caps(tree, k: int, slack: int = 4,
+                      min_cap: int = 64) -> Tuple[int, ...]:
+    """kNN/kNN-join frontier capacity entering each level (root-1 … leaf):
+    the historical ``knn_vector.knn_frontier_caps`` policy."""
+    return geometric_caps(
+        tree.height - 1, tree.fanout, k, slack=slack, min_cap=min_cap,
+        level_sizes=[lvl.n_nodes for lvl in tree.levels])
+
+
+def join_pair_caps(height: int, fanout: int, result_cap: int,
+                   base: int = 1024) -> Tuple[int, ...]:
+    """Pair-frontier capacity after each join descent step (last = result
+    pairs): the historical ``join_vector.default_pair_caps`` policy.  Pair
+    frontiers are flat (P,) buffers consumed tile-wise, so they skip the
+    lane round-up."""
+    return geometric_caps(
+        height, fanout, result_cap, slack=4, min_cap=base,
+        max_cap=4 * result_cap, lane_round=False, final="target")
+
+
+def browse_caps(tree, k: int, slack: int = 4,
+                pool_slack: int = 16) -> Tuple[Tuple[int, ...],
+                                               Tuple[int, ...], int]:
+    """Caps bundle for the resumable distance-browsing operator.
+
+    Returns (frontier_caps, defer_caps, pool_cap):
+
+      frontier_caps — the plain kNN policy for the active descent frontier.
+      defer_caps    — per *level* (0 … height-1) capacity of the deferred
+                      beam holding τ-pruned-but-not-discarded nodes across
+                      resumes; 4× the frontier slack since rejects
+                      accumulate between batches.  The root level holds at
+                      most the root itself.
+      pool_cap      — scored-leaf candidate pool (emitted k at a time).
+    """
+    frontier = knn_frontier_caps(tree, k, slack=slack)
+    deep = geometric_caps(
+        tree.height - 1, tree.fanout, k, slack=4 * slack, min_cap=128,
+        level_sizes=[lvl.n_nodes for lvl in tree.levels])
+    # geometric_caps orders coarse → fine; defer_caps indexes by level
+    # (0 = leaf-adjacent … height-1 = root)
+    defer = tuple(reversed(deep)) + (1,)
+    pool_cap = round_up_to_lanes(max(pool_slack * k, 512))
+    return frontier, defer, pool_cap

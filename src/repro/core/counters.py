@@ -18,8 +18,9 @@ reproduce the paper's relative claims:
                        materialized (B, C, F) intermediate counts as one (a
                        pallas_call is opaque to XLA, so every stage after it
                        is a separate round-trip on a real accelerator).  The
-                       per-level stage model is the DISPATCH_* constants
-                       below; fused kernels collapse a level to one.
+                       per-level stage model is the ``StageModel`` each
+                       ``OperatorSpec`` owns (core/traversal.py); fused
+                       kernels collapse a level to one launch.
 """
 from __future__ import annotations
 
@@ -28,15 +29,34 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-# Per-BFS-level dispatch model (see ``dispatches`` above).  Unfused levels
-# hand (B, C, F) tensors back to XLA, so each emission stage is its own
-# launch; fused levels run score→emit inside one pallas_call.
-DISPATCH_SELECT_LEVEL = 3      # score kernel + compaction scan + scatter
-DISPATCH_KNN_INNER = 4         # score + τ top-k + beam top-k + beam gather
-DISPATCH_KNN_LEAF = 3          # score + result top-k + result gather
-DISPATCH_JOIN_LEVEL = 4        # prune metadata + tile masks + scan + scatter
-DISPATCH_FUSED_LEVEL = 1       # one fused pallas_call per level
-DISPATCH_JOIN_FUSED_LEVEL = 2  # prune-metadata pre-pass + fused pallas_call
+
+@dataclasses.dataclass(frozen=True)
+class StageModel:
+    """Per-BFS-level dispatch stage model owned by an ``OperatorSpec``.
+
+    Unfused levels hand (B, C, F) tensors back to XLA, so each emission
+    stage is its own launch; fused levels run score→emit inside one
+    pallas_call.  ``inner``/``leaf`` are launches per unfused internal/leaf
+    level, ``fused`` per fused level (None when the operator has no fused
+    generation).  The traversal engine derives ``Counters.dispatches``
+    from this model — it is the single source of truth, so an operator
+    cannot silently under-count its launches.
+    """
+    inner: int
+    leaf: int
+    fused: int | None = None
+
+    def total(self, height: int, *, fused: bool = False,
+              descents: int = 1) -> int:
+        """Expected dispatch tally for ``descents`` full traversals of a
+        ``height``-level tree."""
+        if fused:
+            if self.fused is None:
+                raise ValueError("operator has no fused stage model")
+            per = height * self.fused
+        else:
+            per = (height - 1) * self.inner + self.leaf
+        return per * descents
 
 
 @jax.tree_util.register_pytree_node_class
@@ -53,8 +73,8 @@ class Counters:
     branches: jax.Array | int = 0    # conditional branch points (scalar
                                      # variants only -- TPU code is
                                      # branch-free; paper S3 logical/bitwise)
-    dispatches: jax.Array | int = 0  # device-program launches (DISPATCH_*
-                                     # stage model above)
+    dispatches: jax.Array | int = 0  # device-program launches (per-spec
+                                     # StageModel above)
 
     def tree_flatten(self):
         f = dataclasses.fields(self)
@@ -74,6 +94,21 @@ class Counters:
             v = getattr(self, f.name)
             out[f.name] = int(v) if not isinstance(v, int) else v
         return out
+
+    def validate_dispatches(self, stage_model: StageModel, height: int, *,
+                            fused: bool = False,
+                            descents: int = 1) -> "Counters":
+        """Assert the recorded dispatch tally matches the owning spec's
+        stage model (``stage_model.total``) — catches a new operator that
+        silently under-counts its device-program launches."""
+        expected = stage_model.total(height, fused=fused, descents=descents)
+        got = int(self.dispatches)
+        if got != expected:
+            raise AssertionError(
+                f"dispatch tally {got} != stage model "
+                f"{expected} (height={height}, fused={fused}, "
+                f"descents={descents}, model={stage_model})")
+        return self
 
 
 def zeros() -> Counters:

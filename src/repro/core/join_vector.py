@@ -21,20 +21,23 @@ Sorted-key optimizations (require ``sort_key='lx'`` trees):
   O4/O5 shrink the inner node to ``flip`` entries per outer child.
 On TPU dense math these change *counters* (work the kernel may skip), never
 results — asserted by the property tests.
+
+The level loop is the shared mask engine (core/traversal.py) run with two
+parallel id streams; this module contributes the *join spec*: the tile
+predicate score stage with its O3/O4/O5 counter modelling, the pair caps
+policy, and the kernel handles.
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .compaction import compact_pairs
-from .counters import (DISPATCH_JOIN_FUSED_LEVEL, DISPATCH_JOIN_LEVEL,
-                       Counters)
-from .geometry import pad_values
+from . import caps as caps_policy
+from . import traversal
+from .counters import StageModel
 from .join_scalar import elevate
 from .layouts import LevelD0, LevelD1, LevelD2, d0_unpack, tree_layout
 from .rtree import RTree
@@ -90,14 +93,9 @@ def flip_indices_gather(i_lx: jax.Array, o_hx: jax.Array) -> jax.Array:
 
 def default_pair_caps(height: int, fanout: int, result_cap: int,
                       base: int = 1024) -> Tuple[int, ...]:
-    """Pair-frontier capacity after each descent step (last = result pairs)."""
-    caps = []
-    for t in range(height):
-        remaining = height - 1 - t
-        need = -(-result_cap // max(fanout ** remaining, 1))
-        caps.append(int(max(base, min(need * 4, 4 * result_cap))))
-    caps[-1] = result_cap
-    return tuple(caps)
+    """Pair-frontier capacity after each descent step (last = result pairs)
+    — the unified geometric policy (core/caps.py)."""
+    return caps_policy.join_pair_caps(height, fanout, result_cap, base=base)
 
 
 def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
@@ -138,109 +136,128 @@ def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
     if len(pair_caps) != h:
         raise ValueError(f"need {h} pair caps, got {len(pair_caps)}")
 
-    @jax.jit
-    def run(layers_o_, layers_i_):
-        o_ids = jnp.zeros((1,), jnp.int32)
-        i_ids = jnp.zeros((1,), jnp.int32)
-        c = Counters(*([jnp.int32(0)] * 10))
-        for t in range(h):
-            li = h - 1 - t
-            (olx, oly, ohx, ohy, optr), stages = _gather_children(
-                layers_o_[li], o_ids)
-            (ilx, ily, ihx, ihy, iptr), _ = _gather_children(
-                layers_i_[li], i_ids)
-            pair_valid = (o_ids >= 0) & (i_ids >= 0)
-            o_valid = (optr >= 0) & pair_valid[:, None]
-            i_valid = (iptr >= 0) & pair_valid[:, None]
-            fused_out = None
-            if backend is not None:
-                from repro.kernels import ops as _kops
-                oc = layers_o_[li].coords
-                icr = layers_i_[li].coords
-                to_ = 8 if oc.shape[2] % 8 == 0 else oc.shape[2]
-                ac, fm = _kops.join_prune_metadata(
-                    o_ids, i_ids, oc, icr, to=to_, o3=o3,
-                    o45=bool(o4 or o5))
-                if fused:
-                    # fused whole-level step: predicate + pair compress-
-                    # store in-kernel; only the compacted pair frontier and
-                    # its count come back (counter inputs below are the
-                    # (P, F) child gathers, never a (P, Fo, Fi) mask)
-                    fused_out = _kops.join_level_fused(
-                        o_ids, i_ids, ac, fm, oc, icr,
-                        layers_o_[li].ptr, layers_i_[li].ptr,
-                        cap=pair_caps[t], to=to_, backend=backend)
-                else:
-                    m = _kops.join_pair_masks(
-                        o_ids, i_ids, ac, fm, oc, icr, to=to_,
-                        ti=min(128, icr.shape[2]),
-                        backend=backend).astype(bool)
-                    m = m & o_valid[:, :, None] & i_valid[:, None, :]
-            else:
-                # dense (F_out, F_in) tile predicate — 4 (D1/D0) or 2 (D2)
-                # compare stages
-                m = (olx[:, :, None] <= ihx[:, None, :]) & \
-                    (ohx[:, :, None] >= ilx[:, None, :]) & \
-                    (oly[:, :, None] <= ihy[:, None, :]) & \
-                    (ohy[:, :, None] >= ily[:, None, :])
-                m = m & o_valid[:, :, None] & i_valid[:, None, :]
+    def _score_stage_counters(o_ids, i_ids, gathered, stages, mask_or_none):
+        """Shared O3/O4/O5 counter modelling for the unfused and fused
+        paths; returns (delta, masked tile or None)."""
+        (olx, oly, ohx, ohy, optr), (ilx, ily, ihx, ihy, iptr) = gathered
+        pair_valid = (o_ids >= 0) & (i_ids >= 0)
+        o_valid = (optr >= 0) & pair_valid[:, None]
+        i_valid = (iptr >= 0) & pair_valid[:, None]
+        m = mask_or_none
+        ca = o_valid.sum(axis=1)
+        cb = i_valid.sum(axis=1)
+        base_preds = (ca * cb).sum()
+        alive = o_valid
+        po = jnp.int32(0)
+        pi = jnp.int32(0)
+        if o3:
+            max_ihx = ihx.max(axis=1)           # padding hi = -PAD
+            alive = o_valid & (olx <= max_ihx[:, None])
+            if m is not None:
+                # counter modelling only — the intersect predicate already
+                # implies ``alive`` (olx <= max ihx), so the fused kernel's
+                # tile-granular skip loses no exactness
+                m = m & alive[:, :, None]
+            po = (o_valid.sum() - alive.sum()).astype(jnp.int32)
+        if o4 or o5:
+            flip = (flip_indices_gather(ilx, ohx) if o5 == "gather"
+                    else flip_indices_dense(ilx, ohx))
+            considered = jnp.minimum(flip, cb[:, None])
+            pi = jnp.where(alive, cb[:, None] - considered, 0) \
+                .sum().astype(jnp.int32)
+            eff_preds = jnp.where(alive, considered, 0).sum()
+        else:
+            eff_preds = (alive.sum(axis=1) * cb).sum()
+        delta = dict(
+            nodes_visited=2 * pair_valid.sum().astype(jnp.int32),
+            predicates=(eff_preds * stages).astype(jnp.int32),
+            masked_waste=(base_preds - eff_preds).astype(jnp.int32),
+            vector_ops=(pair_valid.sum() * stages).astype(jnp.int32),
+            pruned_outer=po, pruned_inner=pi)
+        return delta, m, (o_valid, i_valid, optr, iptr)
 
-            ca = o_valid.sum(axis=1)
-            cb = i_valid.sum(axis=1)
-            base_preds = (ca * cb).sum()
-            alive = o_valid
-            if o3:
-                max_ihx = ihx.max(axis=1)           # padding hi = -PAD
-                alive = o_valid & (olx <= max_ihx[:, None])
-                if fused_out is None:
-                    # counter modelling only — the intersect predicate
-                    # already implies ``alive`` (olx <= max ihx), so the
-                    # fused kernel's tile-granular skip loses no exactness
-                    m = m & alive[:, :, None]
-                c.pruned_outer = c.pruned_outer + \
-                    (o_valid.sum() - alive.sum()).astype(jnp.int32)
-            if o4 or o5:
-                flip = (flip_indices_gather(ilx, ohx) if o5 == "gather"
-                        else flip_indices_dense(ilx, ohx))
-                considered = jnp.minimum(flip, cb[:, None])
-                inner_skipped = jnp.where(
-                    alive, cb[:, None] - considered, 0).sum()
-                c.pruned_inner = c.pruned_inner + \
-                    inner_skipped.astype(jnp.int32)
-                eff_preds = jnp.where(alive, considered, 0).sum()
-            else:
-                eff_preds = (alive.sum(axis=1) * cb).sum()
-            c.nodes_visited = c.nodes_visited + \
-                2 * pair_valid.sum().astype(jnp.int32)
-            c.predicates = c.predicates + (eff_preds * stages).astype(jnp.int32)
-            c.masked_waste = c.masked_waste + \
-                (base_preds - eff_preds).astype(jnp.int32)
-            c.vector_ops = c.vector_ops + \
-                (pair_valid.sum() * stages).astype(jnp.int32)
+    def score(ctx, li, frontier, qargs):
+        layers_o_, layers_i_ = ctx
+        o_ids, i_ids = frontier[0][0], frontier[1][0]   # (P,)
+        go, stages = _gather_children(layers_o_[li], o_ids)
+        gi, _ = _gather_children(layers_i_[li], i_ids)
+        (olx, oly, ohx, ohy, optr) = go
+        (ilx, ily, ihx, ihy, iptr) = gi
+        pair_valid = (o_ids >= 0) & (i_ids >= 0)
+        o_valid = (optr >= 0) & pair_valid[:, None]
+        i_valid = (iptr >= 0) & pair_valid[:, None]
+        if backend is not None:
+            from repro.kernels import ops as _kops
+            oc = layers_o_[li].coords
+            icr = layers_i_[li].coords
+            to_ = 8 if oc.shape[2] % 8 == 0 else oc.shape[2]
+            ac, fm = _kops.join_prune_metadata(
+                o_ids, i_ids, oc, icr, to=to_, o3=o3, o45=bool(o4 or o5))
+            m = _kops.join_pair_masks(
+                o_ids, i_ids, ac, fm, oc, icr, to=to_,
+                ti=min(128, icr.shape[2]), backend=backend).astype(bool)
+            m = m & o_valid[:, :, None] & i_valid[:, None, :]
+        else:
+            # dense (F_out, F_in) tile predicate — 4 (D1/D0) or 2 (D2)
+            # compare stages
+            m = (olx[:, :, None] <= ihx[:, None, :]) & \
+                (ohx[:, :, None] >= ilx[:, None, :]) & \
+                (oly[:, :, None] <= ihy[:, None, :]) & \
+                (ohy[:, :, None] >= ily[:, None, :])
+            m = m & o_valid[:, :, None] & i_valid[:, None, :]
+        delta, m, _ = _score_stage_counters(o_ids, i_ids, (go, gi), stages,
+                                            m)
+        p, fo = optr.shape
+        fi = iptr.shape[1]
+        a_vals = jnp.broadcast_to(optr[:, :, None], (p, fo, fi))
+        b_vals = jnp.broadcast_to(iptr[:, None, :], (p, fo, fi))
+        return (m.reshape(1, -1),
+                (a_vals.reshape(1, -1), b_vals.reshape(1, -1)),
+                fo, stages, delta)
 
-            if fused_out is not None:
-                o_ids, i_ids, n_pairs, f_ovf = fused_out
-                c.enqueued = c.enqueued + n_pairs
-                c.overflow = c.overflow | f_ovf.astype(jnp.int32)
-                c.dispatches = c.dispatches + DISPATCH_JOIN_FUSED_LEVEL
-            else:
-                p, fo = optr.shape
-                fi = iptr.shape[1]
-                a_vals = jnp.broadcast_to(optr[:, :, None], (p, fo, fi))
-                b_vals = jnp.broadcast_to(iptr[:, None, :], (p, fo, fi))
-                cap = pair_caps[t]
-                oa, ob, cnt, ovf = compact_pairs(
-                    a_vals.reshape(1, -1), b_vals.reshape(1, -1),
-                    m.reshape(1, -1), cap)
-                c.enqueued = c.enqueued + cnt[0]
-                c.overflow = c.overflow | ovf[0].astype(jnp.int32)
-                c.dispatches = c.dispatches + DISPATCH_JOIN_LEVEL
-                o_ids, i_ids = oa[0], ob[0]
-                n_pairs = cnt[0]
-        pairs = jnp.stack([o_ids, i_ids], axis=1)
-        return pairs, n_pairs, c
+    def fused_level(ctx, li, frontier, qargs, cap):
+        from repro.kernels import ops as _kops
+        layers_o_, layers_i_ = ctx
+        o_ids, i_ids = frontier[0][0], frontier[1][0]
+        go, stages = _gather_children(layers_o_[li], o_ids)
+        gi, _ = _gather_children(layers_i_[li], i_ids)
+        # fused whole-level step: predicate + pair compress-store in-kernel;
+        # only the compacted pair frontier and its count come back (counter
+        # inputs are the (P, F) child gathers, never a (P, Fo, Fi) mask)
+        delta, _, _ = _score_stage_counters(o_ids, i_ids, (go, gi), stages,
+                                            None)
+        oc = layers_o_[li].coords
+        icr = layers_i_[li].coords
+        to_ = 8 if oc.shape[2] % 8 == 0 else oc.shape[2]
+        ac, fm = _kops.join_prune_metadata(
+            o_ids, i_ids, oc, icr, to=to_, o3=o3, o45=bool(o4 or o5))
+        oa, ob, n_pairs, f_ovf = _kops.join_level_fused(
+            o_ids, i_ids, ac, fm, oc, icr,
+            layers_o_[li].ptr, layers_i_[li].ptr,
+            cap=cap, to=to_, backend=backend)
+        return ((oa[None], ob[None]), n_pairs[None], f_ovf[None],
+                go[0].shape[1], stages, delta)
 
-    return functools.partial(run, layers_o, layers_i)
+    run = traversal.make_mask_engine(
+        JOIN_SPEC, height=h, caps=pair_caps[:-1], result_cap=pair_caps[-1],
+        score=score, fused_level=fused_level if fused else None, n_streams=2)
+    ctx = (layers_o, layers_i)
+
+    def fn():
+        res, counts, ctr = run(ctx)
+        pairs = jnp.stack([res[0][0], res[1][0]], axis=1)
+        return pairs, counts[0], ctr
+    return fn
+
+
+JOIN_SPEC = traversal.register(traversal.OperatorSpec(
+    name="join", kind="mask",
+    stage_model=StageModel(inner=4, leaf=4, fused=2),
+    builder=make_join_bfs, caps_policy=default_pair_caps, query_width=None,
+    leaf_enqueue=True,
+    description="nested-index spatial join: pair-frontier tile predicate "
+                "with O3/O4/O5 sorted-key pruning, pair compress-store "
+                "emission"))
 
 
 def join_instruction_model(fanout: int, n_pairs: int, alive_outer: int,

@@ -1,0 +1,126 @@
+"""Resumable distance browsing — incremental kNN à la Hjaltason–Samet,
+batched over the SIMD-ified R-tree.
+
+Instead of answering a fixed k, a browse session emits neighbors k at a
+time in global distance order: ``next_batch()`` returns the next k nearest
+and can be called until the tree is exhausted.  The traversal state — the
+scored-candidate pool, the per-level τ-deferred node beams, the lost bound,
+and the accumulated counters — lives in a ``traversal.BrowseState`` pytree,
+so a session checkpoints/restores with ``jax.tree_util`` and *resumes* the
+level-synchronous descent without restarting from the root: a resume
+re-activates only the deferred nodes whose MINDIST clears the current pool
+bound.
+
+This operator is the extensibility proof of the spec-driven engine: it is a
+new ``OperatorSpec`` (this module) plus the ``resume`` entry point on the
+engine (traversal.make_browse_engine) — the score stage is *reused* from
+the fixed-k kNN spec (knn_vector.make_knn_score) and no new BFS loop
+exists anywhere.
+
+Prefix consistency: the first k emitted neighbors equal ``make_knn_bfs(k)``
+for every k (up to distance ties), as long as no bounded beam was forced to
+drop a candidate that later emission reached (``overflow`` reports exactly
+that, per query) — the hypothesis property in tests/test_properties.py.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import caps as caps_policy
+from . import traversal
+from .counters import Counters, StageModel
+from .knn_vector import make_knn_score
+from .rtree import RTree
+
+
+class BrowseCursor:
+    """One browsing session over a batch of query points.
+
+    ``next_batch()`` → (ids (B, k), sq-dists (B, k)) — the next k nearest
+    per query in global distance order ((-1, +inf) once exhausted).  A
+    descent is only run when the pool cannot provably serve the next batch
+    (some deferred subtree could still beat a pooled candidate); otherwise
+    emission is a pool slice.
+
+    ``state`` is the full traversal state as a pytree; assigning a
+    round-tripped (flattened/unflattened, restored, device-moved) state
+    back resumes the session exactly.
+    """
+
+    def __init__(self, engine, ctx, state):
+        self._init, self._needs_descent, self._resume, self._emit = engine
+        self._ctx = ctx
+        self.state = state
+
+    def next_batch(self) -> Tuple[np.ndarray, np.ndarray]:
+        if self._needs_descent(self.state):
+            self.state = self._resume(self._ctx, self.state)
+        ids, d, self.state = self._emit(self.state)
+        return np.asarray(ids), np.asarray(d)
+
+    @property
+    def counters(self) -> Counters:
+        return self.state.ctr
+
+    @property
+    def overflow(self) -> np.ndarray:
+        """(B,) bool: emission crossed the lost bound — results from that
+        row may be approximate-with-bound."""
+        return np.asarray(self.state.overflow)
+
+
+def make_browse_bfs(tree: RTree, k: int, layout: str = "d1",
+                    caps: Optional[Sequence[int]] = None,
+                    defer_caps: Optional[Sequence[int]] = None,
+                    pool_cap: Optional[int] = None,
+                    backend: Optional[str] = None):
+    """Build the browsing engine for ``tree``: returns ``start(points)`` →
+    ``BrowseCursor`` emitting ``k`` neighbors per ``next_batch()``.
+
+    One build compiles once and serves any number of sessions/batches of
+    the same query-batch shape.  ``caps``/``defer_caps``/``pool_cap``
+    default to the unified browse policy (core/caps.py); ``layout`` /
+    ``backend`` route the score stage exactly as in ``make_knn_bfs``.
+    """
+    if k <= 0:
+        raise ValueError("k must be positive")
+    ctx, score = make_knn_score(tree, layout, backend)
+    d_caps, d_defer, d_pool = caps_policy.browse_caps(tree, k)
+    caps = tuple(caps) if caps is not None else d_caps
+    defer_caps = tuple(defer_caps) if defer_caps is not None else d_defer
+    pool_cap = pool_cap if pool_cap is not None else d_pool
+    if len(caps) != tree.height - 1:
+        raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
+
+    engine = traversal.make_browse_engine(
+        BROWSE_SPEC, height=tree.height, batch_k=k, caps=caps,
+        defer_caps=defer_caps, pool_cap=pool_cap, score=score)
+    init = engine[0]
+
+    def start(points) -> BrowseCursor:
+        return BrowseCursor(engine, ctx, init(points))
+
+    return start
+
+
+def browse_knn(tree: RTree, points, k: int, **kwargs) -> BrowseCursor:
+    """Convenience: open one browsing session over ``points`` (B, 2),
+    emitting ``k`` neighbors per ``next_batch()``.  ``kwargs`` as in
+    ``make_browse_bfs``."""
+    return make_browse_bfs(tree, k, **kwargs)(points)
+
+
+# Stage model per resume descent: every internal level runs the score
+# kernel, the τ top-k, and three bounded beam merges (deferred inject,
+# frontier keep, reject stash) at 2 launches each (top-k + gather) → 8;
+# the leaf runs score + the pool beam merge → 3.  No fused generation yet
+# (the in-kernel beam lowering would mirror the kNN fused path).
+BROWSE_SPEC = traversal.register(traversal.OperatorSpec(
+    name="browse", kind="distance",
+    stage_model=StageModel(inner=8, leaf=3, fused=None),
+    builder=make_browse_bfs, caps_policy=caps_policy.browse_caps,
+    query_width=2,
+    description="resumable distance browsing: incremental kNN whose "
+                "frontier/τ/pool state round-trips through a pytree"))

@@ -6,10 +6,11 @@ nearest entries of an *inner* R-tree, under squared rect-to-rect MINDIST
 point-kNN operator).  The traversal is the join pair-frontier descended
 level-synchronously, specialized to the case where every outer element is a
 leaf-level rect: the pair frontier factorizes into one row of inner node ids
-per outer rect, a (B, C) frontier running on knn_vector's shared traversal
-engine (``_make_distance_bfs``) while child gathering reuses join_vector's
-layout dispatch (``_gather_children``) for D0/D1 and scores D2 natively in
-its pair-interleaved form.
+per outer rect, a (B, C) frontier running on the spec-driven distance
+engine (core/traversal.py, shared with point kNN and distance browsing)
+while child gathering reuses join_vector's layout dispatch
+(``_gather_children``) for D0/D1 and scores D2 natively in its
+pair-interleaved form.
 
 Per level:
 
@@ -39,11 +40,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .counters import Counters
+from . import traversal
+from .counters import Counters, StageModel
 from .geometry import (DIST_PAD, mindist_rect, mindist_rect_pairs,
                        minmaxdist_rect)
 from .join_vector import _gather_children
-from .knn_vector import _make_distance_bfs, knn_frontier_caps
+from .knn_vector import knn_frontier_caps
 from .layouts import LevelD2, tree_layout
 from .rtree import RTree
 
@@ -98,6 +100,28 @@ def _rect_dists_for_level(layer, ids: jax.Array, qrects: jax.Array,
     return md, mmd, ptr, stages
 
 
+def make_knn_join_score(tree: RTree, layout: str, backend: Optional[str]):
+    """Build the kNN-join score stage + engine context (contract as
+    ``knn_vector.make_knn_score``, with rect queries)."""
+    if backend is not None and layout != "d1":
+        raise ValueError("kernel backend requires layout d1")
+    layers = None if backend is not None else tree_layout(tree, layout)
+    levels = tree.levels if backend is not None else None
+
+    def score(ctx, li, ids, qrects, leaf):
+        layers_, levels_ = ctx
+        if backend is not None:
+            from repro.kernels import ops as _kops
+            lvl = levels_[li]
+            md, mmd = _kops.knn_join_level_dists(
+                ids, qrects, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child,
+                leaf=leaf, backend=backend)
+            return md, mmd, lvl.child[jnp.maximum(ids, 0)], 4
+        return _rect_dists_for_level(layers_[li], ids, qrects, leaf)
+
+    return (layers, levels), score
+
+
 def make_knn_join_bfs(tree: RTree, k: int, layout: str = "d1",
                       caps: Optional[Sequence[int]] = None,
                       backend: Optional[str] = None, fused: bool = False):
@@ -119,43 +143,43 @@ def make_knn_join_bfs(tree: RTree, k: int, layout: str = "d1",
     """
     if k <= 0:
         raise ValueError("k must be positive")
-    if backend is not None and layout != "d1":
-        raise ValueError("kernel backend requires layout d1")
     if fused and backend is None:
         raise ValueError("fused kNN-join requires a kernel backend")
-    layers = None if backend is not None else tree_layout(tree, layout)
+    ctx, score = make_knn_join_score(tree, layout, backend)
     if caps is None:
         caps = knn_frontier_caps(tree, k)
     caps = tuple(caps)
     if len(caps) != tree.height - 1:
         raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
-    levels = tree.levels if backend is not None else None
 
-    def score(layers_, levels_, li, ids, qrects, leaf):
-        if backend is not None:
-            from repro.kernels import ops as _kops
-            lvl = levels_[li]
-            md, mmd = _kops.knn_join_level_dists(
-                ids, qrects, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child,
-                leaf=leaf, backend=backend)
-            return md, mmd, lvl.child[jnp.maximum(ids, 0)], 4
-        return _rect_dists_for_level(layers_[li], ids, qrects, leaf)
-
-    def fused_level(levels_, li, ids, qrects, tau, leaf, cap):
+    def fused_level(ctx_, li, ids, qrects, tau, leaf, cap):
         from repro.kernels import ops as _kops
+        _, levels_ = ctx_
         lvl = levels_[li]
+        f = lvl.lx.shape[1]
         args = (ids, qrects, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child)
         if leaf:
-            return _kops.knn_join_leaf_fused(*args, k=k, backend=backend)
+            return _kops.knn_join_leaf_fused(*args, k=k,
+                                             backend=backend) + (f,)
         tighten = ids.shape[1] * lvl.lx.shape[1] >= k
         return _kops.knn_join_level_fused(*args, tau, cap=cap, k=k,
-                                          tighten=tighten, backend=backend)
+                                          tighten=tighten,
+                                          backend=backend) + (f,)
 
     # the traversal loop (τ tightening, MINDIST pruning, beam enqueue, leaf
-    # top-k, counters) is knn_vector's — only the scoring differs
-    run = _make_distance_bfs(tree.height, k, caps, score,
-                             fused_level=fused_level if fused else None)
-    return functools.partial(run, layers, levels)
+    # top-k, counters) is the shared distance engine — only scoring differs
+    run = traversal.make_distance_engine(
+        KNN_JOIN_SPEC, height=tree.height, k=k, caps=caps, score=score,
+        fused_level=fused_level if fused else None)
+    return functools.partial(run, ctx)
+
+
+KNN_JOIN_SPEC = traversal.register(traversal.OperatorSpec(
+    name="knn_join", kind="distance",
+    stage_model=StageModel(inner=4, leaf=3, fused=1),
+    builder=make_knn_join_bfs, caps_policy=knn_frontier_caps, query_width=4,
+    description="batched kNN-join: rect MINDIST/MINMAXDIST score, τ top-k "
+                "+ best-first beam emission (engine shared with point kNN)"))
 
 
 def knn_join(tree_o: RTree, tree_i: RTree, k: int, layout: str = "d1",

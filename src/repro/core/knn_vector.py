@@ -30,6 +30,11 @@ therefore approximate-with-bound — any missed true neighbor lies beyond the
 beam's worst kept frontier MINDIST — instead of arbitrarily wrong.
 
 Distances throughout are squared Euclidean (geometry.py convention).
+
+The τ/prune/beam level loop itself lives in core/traversal.py (the
+spec-driven distance engine, shared with kNN-join and the resumable
+distance-browsing operator); this module contributes the *kNN spec*: the
+layout-specific point-to-MBR score stage and the kernel handles.
 """
 from __future__ import annotations
 
@@ -39,13 +44,11 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from .compaction import beam_rows
-from .counters import (DISPATCH_FUSED_LEVEL, DISPATCH_KNN_INNER,
-                       DISPATCH_KNN_LEAF, Counters)
-from .geometry import (DIST_PAD, DIST_VALID_MAX, mindist, mindist_pairs,
-                       minmaxdist)
-from .layouts import (LevelD0, LevelD1, LevelD2, d0_unpack,
-                      round_up_to_lanes, tree_layout)
+from . import caps as caps_policy
+from . import traversal
+from .counters import StageModel
+from .geometry import DIST_PAD, mindist, mindist_pairs, minmaxdist
+from .layouts import LevelD0, LevelD1, LevelD2, d0_unpack, tree_layout
 from .rtree import RTree
 
 
@@ -97,143 +100,40 @@ def _dists_for_level(layer, ids: jax.Array, points: jax.Array):
 
 def knn_frontier_caps(tree: RTree, k: int, slack: int = 4,
                       min_cap: int = 64) -> Tuple[int, ...]:
-    """Frontier capacity entering each level (root-1 … leaf).
+    """Frontier capacity entering each level (root-1 … leaf) — the unified
+    geometric policy (core/caps.py)."""
+    return caps_policy.knn_frontier_caps(tree, k, slack=slack,
+                                         min_cap=min_cap)
 
-    The τ-ball at level li (distance li from the leaves) covers ~k/F^li
-    nodes for point data; ``slack`` absorbs MBR overlap and boundary effects.
-    Caps are clamped to the level's node count, then rounded up to a
-    multiple of the TPU lane width (layouts.LANES) so fused-kernel block
-    shapes never see ragged frontiers.
+
+def make_knn_score(tree: RTree, layout: str, backend: Optional[str]):
+    """Build the kNN score stage + its engine context for ``tree``.
+
+    Returns (ctx, score) with ``score(ctx, li, ids, points, leaf)`` →
+    (mindist, minmaxdist, child_ids, stages) — the contract of the
+    spec-driven distance engine.  Shared by the fixed-k operator and the
+    resumable distance-browsing operator (core/knn_browse.py), which is
+    exactly what makes browsing a new spec rather than a new loop.
     """
-    f = tree.fanout
-    caps = []
-    for li in range(tree.height - 2, -1, -1):
-        need = -(-k // (f ** li)) * slack
-        caps.append(round_up_to_lanes(
-            min(tree.levels[li].n_nodes, max(min_cap, need))))
-    return tuple(caps)
+    if backend is not None and layout != "d1":
+        raise ValueError("kernel backend requires layout d1")
+    # kernel backends consume the level-global SoA arrays directly — don't
+    # materialize (and keep alive) an unused layout copy of the tree
+    layers = None if backend is not None else tree_layout(tree, layout)
+    levels = tree.levels if backend is not None else None
 
+    def score(ctx, li, ids, points, leaf):
+        layers_, levels_ = ctx
+        if backend is not None:
+            from repro.kernels import ops as _kops
+            lvl = levels_[li]
+            md, mmd = _kops.knn_level_dists(
+                ids, points, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child,
+                leaf=leaf, backend=backend)
+            return md, mmd, lvl.child[jnp.maximum(ids, 0)], 4
+        return _dists_for_level(layers_[li], ids, points)
 
-def _make_distance_bfs(height: int, k: int, caps: Tuple[int, ...], score,
-                       fused_level=None):
-    """Shared batched level-synchronous traversal behind the distance
-    operators (point kNN and kNN-join).
-
-    ``score(layers_, levels_, li, ids, queries, leaf)`` evaluates one
-    level's frontier children against the batch of queries and returns
-    (mindist (B, C, F), minmaxdist (B, C, F) | None at the leaf, child_ids
-    (B, C, F), n_stages) with DIST_PAD on invalid lanes.  The loop owns
-    everything else: counter accounting, τ tightening to the k-th smallest
-    MINMAXDIST, MINDIST pruning, the best-first beam enqueue
-    (compaction.beam_rows — overflow degrades to approximate-with-bound),
-    and leaf top-k extraction.  Keeping one loop means τ soundness and
-    beam/overflow semantics can never drift between the two operators.
-
-    ``fused_level`` (the fused-kernel alternative to ``score``) runs the
-    whole level — scoring AND the τ/prune/beam emission — as one device
-    program and returns only the compacted outputs:
-      internal: fused_level(levels_, li, ids, queries, tau, False, cap)
-                → (next_ids (B, cap), τ (B,), valid_cnt (B,), keep_cnt (B,))
-      leaf:     fused_level(levels_, li, ids, queries, tau, True, k)
-                → (res_ids (B, k), res_d (B, k), valid_cnt (B,))
-    The loop keeps identical counter semantics (valid/keep tallies replace
-    the (B, C, F) reductions) so fused and unfused runs differ only in
-    ``dispatches``.
-    """
-    @jax.jit
-    def run(layers_, levels_, queries: jax.Array):
-        b = queries.shape[0]
-        ids = jnp.zeros((b, 1), jnp.int32)  # root frontier
-        tau = jnp.full((b,), DIST_PAD, jnp.float32)
-        nodes = jnp.int32(0)
-        preds = jnp.int32(0)
-        vops = jnp.int32(0)
-        enq = jnp.int32(0)
-        pruned = jnp.int32(0)
-        waste = jnp.int32(0)
-        disp = jnp.int32(0)
-        ovf = jnp.zeros((b,), bool)
-        res_ids = res_d = None
-        for li in range(height - 1, -1, -1):
-            leaf = li == 0
-            fcnt = (ids >= 0).sum(axis=1)
-            nodes = nodes + fcnt.sum()
-            if fused_level is not None:
-                cap = k if leaf else caps[height - 1 - li]
-                out = fused_level(levels_, li, ids, queries, tau, leaf, cap)
-                f = levels_[li].lx.shape[1]
-                stages = 4                      # fused kernels are D1-only
-                ev = stages if leaf else 2 * stages
-                preds = preds + fcnt.sum() * f * ev
-                vops = vops + fcnt.sum() * ev
-                disp = disp + DISPATCH_FUSED_LEVEL
-                if leaf:
-                    res_ids, res_d, valid_cnt = out
-                    waste = waste + fcnt.sum() * f - valid_cnt.sum()
-                else:
-                    ids, tau, valid_cnt, keep_cnt = out
-                    waste = waste + fcnt.sum() * f - valid_cnt.sum()
-                    pruned = pruned + (valid_cnt.sum() - keep_cnt.sum())
-                    enq = enq + keep_cnt.sum()
-                    ovf = ovf | (keep_cnt > cap)
-                continue
-            md, mmd, ptr, stages = score(layers_, levels_, li, ids, queries,
-                                         leaf)
-            f = md.shape[-1]
-            # internal levels evaluate BOTH mindist and minmaxdist per lane
-            # (the scalar baseline counts both too); the leaf needs only
-            # mindist — keep the scalar-vs-vector predicate ratio honest
-            ev = stages if leaf else 2 * stages
-            preds = preds + fcnt.sum() * f * ev
-            vops = vops + fcnt.sum() * ev
-            entry_valid = md < DIST_VALID_MAX
-            waste = waste + fcnt.sum() * f - entry_valid.sum()
-            flat_d = md.reshape(b, -1)
-            flat_ptr = ptr.reshape(b, -1)
-            if leaf:
-                disp = disp + DISPATCH_KNN_LEAF
-                if flat_d.shape[1] < k:   # k > total leaf candidates
-                    pad = k - flat_d.shape[1]
-                    flat_d = jnp.concatenate(
-                        [flat_d, jnp.full((b, pad), DIST_PAD, flat_d.dtype)],
-                        axis=1)
-                    flat_ptr = jnp.concatenate(
-                        [flat_ptr, jnp.full((b, pad), -1, flat_ptr.dtype)],
-                        axis=1)
-                neg_d, pos = jax.lax.top_k(-flat_d, k)
-                res_d = -neg_d
-                res_ids = jnp.take_along_axis(flat_ptr, pos, axis=1)
-                found = res_d < DIST_VALID_MAX
-                res_ids = jnp.where(found, res_ids, -1)
-                res_d = jnp.where(found, res_d, jnp.inf)
-            else:
-                disp = disp + DISPATCH_KNN_INNER
-                mflat = mmd.reshape(b, -1)
-                # τ soundness needs k *distinct* children within the bound
-                # (each guarantees one object).  With fewer than k lanes the
-                # truncated quantile would only guarantee C·F objects, so
-                # skip tightening; when lanes ≥ k but valid children < k the
-                # DIST_PAD lanes push the k-th value huge — no-op, sound.
-                if mflat.shape[1] >= k:
-                    kth = -jax.lax.top_k(-mflat, k)[0][:, k - 1]
-                    tau = jnp.minimum(tau, kth)
-                keep = entry_valid & (md <= tau[:, None, None])
-                pruned = pruned + (entry_valid.sum() - keep.sum())
-                cap = caps[height - 1 - li]
-                # best-first beam enqueue: on overflow keep the cap best-
-                # MINDIST children per query (approximate-with-bound) instead
-                # of dropping by lane position
-                ids, _, o = beam_rows(flat_ptr, flat_d, keep.reshape(b, -1),
-                                      cap)
-                ovf = ovf | o
-                enq = enq + keep.sum()
-        ctr = Counters(nodes_visited=nodes, predicates=preds, vector_ops=vops,
-                       enqueued=enq, pruned_inner=pruned, masked_waste=waste,
-                       overflow=ovf.any().astype(jnp.int32),
-                       dispatches=disp)
-        return res_ids, res_d, ctr
-
-    return run
+    return (layers, levels), score
 
 
 def make_knn_bfs(tree: RTree, k: int, layout: str = "d1",
@@ -258,42 +158,38 @@ def make_knn_bfs(tree: RTree, k: int, layout: str = "d1",
     """
     if k <= 0:
         raise ValueError("k must be positive")
-    if backend is not None and layout != "d1":
-        raise ValueError("kernel backend requires layout d1")
     if fused and backend is None:
         raise ValueError("fused kNN requires a kernel backend")
-    # kernel backends consume the level-global SoA arrays directly — don't
-    # materialize (and keep alive) an unused layout copy of the tree
-    layers = None if backend is not None else tree_layout(tree, layout)
+    ctx, score = make_knn_score(tree, layout, backend)
     if caps is None:
         caps = knn_frontier_caps(tree, k)
     caps = tuple(caps)
     if len(caps) != tree.height - 1:
         raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
-    levels = tree.levels if backend is not None else None
 
-    def score(layers_, levels_, li, ids, points, leaf):
-        if backend is not None:
-            from repro.kernels import ops as _kops
-            lvl = levels_[li]
-            md, mmd = _kops.knn_level_dists(
-                ids, points, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child,
-                leaf=leaf, backend=backend)
-            return md, mmd, lvl.child[jnp.maximum(ids, 0)], 4
-        return _dists_for_level(layers_[li], ids, points)
-
-    def fused_level(levels_, li, ids, points, tau, leaf, cap):
+    def fused_level(ctx_, li, ids, points, tau, leaf, cap):
         from repro.kernels import ops as _kops
+        _, levels_ = ctx_
         lvl = levels_[li]
+        f = lvl.lx.shape[1]
         args = (ids, points, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child)
         if leaf:
-            return _kops.knn_leaf_fused(*args, k=k, backend=backend)
+            return _kops.knn_leaf_fused(*args, k=k, backend=backend) + (f,)
         # τ soundness gate, statically identical to the unfused loop's
         # ``mflat.shape[1] >= k`` (C·F lanes at this level)
         tighten = ids.shape[1] * lvl.lx.shape[1] >= k
         return _kops.knn_level_fused(*args, tau, cap=cap, k=k,
-                                     tighten=tighten, backend=backend)
+                                     tighten=tighten, backend=backend) + (f,)
 
-    run = _make_distance_bfs(tree.height, k, caps, score,
-                             fused_level=fused_level if fused else None)
-    return functools.partial(run, layers, levels)
+    run = traversal.make_distance_engine(
+        KNN_SPEC, height=tree.height, k=k, caps=caps, score=score,
+        fused_level=fused_level if fused else None)
+    return functools.partial(run, ctx)
+
+
+KNN_SPEC = traversal.register(traversal.OperatorSpec(
+    name="knn", kind="distance",
+    stage_model=StageModel(inner=4, leaf=3, fused=1),
+    builder=make_knn_bfs, caps_policy=knn_frontier_caps, query_width=2,
+    description="batched k-nearest-neighbor: point MINDIST/MINMAXDIST "
+                "score, τ top-k + best-first beam emission"))

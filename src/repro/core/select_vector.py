@@ -18,6 +18,11 @@ All three consume any of the physical layouts D0/D1/D2; layout-specific
 predicate evaluation matches the paper's instruction sequences (D1: 4 compare
 stages; D2: 2 compare stages on interleaved pairs + pair reduction; D0:
 strided de-interleave first — the SIMD-hostile case).
+
+The BFS level loop itself lives in core/traversal.py (the spec-driven
+engine); this module contributes the *select spec*: the layout-specific
+intersect-mask score stage, the compress-store emission kind, the caps
+policy, and the kernel handles.
 """
 from __future__ import annotations
 
@@ -27,12 +32,13 @@ from typing import Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from .compaction import compact_1d, compact_rows
-from .counters import (DISPATCH_FUSED_LEVEL, DISPATCH_SELECT_LEVEL, Counters)
+from . import caps as caps_policy
+from . import traversal
+from .compaction import compact_1d
+from .counters import Counters, StageModel
 from .flat import FlatTree
 from .geometry import intersects
-from .layouts import (LevelD0, LevelD1, LevelD2, d0_unpack,
-                      round_up_to_lanes, tree_layout)
+from .layouts import LevelD0, LevelD1, LevelD2, d0_unpack, tree_layout
 from .rtree import RTree
 
 
@@ -82,23 +88,10 @@ def _masks_for_level(layer, ids: jax.Array, queries: jax.Array):
 
 def frontier_caps(tree: RTree, result_cap: int, slack: int = 4,
                   min_cap: int = 128) -> Tuple[int, ...]:
-    """Frontier capacity entering each level (root-1 … leaf) + result cap.
-
-    Level li (distance li from the leaves) can contribute at most
-    ~result_cap/F^li qualifying nodes for point data; ``slack`` absorbs MBR
-    overlap.  Caps are clamped to the level's node count, then rounded up to
-    a multiple of the TPU lane width (layouts.LANES) so fused-kernel block
-    shapes never see ragged frontiers.
-    """
-    f = tree.fanout
-    caps = []
-    for li in range(tree.height - 2, -1, -1):
-        need = -(-result_cap // (f ** li)) * slack
-        caps.append(round_up_to_lanes(min(tree.levels[li].n_nodes,
-                                          max(min_cap, need))))
-    if caps:
-        caps[-1] = max(caps[-1], round_up_to_lanes(result_cap))
-    return tuple(caps)
+    """Frontier capacity entering each level (root-1 … leaf) + result cap —
+    the unified geometric policy (core/caps.py)."""
+    return caps_policy.select_frontier_caps(tree, result_cap, slack=slack,
+                                            min_cap=min_cap)
 
 
 def make_select_bfs(tree: RTree, layout: str = "d1", result_cap: int = 4096,
@@ -134,82 +127,58 @@ def make_select_bfs(tree: RTree, layout: str = "d1", result_cap: int = 4096,
         raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
     levels = tree.levels if backend is not None else None
 
-    @jax.jit
-    def run(layers_, levels_, queries: jax.Array):
+    def score(ctx, li, frontier, qargs):
+        layers_, levels_ = ctx
+        ids, queries = frontier[0], qargs[0]
         b = queries.shape[0]
-        ids = jnp.zeros((b, 1), jnp.int32)  # root frontier
-        nodes = jnp.int32(0)
-        preds = jnp.int32(0)
-        vops = jnp.int32(0)
-        enq = jnp.int32(0)
-        waste = jnp.int32(0)
-        disp = jnp.int32(0)
-        ovf = jnp.zeros((b,), bool)
-        counts = jnp.zeros((b,), jnp.int32)
-        res = None
-        for li in range(tree.height - 1, -1, -1):
-            cap = result_cap if li == 0 else caps[tree.height - 1 - li]
-            fcnt = (ids >= 0).sum(axis=1)
-            if fused:
-                from repro.kernels import ops as _kops
-                lvl = levels_[li]
-                f = lvl.lx.shape[1]
-                nxt, qcnt, o = _kops.select_level_fused(
-                    ids, queries, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child,
-                    cap=cap, backend=backend)
-                hits = qcnt.sum()
-                stages = 4
-                disp = disp + DISPATCH_FUSED_LEVEL
-                if li == 0:
-                    counts = qcnt
-                    if not count_only:
-                        res = nxt
-                        ovf = ovf | o
-                else:
-                    ids = nxt
-                    ovf = ovf | o
-                    enq = enq + hits
-            else:
-                if backend is not None:
-                    from repro.kernels import ops as _kops
-                    lvl = levels_[li]
-                    mask = _kops.select_level_masks(
-                        ids, queries, lvl.lx, lvl.ly, lvl.hx, lvl.hy,
-                        lvl.child, backend=backend).astype(bool)
-                    ptr = lvl.child[jnp.maximum(ids, 0)]
-                    stages = 4
-                else:
-                    mask, ptr, stages = _masks_for_level(ids=ids,
-                                                         queries=queries,
-                                                         layer=layers_[li])
-                f = mask.shape[-1]
-                hits = mask.sum()
-                disp = disp + DISPATCH_SELECT_LEVEL
-                flat_mask = mask.reshape(b, -1)
-                flat_ptr = ptr.reshape(b, -1)
-                if li == 0:
-                    counts = flat_mask.sum(axis=1).astype(jnp.int32)
-                    if not count_only:
-                        res, _, o = compact_rows(flat_ptr, flat_mask,
-                                                 result_cap)
-                        ovf = ovf | o
-                else:
-                    ids, _, o = compact_rows(flat_ptr, flat_mask, cap)
-                    ovf = ovf | o
-                    enq = enq + hits
-            nodes = nodes + fcnt.sum()
-            preds = preds + fcnt.sum() * f * stages
-            vops = vops + fcnt.sum() * stages
-            waste = waste + fcnt.sum() * f - hits
-        ctr = Counters(nodes_visited=nodes, predicates=preds, vector_ops=vops,
-                       enqueued=enq, masked_waste=waste,
-                       overflow=ovf.any().astype(jnp.int32),
-                       dispatches=disp)
-        if count_only:
-            return counts, ctr
-        return res, counts, ctr
+        if backend is not None:
+            from repro.kernels import ops as _kops
+            lvl = levels_[li]
+            mask = _kops.select_level_masks(
+                ids, queries, lvl.lx, lvl.ly, lvl.hx, lvl.hy,
+                lvl.child, backend=backend).astype(bool)
+            ptr = lvl.child[jnp.maximum(ids, 0)]
+            stages = 4
+        else:
+            mask, ptr, stages = _masks_for_level(ids=ids, queries=queries,
+                                                 layer=layers_[li])
+        f = mask.shape[-1]
+        return (mask.reshape(b, -1), (ptr.reshape(b, -1),), f, stages, None)
 
-    return functools.partial(run, layers, levels)
+    def fused_level(ctx, li, frontier, qargs, cap):
+        from repro.kernels import ops as _kops
+        _, levels_ = ctx
+        ids, queries = frontier[0], qargs[0]
+        lvl = levels_[li]
+        f = lvl.lx.shape[1]
+        nxt, qcnt, o = _kops.select_level_fused(
+            ids, queries, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child,
+            cap=cap, backend=backend)
+        return (nxt,), qcnt, o, f, 4, None
+
+    run = traversal.make_mask_engine(
+        SELECT_SPEC, height=tree.height, caps=caps, result_cap=result_cap,
+        score=score, fused_level=fused_level if fused else None,
+        count_only=count_only)
+    ctx = (layers, levels)
+
+    if count_only:
+        def fn(queries: jax.Array):
+            _, counts, ctr = run(ctx, queries)
+            return counts, ctr
+    else:
+        def fn(queries: jax.Array):
+            res, counts, ctr = run(ctx, queries)
+            return res[0], counts, ctr
+    return fn
+
+
+SELECT_SPEC = traversal.register(traversal.OperatorSpec(
+    name="select", kind="mask",
+    stage_model=StageModel(inner=3, leaf=3, fused=1),
+    builder=make_select_bfs, caps_policy=frontier_caps, query_width=4,
+    description="batched range select: intersect-mask score, "
+                "compress-store emission"))
 
 
 # ---------------------------------------------------------------------------

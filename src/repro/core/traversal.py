@@ -1,0 +1,607 @@
+"""Spec-driven BFS traversal engine — one level-synchronous core for every
+R-tree operator.
+
+The paper's central observation is that all R-tree query operators reduce to
+the same SIMD skeleton: score a node block, prune, emit, descend.  This
+module is that skeleton, once:
+
+  ``OperatorSpec``   — the static description of an operator: its score
+                       stage kind (intersect-mask vs MINDIST/MINMAXDIST),
+                       its per-level dispatch ``StageModel``, its default
+                       caps policy, its builder, and serve metadata.  Specs
+                       live in a registry (``register``/``get_spec``) so
+                       distributed sharding and the serve launcher resolve
+                       operators by name instead of hard-coded imports.
+  ``make_mask_engine``     — the level loop for the mask operators (range
+                       select, spatial join): score → compress-store
+                       compaction → descend.  The join's pair frontier is
+                       the same loop with two parallel id streams.
+  ``make_distance_engine`` — the level loop for the distance operators
+                       (kNN, kNN-join): score → τ top-k tightening →
+                       MINDIST prune → best-first beam enqueue → leaf
+                       top-k.
+  ``make_browse_engine``   — the *resume* entry point: the same distance
+                       level loop, run from a ``BrowseState`` pytree
+                       (candidate pool + per-level deferred beams + lost
+                       bound) so distance browsing (Hjaltason–Samet
+                       incremental NN) emits k at a time without
+                       restarting from the root.  No operator defines a
+                       BFS loop of its own.
+
+Both engines also own the fused whole-level routing (``fused=True`` runs
+one device program per level and consumes only compacted outputs + tallies)
+and derive ``Counters.dispatches`` from the owning spec's ``StageModel`` —
+the single source of truth the tests validate against.
+
+Operator modules register their spec at import time; use ``build(name,
+*trees, **params)`` as the generic engine entry point (the preserved
+``make_*_bfs`` wrappers route through the same builders, so the two entries
+are bit-identical — asserted across the oracle matrix by tests/oracle.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .compaction import _scatter_compact, beam_rows
+from .counters import Counters, StageModel
+from .geometry import DIST_PAD, DIST_VALID_MAX
+
+
+# ---------------------------------------------------------------------------
+# Operator specs + registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OperatorSpec:
+    """Static description of one traversal operator.
+
+    ``kind`` selects the engine: 'mask' (boolean qualify + compress-store
+    emission) or 'distance' (MINDIST/MINMAXDIST scoring + τ/beam emission).
+    ``stage_model`` is the per-level dispatch accounting the engine charges
+    (see counters.StageModel).  ``builder`` is the public factory — the
+    ``make_*_bfs`` wrapper — so ``build(name, ...)`` and the wrapper are the
+    same code path.  ``caps_policy`` is the operator's default frontier-caps
+    function (core/caps.py).  ``query_width`` is serve metadata: columns per
+    query row (2 points, 4 rects, None for the query-less join), and
+    ``leaf_enqueue`` marks mask operators whose final-level emission counts
+    into ``Counters.enqueued`` (the join's result pairs are enqueued work;
+    select's leaf hits are results, not queue insertions).
+    """
+    name: str
+    kind: str
+    stage_model: StageModel
+    builder: Callable
+    caps_policy: Optional[Callable] = None
+    query_width: Optional[int] = None
+    leaf_enqueue: bool = False
+    description: str = ""
+
+
+_REGISTRY: Dict[str, OperatorSpec] = {}
+
+# modules that register specs on import — imported lazily so the registry
+# is complete whenever it is consulted, without import cycles
+_OPERATOR_MODULES = (
+    "repro.core.select_vector",
+    "repro.core.join_vector",
+    "repro.core.knn_vector",
+    "repro.core.knn_join_vector",
+    "repro.core.knn_browse",
+)
+
+
+def register(spec: OperatorSpec) -> OperatorSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def _ensure_registered() -> None:
+    for mod in _OPERATOR_MODULES:
+        importlib.import_module(mod)
+
+
+def get_spec(name: str) -> OperatorSpec:
+    _ensure_registered()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown operator spec {name!r}; registered: "
+            f"{sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def spec_names() -> Tuple[str, ...]:
+    _ensure_registered()
+    return tuple(sorted(_REGISTRY))
+
+
+def specs() -> Tuple[OperatorSpec, ...]:
+    _ensure_registered()
+    return tuple(_REGISTRY[n] for n in sorted(_REGISTRY))
+
+
+def build(name: str, *trees, **params):
+    """Generic engine entry point: build operator ``name`` over ``trees``
+    with the spec's builder (identical to calling the ``make_*_bfs``
+    wrapper directly)."""
+    return get_spec(name).builder(*trees, **params)
+
+
+# ---------------------------------------------------------------------------
+# Mask-kind engine (range select, spatial join)
+# ---------------------------------------------------------------------------
+
+def _apply_delta(acc: dict, delta: Optional[dict], *, fcnt, f, stages, hits):
+    """Fold one level's score-stage counter contributions into ``acc``.
+
+    ``delta=None`` selects the default dense model (every frontier node
+    evaluates all F lanes over ``stages`` compare stages); a spec whose
+    score stage models pruned work (the join's O3/O4/O5) returns its own
+    partial tallies instead.
+    """
+    if delta is None:
+        n = fcnt.sum()
+        acc["nodes_visited"] = acc["nodes_visited"] + n
+        acc["predicates"] = acc["predicates"] + n * f * stages
+        acc["vector_ops"] = acc["vector_ops"] + n * stages
+        acc["masked_waste"] = acc["masked_waste"] + n * f - hits
+    else:
+        for key, val in delta.items():
+            acc[key] = acc[key] + val
+
+
+def make_mask_engine(spec: OperatorSpec, *, height: int,
+                     caps: Sequence[int], result_cap: int, score,
+                     fused_level=None, count_only: bool = False,
+                     n_streams: int = 1):
+    """Build the jitted level loop for a mask operator.
+
+    ``score(ctx, li, frontier, qargs)`` → (mask (B, M) bool, values — an
+    ``n_streams``-tuple of (B, M) int32 to compact under the mask, f,
+    stages, delta).  ``fused_level(ctx, li, frontier, qargs, cap)`` → the
+    whole-level alternative: (values — tuple of (B, cap), qcnt (B,),
+    overflow (B,), f, stages, delta); the engine then only routes compacted
+    frontiers.  Returns ``run(ctx, *qargs)`` → (values | None, counts,
+    Counters).
+    """
+    caps = tuple(caps)
+    sm = spec.stage_model
+
+    @jax.jit
+    def run(ctx, *qargs):
+        b = qargs[0].shape[0] if qargs else 1
+        frontier = tuple(jnp.zeros((b, 1), jnp.int32)
+                         for _ in range(n_streams))  # root
+        acc = {k: jnp.int32(0) for k in
+               ("nodes_visited", "predicates", "vector_ops", "masked_waste",
+                "pruned_outer", "pruned_inner")}
+        enq = jnp.int32(0)
+        disp = 0
+        ovf = jnp.zeros((b,), bool)
+        counts = jnp.zeros((b,), jnp.int32)
+        res = None
+        for li in range(height - 1, -1, -1):
+            leaf = li == 0
+            cap = result_cap if leaf else caps[height - 1 - li]
+            fcnt = (frontier[0] >= 0).sum(axis=1)
+            if fused_level is not None:
+                vals, qcnt, o, f, stages, delta = fused_level(
+                    ctx, li, frontier, qargs, cap)
+                hits = qcnt.sum()
+                disp += sm.fused
+                if leaf:
+                    counts = qcnt
+                    if not count_only:
+                        res = vals
+                        ovf = ovf | o
+                    if spec.leaf_enqueue:
+                        enq = enq + hits
+                else:
+                    frontier = vals
+                    ovf = ovf | o
+                    enq = enq + hits
+            else:
+                mask, values, f, stages, delta = score(ctx, li, frontier,
+                                                       qargs)
+                hits = mask.sum()
+                disp += sm.leaf if leaf else sm.inner
+                if leaf:
+                    counts = mask.sum(axis=1).astype(jnp.int32)
+                    if not count_only:
+                        outs, _, o = _scatter_compact(values, mask,
+                                                      result_cap, -1)
+                        res = tuple(outs)
+                        ovf = ovf | o
+                    if spec.leaf_enqueue:
+                        enq = enq + hits
+                else:
+                    outs, _, o = _scatter_compact(values, mask, cap, -1)
+                    frontier = tuple(outs)
+                    ovf = ovf | o
+                    enq = enq + hits
+            _apply_delta(acc, delta, fcnt=fcnt, f=f, stages=stages,
+                         hits=hits)
+        ctr = Counters(enqueued=enq, overflow=ovf.any().astype(jnp.int32),
+                       dispatches=jnp.int32(disp), **acc)
+        return res, counts, ctr
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Distance-kind engine (kNN, kNN-join) — fixed-k descent
+# ---------------------------------------------------------------------------
+
+def make_distance_engine(spec: OperatorSpec, *, height: int, k: int,
+                         caps: Sequence[int], score, fused_level=None):
+    """Build the jitted level loop for a distance operator.
+
+    ``score(ctx, li, ids, queries, leaf)`` → (mindist (B, C, F),
+    minmaxdist (B, C, F) | None at the leaf, child_ids (B, C, F), stages)
+    with DIST_PAD on invalid lanes.  The engine owns τ tightening to the
+    k-th smallest MINMAXDIST, MINDIST pruning, the best-first beam enqueue
+    (overflow degrades to approximate-with-bound), leaf top-k extraction,
+    and all counter accounting — so τ soundness and beam semantics can
+    never drift between the distance operators.
+
+    ``fused_level(ctx, li, ids, queries, tau, leaf, cap)`` runs the whole
+    level — scoring AND the τ/prune/beam emission — as one device program:
+      internal → (next_ids (B, cap), τ (B,), valid_cnt (B,), keep_cnt (B,))
+      leaf     → (res_ids (B, k), res_d (B, k), valid_cnt (B,))
+    Counter semantics stay identical to the unfused path except
+    ``dispatches``.
+    """
+    caps = tuple(caps)
+    sm = spec.stage_model
+
+    @jax.jit
+    def run(ctx, queries: jax.Array):
+        b = queries.shape[0]
+        ids = jnp.zeros((b, 1), jnp.int32)  # root frontier
+        tau = jnp.full((b,), DIST_PAD, jnp.float32)
+        nodes = jnp.int32(0)
+        preds = jnp.int32(0)
+        vops = jnp.int32(0)
+        enq = jnp.int32(0)
+        pruned = jnp.int32(0)
+        waste = jnp.int32(0)
+        disp = 0
+        ovf = jnp.zeros((b,), bool)
+        res_ids = res_d = None
+        for li in range(height - 1, -1, -1):
+            leaf = li == 0
+            fcnt = (ids >= 0).sum(axis=1)
+            nodes = nodes + fcnt.sum()
+            if fused_level is not None:
+                cap = k if leaf else caps[height - 1 - li]
+                out = fused_level(ctx, li, ids, queries, tau, leaf, cap)
+                f = out[-1]
+                out = out[:-1]
+                stages = 4                      # fused kernels are D1-only
+                ev = stages if leaf else 2 * stages
+                preds = preds + fcnt.sum() * f * ev
+                vops = vops + fcnt.sum() * ev
+                disp += sm.fused
+                if leaf:
+                    res_ids, res_d, valid_cnt = out
+                    waste = waste + fcnt.sum() * f - valid_cnt.sum()
+                else:
+                    ids, tau, valid_cnt, keep_cnt = out
+                    waste = waste + fcnt.sum() * f - valid_cnt.sum()
+                    pruned = pruned + (valid_cnt.sum() - keep_cnt.sum())
+                    enq = enq + keep_cnt.sum()
+                    ovf = ovf | (keep_cnt > cap)
+                continue
+            md, mmd, ptr, stages = score(ctx, li, ids, queries, leaf)
+            f = md.shape[-1]
+            # internal levels evaluate BOTH mindist and minmaxdist per lane
+            # (the scalar baseline counts both too); the leaf needs only
+            # mindist — keep the scalar-vs-vector predicate ratio honest
+            ev = stages if leaf else 2 * stages
+            preds = preds + fcnt.sum() * f * ev
+            vops = vops + fcnt.sum() * ev
+            entry_valid = md < DIST_VALID_MAX
+            waste = waste + fcnt.sum() * f - entry_valid.sum()
+            flat_d = md.reshape(b, -1)
+            flat_ptr = ptr.reshape(b, -1)
+            if leaf:
+                disp += sm.leaf
+                if flat_d.shape[1] < k:   # k > total leaf candidates
+                    pad = k - flat_d.shape[1]
+                    flat_d = jnp.concatenate(
+                        [flat_d, jnp.full((b, pad), DIST_PAD, flat_d.dtype)],
+                        axis=1)
+                    flat_ptr = jnp.concatenate(
+                        [flat_ptr, jnp.full((b, pad), -1, flat_ptr.dtype)],
+                        axis=1)
+                neg_d, pos = jax.lax.top_k(-flat_d, k)
+                res_d = -neg_d
+                res_ids = jnp.take_along_axis(flat_ptr, pos, axis=1)
+                found = res_d < DIST_VALID_MAX
+                res_ids = jnp.where(found, res_ids, -1)
+                res_d = jnp.where(found, res_d, jnp.inf)
+            else:
+                disp += sm.inner
+                mflat = mmd.reshape(b, -1)
+                # τ soundness needs k *distinct* children within the bound
+                # (each guarantees one object).  With fewer than k lanes the
+                # truncated quantile would only guarantee C·F objects, so
+                # skip tightening; when lanes ≥ k but valid children < k the
+                # DIST_PAD lanes push the k-th value huge — no-op, sound.
+                if mflat.shape[1] >= k:
+                    kth = -jax.lax.top_k(-mflat, k)[0][:, k - 1]
+                    tau = jnp.minimum(tau, kth)
+                keep = entry_valid & (md <= tau[:, None, None])
+                pruned = pruned + (entry_valid.sum() - keep.sum())
+                cap = caps[height - 1 - li]
+                # best-first beam enqueue: on overflow keep the cap best-
+                # MINDIST children per query (approximate-with-bound) instead
+                # of dropping by lane position
+                ids, _, o = beam_rows(flat_ptr, flat_d, keep.reshape(b, -1),
+                                      cap)
+                ovf = ovf | o
+                enq = enq + keep.sum()
+        ctr = Counters(nodes_visited=nodes, predicates=preds, vector_ops=vops,
+                       enqueued=enq, pruned_inner=pruned, masked_waste=waste,
+                       overflow=ovf.any().astype(jnp.int32),
+                       dispatches=jnp.int32(disp))
+        return res_ids, res_d, ctr
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Resumable distance browsing — the engine's resume entry point
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BrowseState:
+    """Complete traversal state of a distance-browsing session, as a pytree.
+
+    Round-trips through ``jax.tree_util`` (checkpoint, device transfer,
+    shard_map, …) and back into ``resume`` without restarting from the
+    root:
+
+      queries   — (B, Q) query coordinates (2 points / 4 rects)
+      pool_ids/pool_d — (B, pool_cap) scored-but-unemitted leaf candidates,
+                  distance-sorted ascending
+      def_ids/def_d   — per level (0 … height-1): τ-deferred node beams —
+                  children pruned by a past descent, kept with their
+                  MINDIST so a later batch can re-activate them
+      lost      — (B,) smallest distance ever dropped from any bounded
+                  beam; emission at or beyond it flags ``overflow``
+                  (approximate-with-bound, mirroring fixed-k semantics)
+      emitted   — (B,) neighbors emitted so far
+      overflow  — (B,) bool, sticky
+      ctr       — accumulated Counters across descents
+      descents  — number of resume descents run (dispatch validation)
+    """
+    queries: jax.Array
+    pool_ids: jax.Array
+    pool_d: jax.Array
+    def_ids: Tuple[jax.Array, ...]
+    def_d: Tuple[jax.Array, ...]
+    lost: jax.Array
+    emitted: jax.Array
+    overflow: jax.Array
+    ctr: Counters
+    descents: jax.Array
+
+    def tree_flatten(self):
+        return ((self.queries, self.pool_ids, self.pool_d, self.def_ids,
+                 self.def_d, self.lost, self.emitted, self.overflow,
+                 self.ctr, self.descents), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _beam_with_bound(ids: jax.Array, d: jax.Array, mask: jax.Array,
+                     cap: int):
+    """beam_rows that also returns the kept distances and the smallest
+    *dropped* distance (+inf when nothing was dropped) — the browse
+    engine's lost-bound bookkeeping."""
+    b, m = ids.shape
+    d = jnp.where(mask, d, DIST_PAD)
+    v = jnp.where(mask, ids, -1)
+    if m < cap + 1:
+        padn = cap + 1 - m
+        d = jnp.concatenate([d, jnp.full((b, padn), DIST_PAD, d.dtype)], 1)
+        v = jnp.concatenate([v, jnp.full((b, padn), -1, v.dtype)], 1)
+    neg_d, pos = jax.lax.top_k(-d, cap + 1)
+    dd = -neg_d
+    vv = jnp.take_along_axis(v, pos, axis=1)
+    kept_d = dd[:, :cap]
+    kept_v = jnp.where(kept_d < DIST_VALID_MAX, vv[:, :cap], -1)
+    kept_d = jnp.where(kept_d < DIST_VALID_MAX, kept_d, DIST_PAD)
+    dropped = dd[:, cap]
+    bound = jnp.where(dropped < DIST_VALID_MAX, dropped, jnp.inf)
+    return kept_v, kept_d, bound
+
+
+def make_browse_engine(spec: OperatorSpec, *, height: int, batch_k: int,
+                       caps: Sequence[int], defer_caps: Sequence[int],
+                       pool_cap: int, score):
+    """Build the resumable distance-browsing engine: the distance level
+    loop, parameterized to run *from* and *into* a ``BrowseState``.
+
+    Per resume descent (root → leaf, the same level-synchronous sweep as
+    ``make_distance_engine`` — this module defines no second loop shape):
+
+      inject — merge each level's τ-activated deferred nodes
+               (MINDIST ≤ τ) into the active frontier
+      score  — the operator's score stage, unchanged
+      τ      — init to the batch_k-th pool distance (the pool holds real
+               objects), tightened per level by the k-th smallest child
+               MINMAXDIST — both individually sound bounds on the batch_k-th
+               unexplored neighbor
+      prune  — children with MINDIST > τ are *stashed* into the level's
+               deferred beam instead of discarded
+      leaf   — all valid candidates beam-merge into the pool
+
+    Every bounded beam folds its smallest dropped distance into
+    ``state.lost``; emission only flags ``overflow`` when an emitted
+    distance reaches that bound — exactness is tracked, not assumed.
+
+    Returns (init, needs_descent, resume, emit):
+      init(queries)        → fresh BrowseState (root deferred at the top)
+      needs_descent(state) → host bool: can the pool safely serve batch_k?
+      resume(ctx, state)   → state after one full descent
+      emit(state)          → (ids (B, batch_k), d (B, batch_k), state)
+    """
+    caps = tuple(caps)
+    defer_caps = tuple(defer_caps)
+    if len(defer_caps) != height:
+        raise ValueError(f"need {height} defer caps, got {len(defer_caps)}")
+    if pool_cap < batch_k:
+        raise ValueError("pool_cap must be >= batch_k")
+    sm = spec.stage_model
+
+    def init(queries: jax.Array) -> BrowseState:
+        b = queries.shape[0]
+        def_ids = []
+        def_d = []
+        for lj in range(height):
+            dc = defer_caps[lj]
+            if lj == height - 1:
+                # the root is the initial deferred node, at distance 0
+                def_ids.append(jnp.zeros((b, dc), jnp.int32))
+                def_d.append(jnp.zeros((b, dc), jnp.float32))
+            else:
+                def_ids.append(jnp.full((b, dc), -1, jnp.int32))
+                def_d.append(jnp.full((b, dc), DIST_PAD, jnp.float32))
+        zero = jnp.int32(0)
+        return BrowseState(
+            queries=jnp.asarray(queries),
+            pool_ids=jnp.full((b, pool_cap), -1, jnp.int32),
+            pool_d=jnp.full((b, pool_cap), DIST_PAD, jnp.float32),
+            def_ids=tuple(def_ids), def_d=tuple(def_d),
+            lost=jnp.full((b,), jnp.inf, jnp.float32),
+            emitted=jnp.zeros((b,), jnp.int32),
+            overflow=jnp.zeros((b,), bool),
+            ctr=Counters(*([zero] * 10)),
+            descents=jnp.int32(0))
+
+    @jax.jit
+    def _needs_descent(state: BrowseState) -> jax.Array:
+        min_def = jnp.full(state.lost.shape, DIST_PAD, jnp.float32)
+        for lj in range(height):
+            min_def = jnp.minimum(min_def, state.def_d[lj].min(axis=1))
+        pool_kth = state.pool_d[:, batch_k - 1]
+        pool_kth = jnp.where(pool_kth < DIST_VALID_MAX, pool_kth, jnp.inf)
+        return ((min_def < DIST_VALID_MAX) & (min_def <= pool_kth)).any()
+
+    def needs_descent(state: BrowseState) -> bool:
+        return bool(_needs_descent(state))
+
+    @jax.jit
+    def resume(ctx, state: BrowseState) -> BrowseState:
+        queries = state.queries
+        b = queries.shape[0]
+        # τ init: the batch_k-th pool distance — the pool holds real
+        # objects, so batch_k of the next neighbors lie within it
+        pool_kth = state.pool_d[:, batch_k - 1]
+        tau = jnp.where(pool_kth < DIST_VALID_MAX, pool_kth, DIST_PAD)
+        frontier = jnp.full((b, 1), -1, jnp.int32)
+        fdist = jnp.full((b, 1), DIST_PAD, jnp.float32)
+        pool_ids, pool_d = state.pool_ids, state.pool_d
+        def_ids = list(state.def_ids)
+        def_d = list(state.def_d)
+        lost = state.lost
+        nodes = preds = vops = enq = pruned = waste = jnp.int32(0)
+        disp = 0
+        for li in range(height - 1, -1, -1):
+            leaf = li == 0
+            fcap = 1 if li == height - 1 else caps[height - 2 - li]
+            # inject: activate this level's deferred nodes within τ
+            act = (def_ids[li] >= 0) & (def_d[li] <= tau[:, None])
+            comb_ids = jnp.concatenate([frontier, def_ids[li]], axis=1)
+            comb_d = jnp.concatenate(
+                [fdist, jnp.where(act, def_d[li], DIST_PAD)], axis=1)
+            ids, idd, bound = _beam_with_bound(
+                comb_ids, comb_d, comb_d < DIST_VALID_MAX, fcap)
+            lost = jnp.minimum(lost, bound)
+            def_ids[li] = jnp.where(act, -1, def_ids[li])
+            def_d[li] = jnp.where(act, DIST_PAD, def_d[li])
+            # score — identical stage to the fixed-k engine
+            fcnt = (ids >= 0).sum(axis=1)
+            nodes = nodes + fcnt.sum()
+            md, mmd, ptr, stages = score(ctx, li, ids, queries, leaf)
+            f = md.shape[-1]
+            ev = stages if leaf else 2 * stages
+            preds = preds + fcnt.sum() * f * ev
+            vops = vops + fcnt.sum() * ev
+            entry_valid = md < DIST_VALID_MAX
+            waste = waste + fcnt.sum() * f - entry_valid.sum()
+            flat_d = md.reshape(b, -1)
+            flat_ptr = ptr.reshape(b, -1)
+            if leaf:
+                disp += sm.leaf
+                # every scored candidate is a real object: pool it
+                pool_ids2 = jnp.concatenate([pool_ids, flat_ptr], axis=1)
+                pool_d2 = jnp.concatenate([pool_d, flat_d], axis=1)
+                pool_ids, pool_d, bound = _beam_with_bound(
+                    pool_ids2, pool_d2, pool_d2 < DIST_VALID_MAX, pool_cap)
+                lost = jnp.minimum(lost, bound)
+            else:
+                disp += sm.inner
+                mflat = mmd.reshape(b, -1)
+                if mflat.shape[1] >= batch_k:   # same soundness gate
+                    kth = -jax.lax.top_k(-mflat, batch_k)[0][:, batch_k - 1]
+                    tau = jnp.minimum(tau, kth)
+                keep = entry_valid & (md <= tau[:, None, None])
+                pruned = pruned + (entry_valid.sum() - keep.sum())
+                cap = caps[height - 1 - li]
+                frontier, fdist, bound = _beam_with_bound(
+                    flat_ptr, flat_d, keep.reshape(b, -1), cap)
+                lost = jnp.minimum(lost, bound)
+                enq = enq + keep.sum()
+                # stash: τ-pruned children stay reachable for later batches
+                rej = (entry_valid & ~keep).reshape(b, -1)
+                dj_ids = jnp.concatenate([def_ids[li - 1], flat_ptr], axis=1)
+                dj_d = jnp.concatenate(
+                    [def_d[li - 1], jnp.where(rej, flat_d, DIST_PAD)],
+                    axis=1)
+                def_ids[li - 1], def_d[li - 1], bound = _beam_with_bound(
+                    dj_ids, dj_d, dj_d < DIST_VALID_MAX,
+                    defer_caps[li - 1])
+                lost = jnp.minimum(lost, bound)
+        dctr = Counters(nodes_visited=nodes, predicates=preds,
+                        vector_ops=vops, enqueued=enq, pruned_inner=pruned,
+                        masked_waste=waste, dispatches=jnp.int32(disp))
+        return dataclasses.replace(
+            state, pool_ids=pool_ids, pool_d=pool_d,
+            def_ids=tuple(def_ids), def_d=tuple(def_d), lost=lost,
+            ctr=state.ctr + dctr, descents=state.descents + 1)
+
+    @jax.jit
+    def emit(state: BrowseState):
+        b = state.pool_ids.shape[0]
+        d = state.pool_d[:, :batch_k]
+        ids = state.pool_ids[:, :batch_k]
+        found = d < DIST_VALID_MAX
+        out_ids = jnp.where(found, ids, -1)
+        out_d = jnp.where(found, d, jnp.inf)
+        crossed = (found & (d >= state.lost[:, None])).any(axis=1)
+        pad_i = jnp.full((b, batch_k), -1, jnp.int32)
+        pad_d = jnp.full((b, batch_k), DIST_PAD, jnp.float32)
+        # mirror the crossing into Counters.overflow — the flag every other
+        # operator's consumers read to detect approximate results
+        ctr = dataclasses.replace(
+            state.ctr,
+            overflow=state.ctr.overflow | crossed.any().astype(jnp.int32))
+        new = dataclasses.replace(
+            state,
+            pool_ids=jnp.concatenate([state.pool_ids[:, batch_k:], pad_i], 1),
+            pool_d=jnp.concatenate([state.pool_d[:, batch_k:], pad_d], 1),
+            emitted=state.emitted + found.sum(axis=1).astype(jnp.int32),
+            overflow=state.overflow | crossed, ctr=ctr)
+        return out_ids, out_d, new
+
+    return init, needs_descent, resume, emit

@@ -23,11 +23,11 @@ inside each partition's engine — which is where the paper's technique
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core import knn_join_vector, knn_vector, rtree, select_vector
+from repro.core import rtree, traversal
 from repro.core.geometry import intersects as np_intersects
 from repro.core.geometry import mindist_matrix_np, mindist_rect_matrix_np
 
@@ -45,9 +45,10 @@ class SpatialShards:
         self.partitions = partitions
         self.fanout = fanout
         self.router_mbrs = np.stack([p.mbr for p in partitions])
-        self._selects = {}
-        self._knns = {}
-        self._knn_joins = {}
+        # one compiled-engine cache for every operator, keyed by
+        # (spec name, partition, build params) through the spec registry —
+        # adding an operator adds a registry entry, not another cache
+        self._engines = {}
 
     @classmethod
     def build(cls, rects: np.ndarray, n_partitions: int, fanout: int = 64,
@@ -89,12 +90,15 @@ class SpatialShards:
                              q[:, None, 3], m[None, :, 0], m[None, :, 1],
                              m[None, :, 2], m[None, :, 3])
 
-    def _select_for(self, pi: int, batch: int, result_cap: int):
-        key = (pi, batch, result_cap)
-        if key not in self._selects:
-            self._selects[key] = select_vector.make_select_bfs(
-                self.partitions[pi].tree, result_cap=result_cap)
-        return self._selects[key]
+    def engine_for(self, op: str, pi: int, **params):
+        """The compiled engine of registered operator ``op`` for partition
+        ``pi``, built through the spec registry (traversal.build) and cached
+        per build params; jax.jit retraces per batch shape on its own."""
+        key = (op, pi, tuple(sorted(params.items())))
+        if key not in self._engines:
+            self._engines[key] = traversal.build(
+                op, self.partitions[pi].tree, **params)
+        return self._engines[key]
 
     def range_select(self, queries: np.ndarray, result_cap: int = 4096
                      ) -> List[np.ndarray]:
@@ -106,7 +110,7 @@ class SpatialShards:
             hit = np.nonzero(routing[:, pi])[0]
             if len(hit) == 0:
                 continue
-            sel = self._select_for(pi, len(hit), result_cap)
+            sel = self.engine_for("select", pi, result_cap=result_cap)
             ids, counts, _ = sel(jnp.asarray(queries[hit]))
             ids = np.asarray(ids)
             counts = np.asarray(counts)
@@ -120,16 +124,7 @@ class SpatialShards:
     # k-nearest-neighbor
     # ------------------------------------------------------------------
 
-    def _knn_for(self, pi: int, k: int):
-        """One make_knn_bfs per (partition, k): the closure materializes the
-        tree layout once; jax.jit retraces per batch shape on its own."""
-        key = (pi, k)
-        if key not in self._knns:
-            self._knns[key] = knn_vector.make_knn_bfs(
-                self.partitions[pi].tree, k=k)
-        return self._knns[key]
-
-    def _run_partition(self, get_engine, pi: int, queries: np.ndarray,
+    def _run_partition(self, op: str, pi: int, queries: np.ndarray,
                        k: int):
         """Run one partition's batched distance engine; local → global ids.
 
@@ -151,7 +146,7 @@ class SpatialShards:
             # a false "results may be approximate" warning
             pad = np.repeat(queries[:1], bucket - b, axis=0)
             queries = np.concatenate([queries, pad], axis=0)
-        fn = get_engine(pi, k)
+        fn = self.engine_for(op, pi, k=k)
         ids, dists, ctr = fn(jnp.asarray(queries))
         ids = np.asarray(ids)[:b]
         dists = np.asarray(dists, np.float64)[:b]
@@ -159,7 +154,7 @@ class SpatialShards:
         return gids, dists, bool(ctr.overflow)
 
     def _knn_partition(self, pi: int, points: np.ndarray, k: int):
-        return self._run_partition(self._knn_for, pi, points, k)
+        return self._run_partition("knn", pi, points, k)
 
     def _warm_buckets(self, run_partition, batch: int, k: int,
                       width: int) -> None:
@@ -249,15 +244,8 @@ class SpatialShards:
     # kNN-join (all-pairs distance operator)
     # ------------------------------------------------------------------
 
-    def _knn_join_for(self, pi: int, k: int):
-        key = (pi, k)
-        if key not in self._knn_joins:
-            self._knn_joins[key] = knn_join_vector.make_knn_join_bfs(
-                self.partitions[pi].tree, k=k)
-        return self._knn_joins[key]
-
     def _knn_join_partition(self, pi: int, qrects: np.ndarray, k: int):
-        return self._run_partition(self._knn_join_for, pi, qrects, k)
+        return self._run_partition("knn_join", pi, qrects, k)
 
     def warm_knn_join(self, batch: int, k: int) -> None:
         self._warm_buckets(self._knn_join_partition, batch, k, width=4)

@@ -6,6 +6,13 @@ validation, while ``backend='xla'`` selects the pure-jnp reference path —
 identical math, XLA-fused — which the CPU benchmarks use so wall-clock
 numbers measure the algorithm rather than the interpreter.  The default
 ('auto') picks pallas on TPU and xla elsewhere.
+
+Routing is one spec-keyed dispatch table (``_KERNELS``): every operator
+stage maps (spec name, stage) → (jnp reference twin, Pallas kernel), and
+``kernel_call`` resolves the backend once for all of them — the previous
+ten hand-rolled routing shims collapsed to entries.  The named wrappers
+below are kept as the stable public API (and document each stage's
+contract); each is a one-line table dispatch.
 """
 from __future__ import annotations
 
@@ -37,14 +44,55 @@ def resolve_backend(backend: str) -> str:
     return backend
 
 
+def _join_level_fused_ref(o_ids, i_ids, alive_cnt, flip_max, o_coords,
+                          i_coords, o_ptr, i_ptr, *, cap: int, to: int = 8):
+    # the jnp twin needs the inner tile width pinned to the kernel's
+    return _ref.join_level_fused_ref(
+        o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords, o_ptr, i_ptr,
+        cap=cap, to=to, ti=min(128, i_coords.shape[2]))
+
+
+# (spec name, stage) → (jnp reference twin, Pallas kernel).  'score' is the
+# unfused level evaluation; 'fused' / 'fused_leaf' are the whole-level
+# programs with in-kernel emission (``fused=True`` operator paths) whose
+# xla twins are the bit-compatible differential references the Pallas
+# kernels are swept against.
+_KERNELS = {
+    ("select", "score"): (_ref.select_level_masks_ref, _select_pallas),
+    ("select", "fused"): (_ref.select_level_fused_ref, _select_fused_pallas),
+    ("knn", "score"): (_ref.knn_level_dists_ref, _knn_pallas),
+    ("knn", "fused"): (_ref.knn_level_fused_ref, _knn_fused_pallas),
+    ("knn", "fused_leaf"): (_ref.knn_leaf_fused_ref, _knn_leaf_fused_pallas),
+    ("knn_join", "score"): (_ref.knn_join_level_dists_ref, _knn_join_pallas),
+    ("knn_join", "fused"): (_ref.knn_join_level_fused_ref,
+                            _knn_join_fused_pallas),
+    ("knn_join", "fused_leaf"): (_ref.knn_join_leaf_fused_ref,
+                                 _knn_join_leaf_fused_pallas),
+    ("join", "score"): (_ref.join_pair_masks_ref, _join_pallas),
+    ("join", "fused"): (_join_level_fused_ref, _join_fused_pallas),
+}
+
+
+def kernel_call(op: str, stage: str, *args, backend: str = "auto", **kwargs):
+    """Dispatch one operator stage to its jnp twin (backend 'xla') or its
+    Pallas kernel (compiled on TPU, interpreted elsewhere)."""
+    ref_fn, pallas_fn = _KERNELS[(op, stage)]
+    b = resolve_backend(backend)
+    if b == "xla":
+        return ref_fn(*args, **kwargs)
+    return pallas_fn(*args, interpret=(b == "pallas_interpret"
+                                       or not _on_tpu()), **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Stable named API (documented contracts; all table dispatches)
+# ---------------------------------------------------------------------------
+
 def select_level_masks(ids, queries, lx, ly, hx, hy, child,
                        backend: str = "auto"):
     """BFS level-step qualify masks: (B,C) ids × (B,4) queries → (B,C,F)."""
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _ref.select_level_masks_ref(ids, queries, lx, ly, hx, hy, child)
-    return _select_pallas(ids, queries, lx, ly, hx, hy, child,
-                          interpret=(b == "pallas_interpret" or not _on_tpu()))
+    return kernel_call("select", "score", ids, queries, lx, ly, hx, hy,
+                       child, backend=backend)
 
 
 def knn_level_dists(ids, points, lx, ly, hx, hy, child, *,
@@ -53,12 +101,8 @@ def knn_level_dists(ids, points, lx, ly, hx, hy, child, *,
     (mindist, minmaxdist) each (B,C,F) f32 with DIST_PAD on invalid lanes.
     ``leaf=True`` selects the leaf-specialized variant (no MINMAXDIST math
     or store) and returns None for the bound."""
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _ref.knn_level_dists_ref(ids, points, lx, ly, hx, hy, child,
-                                        leaf=leaf)
-    return _knn_pallas(ids, points, lx, ly, hx, hy, child, leaf=leaf,
-                       interpret=(b == "pallas_interpret" or not _on_tpu()))
+    return kernel_call("knn", "score", ids, points, lx, ly, hx, hy, child,
+                       leaf=leaf, backend=backend)
 
 
 def knn_join_level_dists(ids, qrects, lx, ly, hx, hy, child, *,
@@ -67,72 +111,39 @@ def knn_join_level_dists(ids, qrects, lx, ly, hx, hy, child, *,
     (mindist, minmaxdist) each (B,C,F) f32 with DIST_PAD on invalid lanes.
     ``leaf=True`` selects the leaf-specialized variant (no MINMAXDIST math or
     store) and returns None for the bound."""
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _ref.knn_join_level_dists_ref(ids, qrects, lx, ly, hx, hy,
-                                             child, leaf=leaf)
-    return _knn_join_pallas(ids, qrects, lx, ly, hx, hy, child, leaf=leaf,
-                            interpret=(b == "pallas_interpret"
-                                       or not _on_tpu()))
+    return kernel_call("knn_join", "score", ids, qrects, lx, ly, hx, hy,
+                       child, leaf=leaf, backend=backend)
 
 
 def join_pair_masks(o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords,
                     to: int = 8, ti: int = 128, backend: str = "auto"):
     """Pair-frontier tile masks: (P,) × (P,) node ids → (P, F_o, F_i)."""
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _ref.join_pair_masks_ref(o_ids, i_ids, alive_cnt, flip_max,
-                                        o_coords, i_coords, to=to, ti=ti)
-    return _join_pallas(o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords,
-                        to=to, ti=ti,
-                        interpret=(b == "pallas_interpret" or not _on_tpu()))
+    return kernel_call("join", "score", o_ids, i_ids, alive_cnt, flip_max,
+                       o_coords, i_coords, to=to, ti=ti, backend=backend)
 
-
-# ---------------------------------------------------------------------------
-# Fused whole-level steps (``fused=True`` operator paths): one device
-# program per BFS level — score + emission (compaction / τ top-k / beam)
-# with no (B, C, F) intermediate.  backend='xla' is the bit-compatible jnp
-# twin (the differential reference the Pallas kernels are swept against).
-# ---------------------------------------------------------------------------
 
 def select_level_fused(ids, queries, lx, ly, hx, hy, child, *, cap: int,
                        backend: str = "auto"):
     """Fused select level: (B,C) ids × (B,4) queries → (next_ids (B,cap),
     counts (B,), overflow (B,)) — compact_rows' contract, in one step."""
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _ref.select_level_fused_ref(ids, queries, lx, ly, hx, hy,
-                                           child, cap=cap)
-    return _select_fused_pallas(
-        ids, queries, lx, ly, hx, hy, child, cap=cap,
-        interpret=(b == "pallas_interpret" or not _on_tpu()))
+    return kernel_call("select", "fused", ids, queries, lx, ly, hx, hy,
+                       child, cap=cap, backend=backend)
 
 
 def knn_level_fused(ids, points, lx, ly, hx, hy, child, tau, *, cap: int,
                     k: int, tighten: bool, backend: str = "auto"):
     """Fused kNN internal level: → (next_ids (B,cap), τ (B,),
     valid_cnt (B,), keep_cnt (B,))."""
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _ref.knn_level_fused_ref(ids, points, lx, ly, hx, hy, child,
-                                        tau, cap=cap, k=k, tighten=tighten)
-    return _knn_fused_pallas(
-        ids, points, lx, ly, hx, hy, child, tau, cap=cap, k=k,
-        tighten=tighten,
-        interpret=(b == "pallas_interpret" or not _on_tpu()))
+    return kernel_call("knn", "fused", ids, points, lx, ly, hx, hy, child,
+                       tau, cap=cap, k=k, tighten=tighten, backend=backend)
 
 
 def knn_leaf_fused(ids, points, lx, ly, hx, hy, child, *, k: int,
                    backend: str = "auto"):
     """Fused kNN leaf level: → (res_ids (B,k), res_d (B,k), valid_cnt (B,));
     missing neighbours are (-1, +inf)."""
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _ref.knn_leaf_fused_ref(ids, points, lx, ly, hx, hy, child,
-                                       k=k)
-    return _knn_leaf_fused_pallas(
-        ids, points, lx, ly, hx, hy, child, k=k,
-        interpret=(b == "pallas_interpret" or not _on_tpu()))
+    return kernel_call("knn", "fused_leaf", ids, points, lx, ly, hx, hy,
+                       child, k=k, backend=backend)
 
 
 def knn_join_level_fused(ids, qrects, lx, ly, hx, hy, child, tau, *,
@@ -140,28 +151,17 @@ def knn_join_level_fused(ids, qrects, lx, ly, hx, hy, child, tau, *,
                          backend: str = "auto"):
     """Fused kNN-join internal level (rect queries): contract as
     ``knn_level_fused``."""
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _ref.knn_join_level_fused_ref(ids, qrects, lx, ly, hx, hy,
-                                             child, tau, cap=cap, k=k,
-                                             tighten=tighten)
-    return _knn_join_fused_pallas(
-        ids, qrects, lx, ly, hx, hy, child, tau, cap=cap, k=k,
-        tighten=tighten,
-        interpret=(b == "pallas_interpret" or not _on_tpu()))
+    return kernel_call("knn_join", "fused", ids, qrects, lx, ly, hx, hy,
+                       child, tau, cap=cap, k=k, tighten=tighten,
+                       backend=backend)
 
 
 def knn_join_leaf_fused(ids, qrects, lx, ly, hx, hy, child, *, k: int,
                         backend: str = "auto"):
     """Fused kNN-join leaf level (rect queries): contract as
     ``knn_leaf_fused``."""
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _ref.knn_join_leaf_fused_ref(ids, qrects, lx, ly, hx, hy,
-                                            child, k=k)
-    return _knn_join_leaf_fused_pallas(
-        ids, qrects, lx, ly, hx, hy, child, k=k,
-        interpret=(b == "pallas_interpret" or not _on_tpu()))
+    return kernel_call("knn_join", "fused_leaf", ids, qrects, lx, ly, hx,
+                       hy, child, k=k, backend=backend)
 
 
 def join_level_fused(o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords,
@@ -169,15 +169,9 @@ def join_level_fused(o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords,
                      backend: str = "auto"):
     """Fused join level: pair frontier → (out_o (cap,), out_i (cap,), count,
     overflow) — compact_pairs' contract, in one step."""
-    b = resolve_backend(backend)
-    if b == "xla":
-        return _ref.join_level_fused_ref(
-            o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords, o_ptr,
-            i_ptr, cap=cap, to=to, ti=min(128, i_coords.shape[2]))
-    return _join_fused_pallas(
-        o_ids, i_ids, alive_cnt, flip_max, o_coords, i_coords, o_ptr, i_ptr,
-        cap=cap, to=to,
-        interpret=(b == "pallas_interpret" or not _on_tpu()))
+    return kernel_call("join", "fused", o_ids, i_ids, alive_cnt, flip_max,
+                       o_coords, i_coords, o_ptr, i_ptr, cap=cap, to=to,
+                       backend=backend)
 
 
 def join_prune_metadata(o_ids, i_ids, o_coords, i_coords, *, to: int = 8,

@@ -126,36 +126,30 @@ def _distance_leaf_fused_ref(md, ptr, *, k: int):
     return res_ids, res_d, valid_cnt
 
 
-def knn_level_fused_ref(ids, points, lx, ly, hx, hy, child, tau, *,
+def _make_distance_fused_refs(dists_ref):
+    """Build the (internal-level, leaf) fused twins for one distance score
+    stage — the emission machinery is shared, so the kNN and kNN-join twins
+    differ only in the ``dists_ref`` they compose."""
+    def level_fused_ref(ids, queries, lx, ly, hx, hy, child, tau, *,
                         cap: int, k: int, tighten: bool):
-    """Twin of kernels.rtree_knn.knn_level_fused."""
-    md, mmd = knn_level_dists_ref(ids, points, lx, ly, hx, hy, child)
-    ptr = child[jnp.maximum(ids, 0)]
-    return _distance_level_fused_ref(md, mmd, ptr, tau, cap=cap, k=k,
-                                     tighten=tighten)
+        md, mmd = dists_ref(ids, queries, lx, ly, hx, hy, child)
+        ptr = child[jnp.maximum(ids, 0)]
+        return _distance_level_fused_ref(md, mmd, ptr, tau, cap=cap, k=k,
+                                         tighten=tighten)
+
+    def leaf_fused_ref(ids, queries, lx, ly, hx, hy, child, *, k: int):
+        md, _ = dists_ref(ids, queries, lx, ly, hx, hy, child, leaf=True)
+        return _distance_leaf_fused_ref(md, child[jnp.maximum(ids, 0)], k=k)
+
+    return level_fused_ref, leaf_fused_ref
 
 
-def knn_leaf_fused_ref(ids, points, lx, ly, hx, hy, child, *, k: int):
-    """Twin of kernels.rtree_knn.knn_leaf_fused."""
-    md, _ = knn_level_dists_ref(ids, points, lx, ly, hx, hy, child,
-                                leaf=True)
-    return _distance_leaf_fused_ref(md, child[jnp.maximum(ids, 0)], k=k)
-
-
-def knn_join_level_fused_ref(ids, qrects, lx, ly, hx, hy, child, tau, *,
-                             cap: int, k: int, tighten: bool):
-    """Twin of kernels.rtree_knn_join.knn_join_level_fused."""
-    md, mmd = knn_join_level_dists_ref(ids, qrects, lx, ly, hx, hy, child)
-    ptr = child[jnp.maximum(ids, 0)]
-    return _distance_level_fused_ref(md, mmd, ptr, tau, cap=cap, k=k,
-                                     tighten=tighten)
-
-
-def knn_join_leaf_fused_ref(ids, qrects, lx, ly, hx, hy, child, *, k: int):
-    """Twin of kernels.rtree_knn_join.knn_join_leaf_fused."""
-    md, _ = knn_join_level_dists_ref(ids, qrects, lx, ly, hx, hy, child,
-                                     leaf=True)
-    return _distance_leaf_fused_ref(md, child[jnp.maximum(ids, 0)], k=k)
+# Twins of kernels.rtree_knn.knn_level_fused / knn_leaf_fused
+knn_level_fused_ref, knn_leaf_fused_ref = \
+    _make_distance_fused_refs(knn_level_dists_ref)
+# Twins of kernels.rtree_knn_join.knn_join_level_fused / knn_join_leaf_fused
+knn_join_level_fused_ref, knn_join_leaf_fused_ref = \
+    _make_distance_fused_refs(knn_join_level_dists_ref)
 
 
 def join_level_fused_ref(o_ids, i_ids, alive_cnt, flip_max, o_coords,

@@ -2,15 +2,21 @@
 feature.
 
 Builds a spatially-partitioned index fleet (distributed/spatial_shard.py),
-then serves batched range-select, kNN, or kNN-join requests (the latter two
-with two-phase τ-bounded routing), with deadline-based straggler re-issue
-for select (runtime/straggler.py).
+then serves batched requests for any operator in the traversal spec
+registry (core/traversal.py): range select (with deadline-based straggler
+re-issue, runtime/straggler.py), spatial join, kNN and kNN-join (two-phase
+τ-bounded routing), and resumable distance browsing (k-at-a-time kNN).
 
     PYTHONPATH=src python -m repro.launch.serve --n 200000 --partitions 8 \
         --batches 20 --batch-size 64 --selectivity 0.001
 
-Also exposes ``--mode lm`` to drive the LM decode path (reduced config)
-as a batched token service — both serving styles share the launcher.
+``--mode`` resolves through the spec registry — a newly registered
+``OperatorSpec`` must come with a serve runner (registry/runner coverage is
+asserted on every spatial serve run and by tests/test_serve_modes.py), so
+the served surface can never silently lag the operator family.  ``--dryrun``
+shrinks every size for the CI smoke that instantiates each registered spec
+end-to-end.  ``--mode lm`` drives the LM decode path (reduced config) as a
+batched token service — both serving styles share the launcher.
 """
 from __future__ import annotations
 
@@ -19,9 +25,20 @@ import time
 
 import numpy as np
 
-from repro.core import str_pack
+from repro.core import str_pack, traversal
 from repro.distributed.spatial_shard import SpatialShards
 from repro.runtime.straggler import ShardPool
+
+# CLI mode → registered spec name (CLI keeps the historical hyphenated
+# spellings; 'spatial' is the historical alias for select)
+MODE_TO_SPEC = {
+    "spatial": "select",
+    "select": "select",
+    "join": "join",
+    "knn": "knn",
+    "knn-join": "knn_join",
+    "browse": "browse",
+}
 
 
 def make_queries(n: int, batch: int, selectivity: float, seed: int = 1):
@@ -32,32 +49,7 @@ def make_queries(n: int, batch: int, selectivity: float, seed: int = 1):
     return np.concatenate([lo, lo + side], axis=-1)
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="spatial",
-                    choices=["spatial", "knn", "knn-join", "lm"])
-    ap.add_argument("--k", type=int, default=8,
-                    help="neighbors per query (knn / knn-join modes)")
-    ap.add_argument("--query-eps", type=float, default=0.002,
-                    help="half-extent of the outer query rects "
-                         "(knn-join mode)")
-    ap.add_argument("--n", type=int, default=200_000)
-    ap.add_argument("--partitions", type=int, default=8)
-    ap.add_argument("--fanout", type=int, default=64)
-    ap.add_argument("--batches", type=int, default=20)
-    ap.add_argument("--batch-size", type=int, default=64)
-    ap.add_argument("--selectivity", type=float, default=0.001)
-    ap.add_argument("--deadline", type=float, default=5.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
-
-    if args.mode == "lm":
-        return _serve_lm(args)
-    if args.mode == "knn":
-        return _serve_knn(args)
-    if args.mode == "knn-join":
-        return _serve_knn_join(args)
-
+def _build_shards(args):
     rng = np.random.default_rng(args.seed)
     pts = rng.random((args.n, 2), dtype=np.float32)
     rects = str_pack.points_to_rects(pts)
@@ -65,7 +57,12 @@ def main(argv=None):
     shards = SpatialShards.build(rects, args.partitions, fanout=args.fanout)
     print(f"built {len(shards.partitions)} partitions over {args.n} rects "
           f"in {time.time() - t0:.2f}s")
+    return rng, rects, shards
 
+
+def _serve_select(args, spec):
+    """Distributed range select behind the straggler pool."""
+    rng, _, shards = _build_shards(args)
     qs = make_queries(args.batches, args.batch_size, args.selectivity,
                       args.seed + 1)
     # warm the per-partition compiled selects
@@ -88,18 +85,11 @@ def main(argv=None):
     return {"qps": qps, "results": total}
 
 
-def _serve_knn(args):
+def _serve_knn(args, spec):
     """Batched k-nearest-neighbor service over the partitioned index fleet:
     per-query primary-partition answer + τ-bounded secondary fan-out with
     cross-shard top-k merge (distributed/spatial_shard.py)."""
-    rng = np.random.default_rng(args.seed)
-    pts = rng.random((args.n, 2), dtype=np.float32)
-    rects = str_pack.points_to_rects(pts)
-    t0 = time.time()
-    shards = SpatialShards.build(rects, args.partitions, fanout=args.fanout)
-    print(f"built {len(shards.partitions)} partitions over {args.n} rects "
-          f"in {time.time() - t0:.2f}s")
-
+    rng, _, shards = _build_shards(args)
     qs = rng.random((args.batches, args.batch_size, 2), dtype=np.float32)
     # compile every partition's kNN at this batch bucket up front so no
     # XLA compile (or spurious straggler re-issue) lands in the timed loop
@@ -126,19 +116,12 @@ def _serve_knn(args):
     return {"qps": qps, "neighbors": returned, "overflow": overflowed}
 
 
-def _serve_knn_join(args):
+def _serve_knn_join(args, spec):
     """Batched kNN-join service: for each outer query rect, its k nearest
     indexed rects across the partition fleet (rect-to-rect MINDIST) — the
     all-pairs distance operator as a served endpoint, two-phase routed with
     τ-bounded secondary fan-out (distributed/spatial_shard.py)."""
-    rng = np.random.default_rng(args.seed)
-    pts = rng.random((args.n, 2), dtype=np.float32)
-    rects = str_pack.points_to_rects(pts)
-    t0 = time.time()
-    shards = SpatialShards.build(rects, args.partitions, fanout=args.fanout)
-    print(f"built {len(shards.partitions)} partitions over {args.n} rects "
-          f"in {time.time() - t0:.2f}s")
-
+    rng, _, shards = _build_shards(args)
     eps = np.float32(args.query_eps)
     centers = rng.random((args.batches, args.batch_size, 2), dtype=np.float32)
     qs = np.concatenate([centers - eps, centers + eps], axis=-1)
@@ -159,6 +142,136 @@ def _serve_knn_join(args):
           + (", WARNING: beam truncation — results may be approximate"
              if overflowed else ""))
     return {"qps": qps, "neighbors": returned, "overflow": overflowed}
+
+
+def _serve_join(args, spec):
+    """Spatial-join service: repeated full nested-index joins of the data
+    tree against per-batch probe trees (one compiled pair engine)."""
+    from repro.core import join_vector, rtree
+
+    rng = np.random.default_rng(args.seed)
+    pts = rng.random((args.n, 2), dtype=np.float32)
+    rects = str_pack.points_to_rects(pts)
+    n_probe = max(args.n // 10, 64)
+    probe_pts = rng.random((n_probe, 2), dtype=np.float32)
+    eps = np.float32(args.query_eps)
+    probes = np.concatenate([probe_pts - eps, probe_pts + eps], axis=-1)
+    t0 = time.time()
+    tree = rtree.build_rtree(rects, fanout=args.fanout, sort_key="lx")
+    probe_tree = rtree.build_rtree(probes, fanout=args.fanout, sort_key="lx")
+    print(f"built data tree ({args.n}) + probe tree ({n_probe}) in "
+          f"{time.time() - t0:.2f}s")
+    jn = join_vector.make_join_bfs(probe_tree, tree, o3=True, o4=True,
+                                   result_cap=args.join_cap)
+    pairs, n_pairs, ctr = jn()                       # warm/compile
+    t0 = time.time()
+    total = 0
+    for _ in range(args.batches):
+        pairs, n_pairs, ctr = jn()
+        total += int(n_pairs)
+    dt = time.time() - t0
+    jps = args.batches / dt
+    print(f"served {args.batches} joins in {dt:.2f}s → {jps:,.2f} joins/s, "
+          f"{total} pair rows"
+          + (", WARNING: pair-frontier overflow" if int(ctr.overflow)
+             else ""))
+    return {"joins_per_s": jps, "pairs": total,
+            "overflow": bool(int(ctr.overflow))}
+
+
+def _serve_browse(args, spec):
+    """Distance-browsing service: each request opens a resumable session
+    over its query batch and streams ``--browse-steps`` batches of k
+    neighbors — the incremental operator the fixed-k endpoints can't serve
+    without restarting from the root."""
+    import jax.numpy as jnp
+    from repro.core import knn_browse, rtree
+
+    rng = np.random.default_rng(args.seed)
+    pts = rng.random((args.n, 2), dtype=np.float32)
+    rects = str_pack.points_to_rects(pts)
+    t0 = time.time()
+    tree = rtree.build_rtree(rects, fanout=args.fanout)
+    print(f"built tree over {args.n} rects in {time.time() - t0:.2f}s")
+    start = knn_browse.make_browse_bfs(tree, k=args.k)
+    qs = rng.random((args.batches, args.batch_size, 2), dtype=np.float32)
+    # warm: one full session at the serving shape
+    warm = start(jnp.asarray(qs[0]))
+    for _ in range(args.browse_steps):
+        warm.next_batch()
+
+    t0 = time.time()
+    returned = 0
+    overflowed = False
+    for b in range(args.batches):
+        cursor = start(jnp.asarray(qs[b]))
+        for _ in range(args.browse_steps):
+            ids, dists = cursor.next_batch()
+            returned += int((ids >= 0).sum())
+        overflowed |= bool(cursor.overflow.any())
+    dt = time.time() - t0
+    qps = args.batches * args.batch_size / dt
+    print(f"served {args.batches} browse sessions × {args.batch_size} "
+          f"queries × {args.browse_steps} batches of k={args.k} in "
+          f"{dt:.2f}s → {qps:,.0f} sessions·q/s, {returned} neighbor rows"
+          + (", WARNING: lost-bound crossed — results may be approximate"
+             if overflowed else ""))
+    return {"qps": qps, "neighbors": returned, "overflow": overflowed}
+
+
+# spec name → serve runner; every registered OperatorSpec must be servable
+RUNNERS = {
+    "select": _serve_select,
+    "join": _serve_join,
+    "knn": _serve_knn,
+    "knn_join": _serve_knn_join,
+    "browse": _serve_browse,
+}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="spatial",
+                    choices=sorted(MODE_TO_SPEC) + ["lm"])
+    ap.add_argument("--k", type=int, default=8,
+                    help="neighbors per query/batch (knn / knn-join / "
+                         "browse modes)")
+    ap.add_argument("--query-eps", type=float, default=0.002,
+                    help="half-extent of the outer query rects "
+                         "(knn-join / join modes)")
+    ap.add_argument("--browse-steps", type=int, default=4,
+                    help="next_batch() calls per browse session")
+    ap.add_argument("--join-cap", type=int, default=1 << 17,
+                    help="result-pair capacity (join mode)")
+    ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--partitions", type=int, default=8)
+    ap.add_argument("--fanout", type=int, default=64)
+    ap.add_argument("--batches", type=int, default=20)
+    ap.add_argument("--batch-size", type=int, default=64)
+    ap.add_argument("--selectivity", type=float, default=0.001)
+    ap.add_argument("--deadline", type=float, default=5.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dryrun", action="store_true",
+                    help="tiny sizes: the CI smoke that instantiates every "
+                         "registered OperatorSpec through serve")
+    args = ap.parse_args(argv)
+
+    if args.dryrun:
+        args.n = min(args.n, 2000)
+        args.partitions = min(args.partitions, 2)
+        args.fanout = min(args.fanout, 16)
+        args.batches = min(args.batches, 2)
+        args.batch_size = min(args.batch_size, 8)
+        args.k = min(args.k, 4)
+        args.browse_steps = min(args.browse_steps, 2)
+        args.join_cap = min(args.join_cap, 1 << 15)
+
+    if args.mode == "lm":
+        return _serve_lm(args)
+    spec = traversal.get_spec(MODE_TO_SPEC[args.mode])
+    missing = set(traversal.spec_names()) - set(RUNNERS)
+    assert not missing, f"registered specs without a serve runner: {missing}"
+    return RUNNERS[spec.name](args, spec)
 
 
 def _serve_lm(args):

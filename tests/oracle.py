@@ -13,16 +13,24 @@ backend cells are skipped rather than errored so callers can request full
 matrices.  Fused cells (whole-level kernels with in-kernel emission) only
 exist on kernel backends, so fused × backend=None cells are skipped the
 same way.
+
+Every cell also validates its ``Counters.dispatches`` tally against the
+owning spec's stage model, and (once per layout × backend × fused
+combination) re-runs through the generic engine entry point
+``traversal.build(name, ...)`` asserting bit-exact parity — results,
+counts, and every counter field — with the preserved ``make_*_bfs``
+wrapper.
 """
 from __future__ import annotations
 
 import itertools
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (join_vector, knn_join_vector, knn_vector, rtree,
-                        select_vector)
+                        select_vector, traversal)
 from repro.core.geometry import (brute_force_knn, brute_force_knn_join,
                                  mindist_matrix_np, mindist_rect_matrix_np)
 
@@ -30,6 +38,16 @@ from conftest import brute_join, brute_select, uniform_rects
 
 LAYOUTS = ("d0", "d1", "d2")
 KERNEL_BACKENDS = ("xla", "pallas_interpret")
+
+
+def _assert_bitwise_equal(a, b, ctx):
+    """Result pytrees (arrays + Counters) must agree bit-for-bit."""
+    fa = jax.tree_util.tree_leaves(a)
+    fb = jax.tree_util.tree_leaves(b)
+    assert len(fa) == len(fb), ctx
+    for xa, xb in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb),
+                                      err_msg=ctx)
 
 
 def _check_knn_result(ids, d, oracle_d, rects, queries, dist_matrix_fn, ctx):
@@ -51,6 +69,18 @@ def _check_knn_result(ids, d, oracle_d, rects, queries, dist_matrix_fn, ctx):
 # --------------------------------------------------------------------------
 
 class _SelectOp:
+    spec_name = "select"
+
+    @staticmethod
+    def height(inst):
+        return inst["tree"].height
+
+    @staticmethod
+    def engine_args(inst, layout, backend, fused):
+        return (inst["tree"],), dict(layout=layout,
+                                     result_cap=inst["cap"],
+                                     backend=backend, fused=fused)
+
     @staticmethod
     def make(seed, n=2000, fanout=16, batch=4, side=0.06, **_):
         rng = np.random.default_rng(seed)
@@ -78,6 +108,19 @@ class _SelectOp:
 
 
 class _JoinOp:
+    spec_name = "join"
+
+    @staticmethod
+    def height(inst):
+        return max(inst["ta"].height, inst["tb"].height)
+
+    @staticmethod
+    def engine_args(inst, layout, backend, fused):
+        cap = 16384 if fused else 1 << 17
+        return (inst["ta"], inst["tb"]), dict(layout=layout,
+                                              result_cap=cap,
+                                              backend=backend, fused=fused)
+
     @staticmethod
     def make(seed, n=800, fanout=16, **_):
         rng = np.random.default_rng(seed)
@@ -107,6 +150,17 @@ class _JoinOp:
 
 
 class _KnnOp:
+    spec_name = "knn"
+
+    @staticmethod
+    def height(inst):
+        return inst["tree"].height
+
+    @staticmethod
+    def engine_args(inst, layout, backend, fused):
+        return (inst["tree"],), dict(k=inst["k"], layout=layout,
+                                     backend=backend, fused=fused)
+
     @staticmethod
     def make(seed, n=2500, fanout=16, batch=6, k=8, **_):
         rng = np.random.default_rng(seed)
@@ -133,6 +187,17 @@ class _KnnOp:
 
 
 class _KnnJoinOp:
+    spec_name = "knn_join"
+
+    @staticmethod
+    def height(inst):
+        return inst["tree"].height
+
+    @staticmethod
+    def engine_args(inst, layout, backend, fused):
+        return (inst["tree"],), dict(k=inst["k"], layout=layout,
+                                     backend=backend, fused=fused)
+
     @staticmethod
     def make(seed, n=2500, fanout=16, batch=6, k=8, eps=0.01, **_):
         rng = np.random.default_rng(seed)
@@ -173,11 +238,16 @@ def assert_matches_oracle(op: str, layouts=LAYOUTS, backends=(None,),
     (layout-specific jnp math) or kernel backends ('xla' /
     'pallas_interpret'); kernel cells only exist for layout='d1' and are
     skipped elsewhere, and fused cells only exist on kernel backends.
-    ``params`` tune the instance (n, fanout, batch, k, ...).  Returns the
-    number of cells actually verified (callers may assert coverage)."""
+    ``params`` tune the instance (n, fanout, batch, k, ...).  Every cell
+    validates its dispatch tally against the operator spec's stage model;
+    the first seed's cells additionally re-run through the generic engine
+    entry point (traversal.build) and must match the wrapper bit-for-bit.
+    Returns the number of cells actually verified (callers may assert
+    coverage)."""
     spec = OPS[op]
+    op_spec = traversal.get_spec(spec.spec_name)
     cells = 0
-    for seed in seeds:
+    for si, seed in enumerate(seeds):
         inst = spec.make(seed, **params)
         for layout, backend, fu in itertools.product(layouts, backends,
                                                      fused):
@@ -187,7 +257,18 @@ def assert_matches_oracle(op: str, layouts=LAYOUTS, backends=(None,),
                 continue
             ctx = f"{op} layout={layout} backend={backend} seed={seed} " \
                   f"fused={fu}"
-            spec.check(inst, spec.run(inst, layout, backend, fused=fu), ctx)
+            result = spec.run(inst, layout, backend, fused=fu)
+            spec.check(inst, result, ctx)
+            result[-1].validate_dispatches(op_spec.stage_model,
+                                           spec.height(inst), fused=fu)
+            if si == 0:
+                args, kwargs = spec.engine_args(inst, layout, backend, fu)
+                eng = traversal.build(spec.spec_name, *args, **kwargs)
+                qs = inst.get("queries")
+                eng_result = eng(jnp.asarray(qs)) if qs is not None \
+                    else eng()
+                _assert_bitwise_equal(result, eng_result,
+                                      f"engine-entry parity: {ctx}")
             cells += 1
     assert cells > 0, \
         f"no runnable cells for {op}: {layouts} × {backends} × {fused}"

@@ -12,8 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (join_vector, knn_join_vector, knn_vector, layouts,
-                        rtree, select_vector)
+from repro.core import (join_vector, knn_join_vector, knn_vector, rtree,
+                        select_vector)
 
 from conftest import uniform_rects
 from oracle import KERNEL_BACKENDS, assert_matches_oracle
@@ -186,17 +186,5 @@ def test_dispatch_reduction_at_height_3(tree_and_queries):
     assert int(tk1.dispatches) == tree.height
 
 
-# ---------------------------------------------------------------------------
-# frontier caps: TPU lane alignment (regression for ragged fused frontiers)
-# ---------------------------------------------------------------------------
-
-def test_frontier_caps_lane_aligned(tree_and_queries):
-    tree = tree_and_queries[0]
-    for cap in (select_vector.frontier_caps(tree, result_cap=1000) +
-                knn_vector.knn_frontier_caps(tree, k=7)):
-        assert cap % layouts.LANES == 0, cap
-    # the leaf-entering cap still clears the requested result budget
-    assert select_vector.frontier_caps(tree, result_cap=1000)[-1] >= 1000
-    assert layouts.round_up_to_lanes(1) == layouts.LANES
-    assert layouts.round_up_to_lanes(128) == 128
-    assert layouts.round_up_to_lanes(129) == 256
+# The frontier-caps lane-alignment regression lives with the unified caps
+# policy in tests/test_traversal.py (test_caps_lane_round_in_one_place).

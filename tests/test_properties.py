@@ -163,3 +163,36 @@ def test_property_knn_join_beam_within_bound(n, seed, cap):
         true_d = mindist_rect_matrix_np(outer[i], rects[ids[i][valid]])[0]
         np.testing.assert_allclose(true_d, d[i][valid], rtol=1e-4,
                                    atol=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(40, 2500), fanout=st.sampled_from([8, 16, 64]),
+       kb=st.sampled_from([1, 3, 8]), k=st.integers(1, 48),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_browse_prefix_consistency(n, fanout, kb, k, seed):
+    """Distance browsing emits the global nearest-neighbor order: for every
+    sampled k, the first k browsed results equal make_knn_bfs(k) — same
+    distances bit-for-bit, ids identical away from distance ties — with the
+    session resuming across batches rather than restarting from the root."""
+    from repro.core import knn_browse
+    rng = np.random.default_rng(seed)
+    rects = uniform_rects(rng, n, eps=0.002)
+    t = rtree.build_rtree(rects, fanout=fanout)
+    pts = rng.random((3, 2)).astype(np.float32)
+    cur = knn_browse.browse_knn(t, jnp.asarray(pts), k=kb)
+    steps = -(-k // kb)
+    ids, ds = [], []
+    for _ in range(steps):
+        i, d = cur.next_batch()
+        ids.append(i)
+        ds.append(d)
+    ids = np.concatenate(ids, axis=1)[:, :k]
+    d = np.concatenate(ds, axis=1)[:, :k]
+    assert not cur.overflow.any()
+    fi, fd, fc = knn_vector.make_knn_bfs(t, k=k)(jnp.asarray(pts))
+    fi, fd = np.asarray(fi), np.asarray(fd)
+    assert int(fc.overflow) == 0
+    np.testing.assert_array_equal(d, fd)
+    diff = ids != fi
+    if diff.any():                     # ids may differ only at tied distances
+        np.testing.assert_array_equal(d[diff], fd[diff])

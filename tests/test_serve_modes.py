@@ -1,0 +1,28 @@
+"""Fast-lane smoke: every registered OperatorSpec is servable end-to-end.
+
+``serve --dryrun`` shrinks all sizes, so each mode builds its (tiny) index
+fleet, compiles its engines through the spec registry, and serves a couple
+of batches — the cheapest full-stack instantiation of each operator.  The
+coverage assertion guarantees a newly registered spec cannot ship without a
+serve runner and without this smoke exercising it.
+"""
+import pytest
+
+from repro.core import traversal
+from repro.launch import serve
+
+
+def test_every_spec_has_a_serve_runner():
+    assert set(serve.RUNNERS) == set(traversal.spec_names())
+    # every spec is reachable from at least one CLI mode
+    assert set(serve.MODE_TO_SPEC.values()) == set(traversal.spec_names())
+
+
+@pytest.mark.parametrize("mode", sorted(serve.MODE_TO_SPEC))
+def test_serve_mode_dryrun(mode):
+    res = serve.main(["--mode", mode, "--dryrun"])
+    assert isinstance(res, dict) and res
+    if "overflow" in res:
+        assert res["overflow"] is False, mode
+    value_key = "joins_per_s" if mode == "join" else "qps"
+    assert res[value_key] > 0

@@ -1,0 +1,183 @@
+"""Spec-driven traversal engine: registry, caps policy, dispatch model.
+
+The bit-exact engine-vs-wrapper parity over the full operator matrix lives
+in oracle.assert_matches_oracle (every oracle-backed test drives it); this
+file covers the engine's static surfaces — the spec registry, the unified
+caps policy (frozen against the pre-unification values for the bench
+configurations), and the stage-model dispatch validation.
+"""
+import numpy as np
+import pytest
+
+from repro.core import caps, rtree, traversal
+from repro.core.counters import Counters, StageModel
+from repro.core.layouts import LANES
+
+from conftest import uniform_rects
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_all_operators():
+    names = traversal.spec_names()
+    assert set(names) >= {"select", "join", "knn", "knn_join", "browse"}
+    for name in names:
+        spec = traversal.get_spec(name)
+        assert spec.kind in ("mask", "distance")
+        assert callable(spec.builder)
+        assert spec.stage_model.inner > 0 and spec.stage_model.leaf > 0
+
+
+def test_registry_unknown_spec():
+    with pytest.raises(KeyError):
+        traversal.get_spec("nope")
+
+
+# ---------------------------------------------------------------------------
+# unified caps policy — regression against the pre-unification outputs
+# ---------------------------------------------------------------------------
+
+class _FakeLevel:
+    def __init__(self, n):
+        self.n_nodes = n
+
+
+class _FakeTree:
+    """Caps only consume (height, fanout, per-level node counts)."""
+    def __init__(self, fanout, sizes):
+        self.fanout = fanout
+        self.height = len(sizes)
+        self.levels = [_FakeLevel(n) for n in sizes]
+
+
+# (fanout, level sizes leaf→root) for the bench configurations, with the
+# caps each policy produced before the unification (frozen 2026-07).
+_BENCH_TREES = {
+    "select_1m_f16": (16, [62500, 3910, 256, 16, 1]),
+    "select_200k_f16": (16, [12544, 784, 49, 4, 1]),
+    "f64_200k": (64, [3136, 49, 1]),
+    "f256_50k": (256, [196, 1]),
+    "oracle_2500_f16": (16, [160, 12, 1]),
+}
+
+_EXPECTED = {
+    # (policy, tree key, target) → caps
+    ("select", "select_1m_f16", 4096): (128, 128, 1024, 16384),
+    ("select", "select_200k_f16", 4096): (128, 128, 896, 12544),
+    ("select", "select_200k_f16", 1000): (128, 128, 256, 4096),
+    ("select", "f64_200k", 4096): (128, 4096),
+    ("select", "f256_50k", 4096): (4096,),
+    ("select", "oracle_2500_f16", 4096): (128, 4096),
+    ("knn", "select_200k_f16", 8): (128, 128, 128, 128),
+    ("knn", "select_200k_f16", 64): (128, 128, 128, 256),
+    ("knn", "f64_200k", 8): (128, 128),
+    ("knn", "oracle_2500_f16", 64): (128, 256),
+    ("join", "select_200k_f16", 65536): (1024, 1024, 1024, 16384, 65536),
+    ("join", "select_200k_f16", 16384): (1024, 1024, 1024, 4096, 16384),
+    ("join", "f64_200k", 65536): (1024, 4096, 65536),
+    ("join", "oracle_2500_f16", 16384): (1024, 4096, 16384),
+}
+
+
+@pytest.mark.parametrize("policy,tree_key,target",
+                         sorted(_EXPECTED, key=str))
+def test_caps_reproduce_pre_unification_values(policy, tree_key, target):
+    fanout, sizes = _BENCH_TREES[tree_key]
+    tree = _FakeTree(fanout, sizes)
+    if policy == "select":
+        got = caps.select_frontier_caps(tree, target)
+    elif policy == "knn":
+        got = caps.knn_frontier_caps(tree, target)
+    else:
+        got = caps.join_pair_caps(tree.height, fanout, target)
+    assert got == _EXPECTED[(policy, tree_key, target)]
+
+
+def test_caps_bench_slack_variant():
+    # bench_select passes slack=2, min_cap=32 — frozen value for 200k/f16
+    tree = _FakeTree(*_BENCH_TREES["select_200k_f16"])
+    assert caps.select_frontier_caps(tree, 4096, slack=2, min_cap=32) == \
+        (128, 128, 512, 8192)
+
+
+def test_caps_match_real_tree():
+    """The fake-tree regression values reproduce on an actually-built tree
+    (same level sizes ⇒ same caps through the module-level wrappers)."""
+    from repro.core import join_vector, knn_vector, select_vector
+    rng = np.random.default_rng(3)
+    tree = rtree.build_rtree(uniform_rects(rng, 2500, eps=0.002), fanout=16)
+    fake = _FakeTree(tree.fanout,
+                     [lvl.n_nodes for lvl in tree.levels])
+    assert select_vector.frontier_caps(tree, 4096) == \
+        caps.select_frontier_caps(fake, 4096)
+    assert knn_vector.knn_frontier_caps(tree, 8) == \
+        caps.knn_frontier_caps(fake, 8)
+    assert join_vector.default_pair_caps(tree.height, 16, 16384) == \
+        caps.join_pair_caps(fake.height, 16, 16384)
+
+
+def test_caps_lane_round_in_one_place():
+    """Row-frontier caps are lane multiples (regression for ragged fused
+    frontiers); the join's flat pair caps are exempt by policy, not by a
+    second rounding implementation."""
+    tree = _FakeTree(*_BENCH_TREES["select_200k_f16"])
+    for c in (caps.select_frontier_caps(tree, 1000) +
+              caps.knn_frontier_caps(tree, 7)):
+        assert c % LANES == 0
+    # the leaf-entering select cap still clears the requested result budget
+    assert caps.select_frontier_caps(tree, 1000)[-1] >= 1000
+    fr, defer, pool = caps.browse_caps(tree, 7)
+    for c in fr + defer[:-1] + (pool,):
+        assert c % LANES == 0
+    assert defer[-1] == 1                       # the root defer slot
+    assert len(defer) == tree.height
+    assert pool >= 7
+    from repro.core.layouts import round_up_to_lanes
+    assert round_up_to_lanes(1) == LANES
+    assert round_up_to_lanes(128) == 128
+    assert round_up_to_lanes(129) == 256
+
+
+# ---------------------------------------------------------------------------
+# stage-model dispatch validation
+# ---------------------------------------------------------------------------
+
+def test_stage_model_totals():
+    sm = StageModel(inner=4, leaf=3, fused=1)
+    assert sm.total(1) == 3                      # leaf-only tree
+    assert sm.total(4) == 3 * 4 + 3
+    assert sm.total(4, fused=True) == 4
+    assert sm.total(3, descents=5) == 5 * (2 * 4 + 3)
+    with pytest.raises(ValueError):
+        StageModel(inner=8, leaf=3).total(3, fused=True)
+
+
+def test_counters_validate_dispatches():
+    sm = StageModel(inner=3, leaf=3, fused=1)
+    Counters(dispatches=9).validate_dispatches(sm, 3)
+    with pytest.raises(AssertionError):
+        Counters(dispatches=8).validate_dispatches(sm, 3)
+    with pytest.raises(AssertionError):
+        # a fused run must not pass validation against the unfused model
+        Counters(dispatches=3).validate_dispatches(sm, 3, fused=False)
+
+
+def test_engine_charges_spec_stage_model():
+    """An under- (or over-) counting operator cannot pass: the engine's
+    tally is derived from the spec the operator registered."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(5)
+    tree = rtree.build_rtree(uniform_rects(rng, 2000, eps=0.003), fanout=16)
+    q = jnp.asarray(rng.random((3, 2)).astype(np.float32))
+    for fused, backend in ((False, None), (True, "xla")):
+        fn = traversal.build("knn", tree, k=5, backend=backend, fused=fused)
+        _, _, ctr = fn(q)
+        spec = traversal.get_spec("knn")
+        ctr.validate_dispatches(spec.stage_model, tree.height, fused=fused)
+        wrong = StageModel(inner=spec.stage_model.inner + 1,
+                           leaf=spec.stage_model.leaf,
+                           fused=(spec.stage_model.fused or 0) + 1)
+        with pytest.raises(AssertionError):
+            ctr.validate_dispatches(wrong, tree.height, fused=fused)
