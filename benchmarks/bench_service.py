@@ -1,13 +1,27 @@
 """Distributed spatial service throughput (beyond-paper: the deployment
-benchmark) — partitioned fleet QPS vs a single monolithic tree."""
+benchmark) — partitioned fleet QPS vs a single monolithic tree, and the
+host-orchestrated fan-out vs the mesh-sharded one-program path.
+
+``run()`` reproduces the historical monolithic-vs-partitioned select rows.
+``run_sharded()`` sweeps partition counts over {select, knn} × {host,
+mesh}: the host path issues one jit round-trip per touched partition per
+phase, the mesh path executes the whole batch as ONE ``shard_map`` program
+(routing, per-partition BFS, and the cross-shard τ/top-k merge all
+in-program — distributed/spatial_shard.enable_mesh).  The summary lands in
+``BENCH_shard.json``; ``--dryrun`` shrinks sizes for the CI slow lane and
+asserts host ≡ mesh outputs while it is at it.
+"""
 from __future__ import annotations
+
+import argparse
+import json
 
 import numpy as np
 
 from repro.core import rtree, select_vector
 from repro.distributed.spatial_shard import SpatialShards
 
-from .common import Rows, point_rects, square_queries, time_fn
+from .common import Rows, point_rects, square_queries, time_fn, uniform_points
 
 
 def run(n: int = 500_000, partitions: int = 8, fanout: int = 64,
@@ -31,5 +45,72 @@ def run(n: int = 500_000, partitions: int = 8, fanout: int = 64,
     return rows
 
 
+def run_sharded(n: int = 200_000, partition_counts=(2, 4, 8),
+                fanout: int = 64, batch: int = 64, k: int = 8,
+                selectivity: float = 0.001, seed: int = 0,
+                out_json: str = "BENCH_shard.json", check: bool = False):
+    """Host-orchestrated vs mesh-SPMD sweep → BENCH_shard.json."""
+    import jax
+    rows = Rows("spatial_service_sharded")
+    rects = point_rects(n, seed)
+    qs4 = square_queries(batch, selectivity, seed + 1)
+    pts = uniform_points(batch, seed + 2)
+    summary = {"n": n, "fanout": fanout, "batch": batch, "k": k,
+               "devices": len(jax.devices()), "sweep": []}
+
+    for p in partition_counts:
+        # one fleet per cell: time the host fan-out first, then flip the
+        # same object onto the mesh path (enable_mesh only packs/dispatches
+        # — the partitions are untouched)
+        shards = SpatialShards.build(rects, p, fanout=fanout)
+        cell = {"partitions": len(shards.partitions)}
+        shards.warm("select", batch)
+        shards.warm("knn", batch, k=k)
+        dt_h, out_h = time_fn(lambda: shards.range_select(qs4))
+        dt_hk, knn_h = time_fn(lambda: shards.knn(pts, k))
+        shards.enable_mesh()
+        shards.warm("select", batch)
+        shards.warm("knn", batch, k=k)
+        dt_m, out_m = time_fn(lambda: shards.range_select(qs4))
+        dt_mk, knn_m = time_fn(lambda: shards.knn(pts, k))
+        cell["select_host_qps"] = batch / dt_h
+        cell["select_mesh_qps"] = batch / dt_m
+        cell["knn_host_qps"] = batch / dt_hk
+        cell["knn_mesh_qps"] = batch / dt_mk
+        cell["knn_mesh_dispatches"] = int(shards.last_counters.dispatches)
+        if check:
+            for a, b in zip(out_h, out_m):
+                np.testing.assert_array_equal(a, b)
+            np.testing.assert_array_equal(knn_h[0], knn_m[0])
+            np.testing.assert_array_equal(knn_h[1], knn_m[1])
+        summary["sweep"].append(cell)
+        rows.add(partitions=cell["partitions"],
+                 select_host_qps=round(cell["select_host_qps"], 1),
+                 select_mesh_qps=round(cell["select_mesh_qps"], 1),
+                 knn_host_qps=round(cell["knn_host_qps"], 1),
+                 knn_mesh_qps=round(cell["knn_mesh_qps"], 1),
+                 dispatches=cell["knn_mesh_dispatches"])
+
+    with open(out_json, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"wrote {out_json}")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", action="store_true",
+                    help="tiny sizes for the CI slow lane; asserts host ≡ "
+                         "mesh outputs")
+    ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--k", type=int, default=8)
+    args = ap.parse_args(argv)
+    if args.dryrun:
+        return run_sharded(n=8000, partition_counts=(2, 4), fanout=16,
+                           batch=16, k=4, check=True)
+    return run_sharded(n=args.n, batch=args.batch, k=args.k)
+
+
 if __name__ == "__main__":
-    run()
+    main()

@@ -93,6 +93,9 @@ def main(argv=None):
         from . import bench_service
         print(f"[spatial service]  n={n_service}")
         all_rows.append(bench_service.run(n=n_service))
+        print(f"[spatial service sharded: host fan-out vs mesh SPMD]  "
+              f"n={n_service // 4}")
+        all_rows.append(bench_service.run_sharded(n=n_service // 4))
     if want("lm"):
         from . import bench_lm
         print("[lm steps]")

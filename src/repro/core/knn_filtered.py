@@ -1,0 +1,128 @@
+"""Filtered k-nearest-neighbor: kNN whose candidates must intersect a
+per-query filter window (ROADMAP "weighted/filtered kNN predicates").
+
+Each query row is 6 columns — a point (px, py) plus a filter rect
+(wlx, wly, whx, why); the answer is the k nearest data rects *among those
+intersecting the window*.  The operator is a new ``OperatorSpec`` over the
+unchanged spec-driven distance engine (core/traversal.py): only the score
+stage differs, composing two predicate masks into the distance stream
+before the engine's τ pruning ever sees it:
+
+  qualify   — a node (or leaf rect) whose MBR does not intersect the window
+              cannot hold (or be) a qualifying candidate → its MINDIST
+              becomes DIST_PAD, so the engine prunes/skips it for free.
+  guarantee — τ tightening via MINMAXDIST assumes every child MBR
+              guarantees one *qualifying* object.  Under a filter that
+              only holds for children fully **contained** in the window
+              (everything inside them qualifies), so MINMAXDIST is masked
+              to contained children.  Partially-overlapping children keep
+              contributing candidates but never tighten τ — sound, at the
+              price of weaker pruning, which is why the default caps policy
+              carries extra slack (``filtered_caps``).
+
+With the whole-universe window every mask passes and the operator reduces
+to plain kNN (asserted in tests).  Because it is just another registered
+spec, the distributed layer serves it with zero new code: the host
+two-phase router and the mesh ``shard_map`` dispatcher both resolve it
+through the registry (``serve --mode knn-filtered``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import caps as caps_policy
+from . import traversal
+from .counters import StageModel
+from .geometry import DIST_PAD, intersects, mindist, minmaxdist
+from .join_vector import _gather_children
+from .layouts import tree_layout
+from .rtree import RTree
+
+
+def filtered_caps(tree: RTree, k: int, slack: int = 8,
+                  min_cap: int = 256) -> Tuple[int, ...]:
+    """kNN caps with extra headroom: τ only tightens on window-contained
+    children, so frontiers shrink later than in unfiltered kNN."""
+    return caps_policy.knn_frontier_caps(tree, k, slack=slack,
+                                         min_cap=min_cap)
+
+
+def make_knn_filtered_score(tree: RTree, layout: str,
+                            backend: Optional[str]):
+    """Build the filtered-kNN score stage + engine context.
+
+    Contract as ``knn_vector.make_knn_score`` with 6-column query rows.
+    The kernel backends would need a fused window-mask variant (future
+    Mosaic work); the jnp layouts D0/D1/D2 are all supported.
+    """
+    if backend is not None:
+        raise ValueError("knn_filtered has no kernel backend yet "
+                         "(window masks are composed in jnp)")
+    layers = tree_layout(tree, layout)
+
+    def score(ctx, li, ids, queries, leaf):
+        layers_, = ctx
+        b, c = ids.shape
+        (lx, ly, hx, hy, ptr), stages = _gather_children(layers_[li],
+                                                         ids.reshape(-1))
+        f = lx.shape[-1]
+        lx, ly, hx, hy = (a.reshape(b, c, f) for a in (lx, ly, hx, hy))
+        ptr = ptr.reshape(b, c, f)
+        px = queries[:, 0, None, None]
+        py = queries[:, 1, None, None]
+        wlx = queries[:, 2, None, None]
+        wly = queries[:, 3, None, None]
+        whx = queries[:, 4, None, None]
+        why = queries[:, 5, None, None]
+        valid = (ids >= 0)[:, :, None] & (ptr >= 0)
+        inter = intersects(wlx, wly, whx, why, lx, ly, hx, hy)
+        md = mindist(px, py, lx, ly, hx, hy)
+        md = jnp.where(valid & inter, md, DIST_PAD)
+        if leaf:
+            return md, None, ptr, stages
+        contained = (lx >= wlx) & (ly >= wly) & (hx <= whx) & (hy <= why)
+        mmd = minmaxdist(px, py, lx, ly, hx, hy)
+        mmd = jnp.where(valid & contained, mmd, DIST_PAD)
+        return md, mmd, ptr, stages
+
+    return (layers,), score
+
+
+def make_knn_filtered_bfs(tree: RTree, k: int, layout: str = "d1",
+                          caps: Optional[Sequence[int]] = None,
+                          backend: Optional[str] = None,
+                          fused: bool = False):
+    """Build the jitted batched filtered kNN: queries (B, 6) → (ids (B, k),
+    sq-dists (B, k), Counters) — rows are (px, py, wlx, wly, whx, why), the
+    result the k nearest data rects intersecting [wlx, wly, whx, why].
+    Signature/semantics otherwise as ``make_knn_bfs``.
+    """
+    if k <= 0:
+        raise ValueError("k must be positive")
+    if fused:
+        raise ValueError("knn_filtered has no fused generation")
+    ctx, score = make_knn_filtered_score(tree, layout, backend)
+    if caps is None:
+        caps = filtered_caps(tree, k)
+    caps = tuple(caps)
+    if len(caps) != tree.height - 1:
+        raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
+    run = traversal.make_distance_engine(
+        KNN_FILTERED_SPEC, height=tree.height, k=k, caps=caps, score=score)
+    return functools.partial(run, ctx)
+
+
+# Per unfused level: score gather + distance math, the window-mask compose
+# stage over the (B, C, F) intermediate, τ top-k, prune + beam → 5 launches
+# internal; the leaf skips τ/beam but keeps the mask compose → 4.
+KNN_FILTERED_SPEC = traversal.register(traversal.OperatorSpec(
+    name="knn_filtered", kind="distance",
+    stage_model=StageModel(inner=5, leaf=4, fused=None),
+    builder=make_knn_filtered_bfs, caps_policy=filtered_caps, query_width=6,
+    description="filtered kNN: point MINDIST score composed with a filter-"
+                "window predicate mask before τ pruning; τ tightens only on "
+                "window-contained children"))

@@ -207,7 +207,7 @@ def knn_join(tree_o: RTree, tree_i: RTree, k: int, layout: str = "d1",
         chunk = outer[lo:lo + batch]
         if len(chunk) < batch:
             # pad with copies of a real row so padding can't trip the
-            # overflow flag (same trick as spatial_shard._knn_partition)
+            # overflow flag (same trick as spatial_shard._bucket)
             pad = np.repeat(chunk[:1], batch - len(chunk), axis=0)
             full = np.concatenate([chunk, pad], axis=0)
         else:

@@ -42,7 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Callable, Dict, Optional, Sequence, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -91,6 +91,7 @@ _OPERATOR_MODULES = (
     "repro.core.join_vector",
     "repro.core.knn_vector",
     "repro.core.knn_join_vector",
+    "repro.core.knn_filtered",
     "repro.core.knn_browse",
 )
 
@@ -254,15 +255,28 @@ def make_distance_engine(spec: OperatorSpec, *, height: int, k: int,
       leaf     → (res_ids (B, k), res_d (B, k), valid_cnt (B,))
     Counter semantics stay identical to the unfused path except
     ``dispatches``.
+
+    The returned ``run(ctx, queries, tau_init=None, active=None)`` accepts
+    two optional per-query SPMD hooks used by the mesh path
+    (``make_mesh_engine``): ``tau_init`` (B,) seeds the pruning bound below
+    DIST_PAD (sound whenever the seed upper-bounds the query's k-th
+    neighbor — the phase-2 refinement descends under the collective phase-1
+    τ), and ``active`` (B,) bool masks queries out of the descent entirely
+    (their root frontier starts empty, so they cost no node visits and
+    return (-1, +inf) rows).  Both default to the historical behaviour.
     """
     caps = tuple(caps)
     sm = spec.stage_model
 
     @jax.jit
-    def run(ctx, queries: jax.Array):
+    def run(ctx, queries: jax.Array, tau_init=None, active=None):
         b = queries.shape[0]
         ids = jnp.zeros((b, 1), jnp.int32)  # root frontier
+        if active is not None:
+            ids = jnp.where(active[:, None], ids, -1)
         tau = jnp.full((b,), DIST_PAD, jnp.float32)
+        if tau_init is not None:
+            tau = jnp.minimum(tau, jnp.asarray(tau_init, jnp.float32))
         nodes = jnp.int32(0)
         preds = jnp.int32(0)
         vops = jnp.int32(0)
@@ -355,6 +369,191 @@ def make_distance_engine(spec: OperatorSpec, *, height: int, k: int,
 
 
 # ---------------------------------------------------------------------------
+# Mesh entry point — the whole partition fan-out as ONE SPMD program
+# ---------------------------------------------------------------------------
+
+def _route_mindist(spec: OperatorSpec, queries: jax.Array, mbrs: jax.Array):
+    """(B, P) squared MINDIST from each query to each partition MBR — the
+    replicated root-router step, computed in-program.  ``query_width``
+    selects the distance form: 4 → rect-to-rect, otherwise the leading two
+    columns are a point (covers kNN and the filtered-kNN 6-column rows)."""
+    from .geometry import mindist, mindist_rect
+    if spec.query_width == 4:
+        return mindist_rect(
+            queries[:, 0, None], queries[:, 1, None], queries[:, 2, None],
+            queries[:, 3, None], mbrs[None, :, 0], mbrs[None, :, 1],
+            mbrs[None, :, 2], mbrs[None, :, 3])
+    return mindist(queries[:, 0, None], queries[:, 1, None],
+                   mbrs[None, :, 0], mbrs[None, :, 1],
+                   mbrs[None, :, 2], mbrs[None, :, 3])
+
+
+def make_mesh_engine(name: str, stacked_tree, ids_map, *, mesh,
+                     axis: str = "model", outer_tree=None, **params):
+    """Build the mesh-sharded SPMD program for any registered operator.
+
+    ``stacked_tree`` is an ``RTree`` pytree whose leaves carry a leading
+    partition axis (P, ...) — P partition trees padded to one shape and
+    chain-elevated to one height (distributed/forest.pack_forest), with P a
+    multiple of the mesh axis size.  ``ids_map`` (P, n_max) maps each
+    partition's local rect ids to global ids (-1 pad).  ``outer_tree`` is an
+    optional *replicated* second tree (the spatial join's outer relation).
+
+    The returned callable runs the whole batch as ONE ``shard_map`` program
+    over ``axis``: each shard vmaps the spec's builder over its local
+    partition block (the registry supplies the per-partition engine — no
+    per-operator code here), and cross-shard merging happens with
+    collectives (distributed/collectives.py), never on the host:
+
+      mask kind     — every shard answers the full batch against its
+                      partitions (a non-intersecting partition yields zero
+                      rows by construction); local results are mapped to
+                      global ids and all-gathered → (P, ...) stacked rows.
+      distance kind — overlapped two-phase routing: phase 1 answers each
+                      query on its primary partition (arg-min router
+                      MINDIST, computed in-program from the stacked root
+                      MBRs); the per-query k-th distance is merged with an
+                      all-gather + (distance, id) top-k, and phase 2
+                      re-descends only (query, partition) pairs within the
+                      collective τ bound — seeded into the engine as
+                      ``tau_init`` so refinement prunes under phase-1's
+                      result instead of re-discovering it.  There is no
+                      host barrier between the phases; both run inside the
+                      same program, so per-batch dispatches stay O(levels)
+                      (2 descents of the spec's StageModel), not
+                      O(partitions × levels).
+
+    Returns ``run(queries)`` → distance kind: (global ids (B, k), dists
+    (B, k), merged Counters); mask kind: (global values (P, B?, cap) per
+    stream, counts, merged Counters) — the host dispatcher flattens rows.
+    Counters merge work fields across partitions and shards but keep
+    ``dispatches``/``overflow`` as max (see collectives.psum_counters).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import collectives as coll
+
+    spec = get_spec(name)
+    if name == "browse":
+        raise ValueError("browse is resumable, not one-shot — use "
+                         "knn_browse.make_sharded_browse for the "
+                         "distributed cursor")
+    n_dev = mesh.shape[axis]
+    p_total = ids_map.shape[0]
+    if p_total % n_dev:
+        raise ValueError(f"partition count {p_total} not a multiple of the "
+                         f"mesh axis {axis!r} size {n_dev}")
+    p_local = p_total // n_dev
+    k = params.get("k")
+
+    def _local_engine(tree, active=None, tau_init=None, queries=None):
+        """Instantiate the spec's builder on one partition's tree and run
+        it — called under vmap over the local partition block."""
+        trees = (outer_tree, tree) if outer_tree is not None else (tree,)
+        fn = spec.builder(*trees, **params)
+        if spec.kind == "distance":
+            return fn(queries, tau_init=tau_init, active=active)
+        return fn(queries) if queries is not None else fn()
+
+    def _globalize(ids, idmap):
+        return jnp.where(ids >= 0,
+                         idmap[jnp.maximum(ids, 0)].astype(jnp.int32), -1)
+
+    # ---- mask kind: full-batch fan-out + all-gather ----
+    def _mask_body(tree_blk, idmap_blk, *qargs):
+        queries = qargs[0] if qargs else None
+
+        def one(tree_leaves, idmap):
+            out = _local_engine(tree_leaves, queries=queries)
+            if name == "join":
+                pairs, n_pairs, ctr = out
+                gpairs = jnp.stack(
+                    [pairs[:, 0], _globalize(pairs[:, 1], idmap)], axis=1)
+                return gpairs, n_pairs, ctr
+            ids, counts, ctr = out
+            return _globalize(ids, idmap), counts, ctr
+
+        vals, counts, ctr = jax.vmap(one)(tree_blk, idmap_blk)
+        vals = coll.gather_partitions(vals, axis)
+        counts = coll.gather_partitions(counts, axis)
+        ctr = coll.psum_counters(coll.merge_stacked_counters(ctr), axis)
+        return vals, counts, ctr
+
+    # ---- distance kind: overlapped two-phase inside one program ----
+    def _dist_body(tree_blk, idmap_blk, queries):
+        b = queries.shape[0]
+        mbr_local = tree_blk.levels[-1].node_mbr[:, 0, :]      # (Pl, 4)
+        mbrs = coll.gather_partitions(mbr_local, axis)         # (P, 4)
+        dmat = _route_mindist(spec, queries, mbrs)             # (B, P)
+        primary = jnp.argmin(dmat, axis=1).astype(jnp.int32)
+        gidx = (jax.lax.axis_index(axis) * p_local
+                + jnp.arange(p_local, dtype=jnp.int32))        # (Pl,)
+        # same math as the gathered columns, no cross-shard gather needed
+        dmat_local = _route_mindist(spec, queries, mbr_local).T  # (Pl, B)
+
+        def one(tree_leaves, idmap, active, tau0):
+            ids, d, ctr = _local_engine(tree_leaves, active=active,
+                                        tau_init=tau0, queries=queries)
+            return _globalize(ids, idmap), d, ctr
+
+        def shard_merge(gids, d):
+            """(Pl, B, k) per-partition streams → replicated (B, k) global
+            top-k by (distance, id)."""
+            l_ids, l_d = coll.topk_by_distance(
+                gids.transpose(1, 0, 2).reshape(b, -1),
+                d.transpose(1, 0, 2).reshape(b, -1), k)
+            g_ids, g_d = coll.gather_partitions((l_ids[None], l_d[None]),
+                                                axis)
+            return coll.topk_by_distance(
+                g_ids.transpose(1, 0, 2).reshape(b, -1),
+                g_d.transpose(1, 0, 2).reshape(b, -1), k)
+
+        # phase 1: primary partitions only
+        act1 = primary[None, :] == gidx[:, None]               # (Pl, B)
+        g1, d1, c1 = jax.vmap(one, in_axes=(0, 0, 0, None))(
+            tree_blk, idmap_blk, act1, None)
+        p1_ids, p1_d = shard_merge(g1, d1)
+        # collective τ bound: the k-th best distance after phase 1, widened
+        # by the same hair as the host router (f32 distances vs the bound)
+        tau = p1_d[:, k - 1] * (1.0 + 1e-5) + 1e-30
+        # phase 2: τ-bounded secondary fan-out, seeded with the bound so the
+        # refinement descends under phase-1's result — no host barrier
+        act2 = (~act1) & (dmat_local <= tau[None, :])
+        g2, d2, c2 = jax.vmap(one, in_axes=(0, 0, 0, None))(
+            tree_blk, idmap_blk, act2, tau)
+        p2_ids, p2_d = shard_merge(g2, d2)
+        f_ids, f_d = coll.topk_by_distance(
+            jnp.concatenate([p1_ids, p2_ids], axis=1),
+            jnp.concatenate([p1_d, p2_d], axis=1), k)
+        # fold partitions within each phase (dispatches: max — one vmapped
+        # stage sequence), then ADD the phases (two real descents), then
+        # fold shards (psum work / pmax dispatches)
+        m1 = coll.merge_stacked_counters(c1)
+        m2 = coll.merge_stacked_counters(c2)
+        ctr = dataclasses.replace(
+            m1 + m2, overflow=jnp.maximum(m1.overflow, m2.overflow))
+        ctr = coll.psum_counters(ctr, axis)
+        return f_ids, f_d, ctr
+
+    body = _dist_body if spec.kind == "distance" else _mask_body
+    # the replicated outer relation (join) rides as a closure constant;
+    # P(axis) is a pytree prefix: every stacked-tree leaf shards its
+    # leading partition axis
+    tree_spec = P(axis)
+    in_specs = (tree_spec, P(axis)) + ((P(),) if spec.query_width else ())
+    program = jax.jit(shard_map(body, mesh=mesh,
+                                in_specs=in_specs,
+                                out_specs=(P(), P(), P()),
+                                check_rep=False))
+
+    def run(*qargs):
+        return program(stacked_tree, ids_map, *qargs)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
 # Resumable distance browsing — the engine's resume entry point
 # ---------------------------------------------------------------------------
 
@@ -400,6 +599,15 @@ class BrowseState:
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
+
+
+class BrowseEngine(NamedTuple):
+    """The resumable-browsing engine entry points (see make_browse_engine)."""
+    init: Callable
+    needs_descent: Callable
+    needs_descent_fn: Callable
+    resume: Callable
+    emit: Callable
 
 
 def _beam_with_bound(ids: jax.Array, d: jax.Array, mask: jax.Array,
@@ -449,9 +657,13 @@ def make_browse_engine(spec: OperatorSpec, *, height: int, batch_k: int,
     ``state.lost``; emission only flags ``overflow`` when an emitted
     distance reaches that bound — exactness is tracked, not assumed.
 
-    Returns (init, needs_descent, resume, emit):
+    Returns a ``BrowseEngine`` namedtuple:
       init(queries)        → fresh BrowseState (root deferred at the top)
       needs_descent(state) → host bool: can the pool safely serve batch_k?
+      needs_descent_fn     → the traced () bool predicate behind it — the
+                             sharded browse path runs it as a
+                             ``lax.while_loop`` condition inside one SPMD
+                             program (core/knn_browse.make_sharded_browse)
       resume(ctx, state)   → state after one full descent
       emit(state)          → (ids (B, batch_k), d (B, batch_k), state)
     """
@@ -604,4 +816,6 @@ def make_browse_engine(spec: OperatorSpec, *, height: int, batch_k: int,
             overflow=state.overflow | crossed, ctr=ctr)
         return out_ids, out_d, new
 
-    return init, needs_descent, resume, emit
+    return BrowseEngine(init=init, needs_descent=needs_descent,
+                        needs_descent_fn=_needs_descent, resume=resume,
+                        emit=emit)

@@ -1,0 +1,153 @@
+"""Pack a partitioned R-tree fleet into mesh-shardable pytree arrays.
+
+The host-orchestrated fan-out (spatial_shard.py) keeps one Python-level
+``RTree`` per partition and loops over them — one jit round-trip per
+partition per phase.  The mesh path instead packs all P partition trees
+into ONE stacked ``RTree`` pytree whose every leaf carries a leading
+partition axis:
+
+  * heights are normalized by chain-elevating every tree to the tallest
+    partition's height (join_scalar.elevate — a chain level scores one
+    extra node per descent and changes no results);
+  * per level, node arrays are padded along ``n_nodes`` to the level's max
+    across partitions (padded rows hold empty-MBR coordinates and child=-1,
+    and are unreachable: no frontier pointer ever refers to them);
+  * the partition count is padded up to a multiple of the mesh axis size
+    with structurally empty partitions (every child -1, far-away MBR) that
+    route nothing and answer nothing;
+  * ``ids_map`` (P, max_partition_rects) translates each partition's local
+    rect ids to global ids in-program, so cross-shard merges order by
+    global id.
+
+Because every partition now shares one shape, the per-partition engines
+the spec registry builds are ONE vmappable program — which is exactly what
+lets ``traversal.make_mesh_engine`` run routing → per-partition BFS →
+cross-shard merge inside a single ``shard_map``.
+
+The frontier caps the engines compute from this padded shape
+(core/caps.py, via each spec's ``caps_policy``) are the *padded* caps the
+whole fleet shares; they can only be ≥ each partition's own host-path caps
+(level sizes grow, the formula is monotone), so the mesh path never
+overflows where the host path did not.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.geometry import pad_values
+from repro.core.join_scalar import elevate
+from repro.core.rtree import RTree, RTreeLevel
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedForest:
+    """P partition trees as one stacked, mesh-shardable pytree.
+
+    ``tree`` — an RTree whose leaves have a leading (P,) partition axis
+    (P a multiple of ``n_shards``); ``ids_map`` — (P, n_max) int32 local →
+    global rect ids (-1 pad); ``mbrs`` — (P, 4) partition MBRs (host copy
+    of the stacked root node MBRs, for host-side routing/debug);
+    ``n_real`` — the number of real (non-padding) partitions.
+    """
+    tree: RTree
+    ids_map: np.ndarray
+    mbrs: np.ndarray
+    n_real: int
+
+    @property
+    def n_partitions(self) -> int:
+        return self.ids_map.shape[0]
+
+    @property
+    def height(self) -> int:
+        return self.tree.height
+
+    def device_put(self, mesh, axis: str = "model") -> "PackedForest":
+        """Shard the stacked leaves along ``axis`` (leading partition dim)."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def shard(a):
+            s = NamedSharding(mesh, P(axis, *([None] * (a.ndim - 1))))
+            return jax.device_put(a, s)
+
+        return dataclasses.replace(
+            self,
+            tree=jax.tree_util.tree_map(shard, self.tree),
+            ids_map=shard(jax.numpy.asarray(self.ids_map)))
+
+
+def _pad_round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def pack_forest(trees: Sequence[RTree], ids: Sequence[np.ndarray],
+                n_shards: int = 1,
+                order: Optional[Sequence[int]] = None,
+                min_height: Optional[int] = None) -> PackedForest:
+    """Pack per-partition ``trees`` (with their global-id arrays ``ids``)
+    into a :class:`PackedForest` whose partition count is padded to a
+    multiple of ``n_shards``.  ``order`` optionally permutes the partitions
+    (the permutation-invariance tests re-pack under a shuffle);
+    ``min_height`` raises the normalized height (a mesh join against a
+    taller replicated probe tree elevates the forest, never the traced
+    side)."""
+    import jax.numpy as jnp
+
+    if order is not None:
+        trees = [trees[i] for i in order]
+        ids = [ids[i] for i in order]
+    if not trees:
+        raise ValueError("cannot pack an empty forest")
+    height = max(max(t.height for t in trees), min_height or 1)
+    trees = [elevate(t, height) for t in trees]
+    fanout = trees[0].fanout
+    dtype = np.asarray(trees[0].levels[0].lx).dtype
+    lo_pad, hi_pad = pad_values(dtype)
+    p_real = len(trees)
+    p = _pad_round_up(p_real, max(n_shards, 1))
+    f = fanout
+
+    levels: List[RTreeLevel] = []
+    for li in range(height):
+        n_max = max(t.levels[li].n_nodes for t in trees)
+        lx = np.full((p, n_max, f), lo_pad, dtype)
+        ly = np.full((p, n_max, f), lo_pad, dtype)
+        hx = np.full((p, n_max, f), hi_pad, dtype)
+        hy = np.full((p, n_max, f), hi_pad, dtype)
+        child = np.full((p, n_max, f), -1, np.int32)
+        count = np.zeros((p, n_max), np.int32)
+        node_mbr = np.tile(
+            np.array([lo_pad, lo_pad, hi_pad, hi_pad], dtype), (p, n_max, 1))
+        for pi, t in enumerate(trees):
+            lvl = t.levels[li]
+            n = lvl.n_nodes
+            lx[pi, :n] = np.asarray(lvl.lx)
+            ly[pi, :n] = np.asarray(lvl.ly)
+            hx[pi, :n] = np.asarray(lvl.hx)
+            hy[pi, :n] = np.asarray(lvl.hy)
+            child[pi, :n] = np.asarray(lvl.child)
+            count[pi, :n] = np.asarray(lvl.count)
+            node_mbr[pi, :n] = np.asarray(lvl.node_mbr)
+        levels.append(RTreeLevel(
+            lx=jnp.asarray(lx), ly=jnp.asarray(ly), hx=jnp.asarray(hx),
+            hy=jnp.asarray(hy), child=jnp.asarray(child),
+            count=jnp.asarray(count), node_mbr=jnp.asarray(node_mbr)))
+
+    n_max_rects = max(len(i) for i in ids)
+    ids_map = np.full((p, n_max_rects), -1, np.int32)
+    for pi, gl in enumerate(ids):
+        ids_map[pi, :len(gl)] = gl
+    mbrs = np.asarray(levels[-1].node_mbr[:, 0, :])
+    stacked = RTree(
+        levels=tuple(levels),
+        # engines never touch .rects; a zero-row leaf keeps the pytree
+        # shape (and the P(axis) sharding prefix) valid without storing a
+        # padded copy of every partition's data rects
+        rects=jnp.zeros((p, 0, 4), dtype),
+        fanout=fanout, sort_key=trees[0].sort_key)
+    return PackedForest(tree=stacked, ids_map=ids_map, mbrs=mbrs,
+                        n_real=p_real)

@@ -6,19 +6,29 @@ slabs, then by y within each slab — every partition is a contiguous spatial
 tile holding ~N/P rects, so most range queries touch few partitions (the
 partition MBRs act as a replicated, tiny "root router" level).
 
-Execution model: each device (or host shard) owns one partition's R-tree
-(`model` axis of the mesh); a query batch is routed by intersecting the
-partition MBRs (cheap, replicated), then each partition runs the batched
-vectorized BFS select over the queries routed to it.  Results are local
-rect ids + a partition id → the global id is recovered from the partition
-offset.  `pod`/`data` axes replicate partitions for throughput and serve
-disjoint query streams.
+Two execution paths share one public API (``range_select`` / ``knn`` /
+``knn_join`` / ``knn_filtered`` / ``join`` / ``browse``):
 
-This module is deliberately host-orchestrated (one engine per partition):
-on a real multi-host deployment each process builds its partition locally
-and the router lives on every host; the single-controller jit path stays
-inside each partition's engine — which is where the paper's technique
-(SIMD predicate evaluation + frontier queue + prefetch) applies.
+  host fallback — one compiled engine per partition (spec registry), a
+      Python loop fanning routed query subsets out and merging with NumPy.
+      One jit round-trip per touched partition per phase; kept as the
+      reference semantics and for single-partition debugging.
+  mesh path (``enable_mesh``) — the P partition trees are packed into ONE
+      stacked pytree (distributed/forest.py) sharded over the mesh's
+      ``model`` axis, and a whole query batch executes as ONE ``shard_map``
+      program (core/traversal.make_mesh_engine): in-program routing from
+      the stacked root MBRs, per-partition spec-driven BFS under vmap, and
+      cross-shard merging with collectives (distributed/collectives.py).
+      For the distance operators the two routing phases *overlap* inside
+      the program: phase 2 descends under the collective phase-1 τ bound
+      (seeded as ``tau_init``) with no host barrier, so per-batch dispatch
+      count is O(levels) instead of O(partitions × levels).  Results are
+      bit-exact vs the host path and invariant under partition permutation
+      (tests/oracle.assert_sharded_parity).
+
+Host results and mesh results agree because both reduce to the same total
+order: candidates merge by (distance, global id), select/join rows by
+sorted global id — orders with no dependence on partition placement.
 """
 from __future__ import annotations
 
@@ -49,10 +59,18 @@ class SpatialShards:
         # (spec name, partition, build params) through the spec registry —
         # adding an operator adds a registry entry, not another cache
         self._engines = {}
+        # mesh path state (enable_mesh): packed forest + compiled programs
+        self._mesh = None
+        self._mesh_axis = "model"
+        self._forest = None
+        self._mesh_programs = {}
+        self._browse_starts = {}
+        self.last_counters = None   # merged Counters of the last mesh batch
 
     @classmethod
     def build(cls, rects: np.ndarray, n_partitions: int, fanout: int = 64,
-              sort_key: Optional[str] = None) -> "SpatialShards":
+              sort_key: Optional[str] = None,
+              mesh=None) -> "SpatialShards":
         n = len(rects)
         cx = (rects[:, 0] + rects[:, 2]) / 2
         cy = (rects[:, 1] + rects[:, 3]) / 2
@@ -79,7 +97,79 @@ class SpatialShards:
                                rects.dtype)
                 parts.append(Partition(tree=tree, mbr=mbr, offset=len(parts),
                                        ids=ids))
-        return cls(parts, fanout)
+        out = cls(parts, fanout)
+        if mesh is not None:
+            out.enable_mesh(mesh)
+        return out
+
+    # ------------------------------------------------------------------
+    # mesh dispatcher
+    # ------------------------------------------------------------------
+
+    @property
+    def mesh_enabled(self) -> bool:
+        return self._forest is not None
+
+    def enable_mesh(self, mesh=None, axis: str = "model",
+                    min_height: Optional[int] = None) -> "SpatialShards":
+        """Pack the partition fleet into mesh-sharded pytree arrays and
+        route the public API through the one-program SPMD path.  ``mesh``
+        defaults to a 1-D mesh over all local devices (works on a single
+        device too — the consolidation from O(partitions) dispatches to one
+        program does not need multiple devices, only the fan-*out* does)."""
+        import jax
+
+        from repro.distributed import forest as forest_mod
+
+        if mesh is None:
+            mesh = jax.make_mesh((len(jax.devices()),), (axis,))
+        packed = forest_mod.pack_forest(
+            [p.tree for p in self.partitions],
+            [p.ids for p in self.partitions],
+            n_shards=mesh.shape[axis], min_height=min_height)
+        self._mesh, self._mesh_axis = mesh, axis
+        self._forest = packed.device_put(mesh, axis)
+        self._mesh_programs = {}
+        self._browse_starts = {}
+        return self
+
+    def disable_mesh(self) -> "SpatialShards":
+        self._mesh = self._forest = None
+        self._mesh_programs = {}
+        self._browse_starts = {}
+        return self
+
+    def _mesh_program(self, op: str, outer_tree=None, **params):
+        key = (op, tuple(sorted(params.items())),
+               None if outer_tree is None else id(outer_tree))
+        if key not in self._mesh_programs:
+            if outer_tree is not None:
+                # programs close over their outer tree: keep only the
+                # latest per (op, params) so a caller streaming fresh probe
+                # relations cannot grow the cache (and pin every past
+                # probe's arrays) without bound
+                stale = [s for s in self._mesh_programs
+                         if s[:2] == key[:2] and s[2] is not None]
+                for s in stale:
+                    del self._mesh_programs[s]
+            self._mesh_programs[key] = traversal.make_mesh_engine(
+                op, self._forest.tree, self._forest.ids_map,
+                mesh=self._mesh, axis=self._mesh_axis,
+                outer_tree=outer_tree, **params)
+        return self._mesh_programs[key]
+
+    def _mesh_distance(self, op: str, queries: np.ndarray, k: int
+                       ) -> Tuple[np.ndarray, np.ndarray, bool]:
+        import jax.numpy as jnp
+        prog = self._mesh_program(op, k=k)
+        ids, d, ctr = prog(jnp.asarray(queries))
+        self.last_counters = ctr
+        return (np.asarray(ids).astype(np.int64),
+                np.asarray(d, np.float64), bool(int(ctr.overflow)))
+
+    # ------------------------------------------------------------------
+    # routing + per-partition engines (host fallback)
+    # ------------------------------------------------------------------
 
     def route(self, queries: np.ndarray) -> np.ndarray:
         """(B, 4) queries → (B, P) bool routing matrix from partition MBRs
@@ -100,10 +190,35 @@ class SpatialShards:
                 op, self.partitions[pi].tree, **params)
         return self._engines[key]
 
+    @staticmethod
+    def _bucket(queries: np.ndarray) -> np.ndarray:
+        """Pad a query subset to its next power-of-two row count so a
+        (partition, params) pair compiles at most log2(max batch)+1 traces.
+        Pads with copies of a real query, not zeros: the overflow flag is
+        any() over all rows, and an arbitrary all-zeros row could overflow
+        the frontier caps even when no real query does — a false "results
+        may be approximate" warning."""
+        b = len(queries)
+        bucket = 1 << (b - 1).bit_length()
+        if bucket > b:
+            pad = np.repeat(queries[:1], bucket - b, axis=0)
+            queries = np.concatenate([queries, pad], axis=0)
+        return queries
+
     def range_select(self, queries: np.ndarray, result_cap: int = 4096
                      ) -> List[np.ndarray]:
         """Batched distributed select → per-query global rect id arrays."""
         import jax.numpy as jnp
+        if self.mesh_enabled:
+            prog = self._mesh_program("select", result_cap=result_cap)
+            ids, counts, ctr = prog(jnp.asarray(queries, np.float32))
+            self.last_counters = ctr
+            ids = np.asarray(ids)
+            counts = np.asarray(counts)
+            return [np.sort(np.concatenate(
+                [ids[p, qi, :counts[p, qi]]
+                 for p in range(ids.shape[0])]).astype(np.int64))
+                for qi in range(len(queries))]
         routing = self.route(queries)
         results = [[] for _ in range(len(queries))]
         for pi, part in enumerate(self.partitions):
@@ -111,7 +226,8 @@ class SpatialShards:
             if len(hit) == 0:
                 continue
             sel = self.engine_for("select", pi, result_cap=result_cap)
-            ids, counts, _ = sel(jnp.asarray(queries[hit]))
+            sub = self._bucket(queries[hit])
+            ids, counts, _ = sel(jnp.asarray(sub))
             ids = np.asarray(ids)
             counts = np.asarray(counts)
             for qi, local_q in enumerate(hit):
@@ -121,57 +237,98 @@ class SpatialShards:
                 np.empty((0,), np.int64) for r in results]
 
     # ------------------------------------------------------------------
-    # k-nearest-neighbor
+    # spatial join (probe rects × partitioned data)
+    # ------------------------------------------------------------------
+
+    def join(self, probe, result_cap: int = 1 << 17, o3: bool = False,
+             o4: bool = False) -> Tuple[np.ndarray, bool]:
+        """Distributed spatial join of a probe relation against the
+        partitioned data: returns ((K, 2) int64 pairs (probe id, global
+        data id) sorted lexicographically, overflow flag).  ``probe`` is a
+        (M, 4) rect array or a pre-built RTree (its rect order defines the
+        probe ids).  ``o3``/``o4`` enable the sorted-key pruning — both the
+        probe tree and the partition trees must then be built with
+        ``sort_key='lx'`` (pass a pre-built probe tree; the fleet needs
+        ``SpatialShards.build(..., sort_key='lx')``)."""
+        import jax.numpy as jnp
+        jn_params = dict(result_cap=result_cap, o3=o3, o4=o4)
+        probe_tree = probe if isinstance(probe, rtree.RTree) else \
+            rtree.build_rtree(np.asarray(probe, np.float32),
+                              fanout=self.fanout,
+                              sort_key="lx" if (o3 or o4) else None)
+        if self.mesh_enabled:
+            if probe_tree.height > self._forest.height:
+                # taller probe: re-pack the forest with matching chain
+                # elevation so no tree is elevated under trace
+                self.enable_mesh(self._mesh, self._mesh_axis,
+                                 min_height=probe_tree.height)
+            from repro.core.join_scalar import elevate
+            # pre-elevate host-side: inside the traced program both
+            # relations already share the forest height, so the join
+            # builder's elevate is a no-op on tracers.  Memoized so the
+            # program cache (keyed on the probe object) hits across
+            # repeated joins of the same probe relation.
+            ck = ("elevated_probe", self._forest.height)
+            cached = self._engines.get(ck)
+            if cached is None or cached[0] is not probe_tree:
+                cached = (probe_tree,
+                          elevate(probe_tree, self._forest.height))
+                self._engines[ck] = cached
+            probe_tree = cached[1]
+            prog = self._mesh_program("join", outer_tree=probe_tree,
+                                      **jn_params)
+            pairs, counts, ctr = prog()
+            self.last_counters = ctr
+            pairs = np.asarray(pairs)
+            counts = np.asarray(counts)
+            rows = [pairs[p, :counts[p]] for p in range(pairs.shape[0])]
+            ovf = bool(int(ctr.overflow))
+        else:
+            rows = []
+            ovf = False
+            for pi, part in enumerate(self.partitions):
+                # join engines close over BOTH trees, so the cache entry is
+                # valid only for the same probe-tree object
+                key = ("join", pi, tuple(sorted(jn_params.items())))
+                cached = self._engines.get(key)
+                if cached is None or cached[0] is not probe_tree:
+                    cached = (probe_tree, traversal.build(
+                        "join", probe_tree, part.tree, **jn_params))
+                    self._engines[key] = cached
+                jn = cached[1]
+                pr, n_pairs, ctr = jn()
+                pr = np.asarray(pr[:int(n_pairs)])
+                rows.append(np.stack(
+                    [pr[:, 0], part.ids[pr[:, 1]]], axis=1))
+                ovf |= bool(int(ctr.overflow))
+        cat = np.concatenate(rows).astype(np.int64) if rows else \
+            np.empty((0, 2), np.int64)
+        order = np.lexsort((cat[:, 1], cat[:, 0]))
+        return cat[order], ovf
+
+    # ------------------------------------------------------------------
+    # distance operators (kNN / kNN-join / filtered kNN)
     # ------------------------------------------------------------------
 
     def _run_partition(self, op: str, pi: int, queries: np.ndarray,
                        k: int):
         """Run one partition's batched distance engine; local → global ids.
 
-        The query subset is padded up to its own next power of two, so a
-        (partition, k) pair compiles at most log2(max batch)+1 traces while
-        each partition only does work proportional to the queries actually
+        Query subsets ride power-of-two buckets (``_bucket``) so each
+        partition only does work proportional to the queries actually
         routed to it (phase-1 subsets partition the batch; phase-2 subsets
-        are usually tiny).  Shared by kNN (2-col points) and kNN-join
-        (4-col rects) — the padding/overflow subtleties live in one place.
+        are usually tiny).  Shared by every distance operator — the
+        padding/overflow subtleties live in one place.
         """
         import jax.numpy as jnp
         part = self.partitions[pi]
         b = len(queries)
-        bucket = 1 << (b - 1).bit_length()
-        if bucket > b:
-            # pad with copies of a real query, not zeros: the overflow flag
-            # is any() over all rows, and an arbitrary all-zeros row could
-            # overflow the frontier caps even when no real query does —
-            # a false "results may be approximate" warning
-            pad = np.repeat(queries[:1], bucket - b, axis=0)
-            queries = np.concatenate([queries, pad], axis=0)
         fn = self.engine_for(op, pi, k=k)
-        ids, dists, ctr = fn(jnp.asarray(queries))
+        ids, dists, ctr = fn(jnp.asarray(self._bucket(queries)))
         ids = np.asarray(ids)[:b]
         dists = np.asarray(dists, np.float64)[:b]
         gids = np.where(ids >= 0, part.ids[np.maximum(ids, 0)], -1)
         return gids, dists, bool(ctr.overflow)
-
-    def _knn_partition(self, pi: int, points: np.ndarray, k: int):
-        return self._run_partition("knn", pi, points, k)
-
-    def _warm_buckets(self, run_partition, batch: int, k: int,
-                      width: int) -> None:
-        """Pre-compile every partition's engine at every power-of-two bucket
-        up to ``batch`` so serving loops never pay an XLA compile (routed
-        subsets can land in any bucket ≤ the full batch's)."""
-        buckets = []
-        bucket = 1 << (max(batch, 1) - 1).bit_length()
-        while bucket >= 1:
-            buckets.append(bucket)
-            bucket //= 2
-        for pi in range(len(self.partitions)):
-            for bk in buckets:
-                run_partition(pi, np.zeros((bk, width), np.float32), k)
-
-    def warm_knn(self, batch: int, k: int) -> None:
-        self._warm_buckets(self._knn_partition, batch, k, width=2)
 
     def knn(self, points: np.ndarray, k: int
             ) -> Tuple[np.ndarray, np.ndarray, bool]:
@@ -185,23 +342,55 @@ class SpatialShards:
         ≥ a few partitions, most queries never leave their primary shard.
         The per-query top-k streams are merged by (distance, id).
 
+        On the mesh path the same two phases run *inside one SPMD program*
+        with the τ merge as a collective (no host barrier).
+
         ``overflow`` mirrors the single-tree Counters.overflow: True means
         some partition's frontier cap truncated to its best-first beam and
         the result may be approximate-with-bound (rebuild with larger
         ``knn_frontier_caps`` to clear).
         """
         points = np.asarray(points, np.float32)
+        if self.mesh_enabled:
+            return self._mesh_distance("knn", points, k)
         dmat = mindist_matrix_np(points, self.router_mbrs)   # (B, P)
-        return self._two_phase_knn(points, k, dmat, self._knn_partition)
+        return self._two_phase_knn(points, k, dmat, "knn")
+
+    def knn_join(self, qrects: np.ndarray, k: int
+                 ) -> Tuple[np.ndarray, np.ndarray, bool]:
+        """Distributed kNN-join → (global ids (B, k), sq-dists (B, k),
+        overflow flag): for each outer rect, its k nearest data rects across
+        all partitions under squared rect-to-rect MINDIST.  Routing exactly
+        as ``knn`` with the router matrix generalized to rect-to-MBR
+        MINDIST."""
+        qrects = np.asarray(qrects, np.float32)
+        if self.mesh_enabled:
+            return self._mesh_distance("knn_join", qrects, k)
+        dmat = mindist_rect_matrix_np(qrects, self.router_mbrs)   # (B, P)
+        return self._two_phase_knn(qrects, k, dmat, "knn_join")
+
+    def knn_filtered(self, queries: np.ndarray, k: int
+                     ) -> Tuple[np.ndarray, np.ndarray, bool]:
+        """Distributed filtered kNN (core/knn_filtered.py): rows are
+        (px, py, wlx, wly, whx, why) — the k nearest data rects
+        intersecting the per-query window.  Routed like ``knn`` on the
+        point columns: the partition-MBR MINDIST lower-bounds every
+        (filtered or not) candidate distance, so the τ bound stays sound
+        under the predicate mask."""
+        queries = np.asarray(queries, np.float32)
+        if self.mesh_enabled:
+            return self._mesh_distance("knn_filtered", queries, k)
+        dmat = mindist_matrix_np(queries[:, :2], self.router_mbrs)
+        return self._two_phase_knn(queries, k, dmat, "knn_filtered")
 
     def _two_phase_knn(self, queries: np.ndarray, k: int, dmat: np.ndarray,
-                       run_partition) -> Tuple[np.ndarray, np.ndarray, bool]:
-        """Shared two-phase routing for the distance operators (kNN and
-        kNN-join): primary-partition answer → τ bound → τ-bounded secondary
-        fan-out → deterministic cross-shard top-k merge.
+                       op: str) -> Tuple[np.ndarray, np.ndarray, bool]:
+        """Host-fallback two-phase routing for the distance operators:
+        primary-partition answer → τ bound → τ-bounded secondary fan-out →
+        deterministic cross-shard top-k merge.
 
         ``dmat``: (B, P) exact query-to-partition-MBR squared MINDISTs;
-        ``run_partition(pi, queries, k)`` → (global ids, dists, overflow).
+        ``op`` resolves the per-partition engine through the registry.
         """
         b = len(queries)
         p = len(self.partitions)
@@ -214,7 +403,7 @@ class SpatialShards:
             sel = np.nonzero(primary == pi)[0]
             if len(sel) == 0:
                 continue
-            gids, dists, ovf = run_partition(pi, queries[sel], k)
+            gids, dists, ovf = self._run_partition(op, pi, queries[sel], k)
             cand_ids[sel], cand_d[sel] = gids, dists
             overflow |= ovf
         # τ: current k-th best (inf when the primary held < k rects)
@@ -228,7 +417,7 @@ class SpatialShards:
             sel = np.nonzero((primary != pi) & (dmat[:, pi] <= tau_cmp))[0]
             if len(sel) == 0:
                 continue
-            gids, dists, ovf = run_partition(pi, queries[sel], k)
+            gids, dists, ovf = self._run_partition(op, pi, queries[sel], k)
             overflow |= ovf
             merged_d = np.concatenate([cand_d[sel], dists], axis=1)
             merged_i = np.concatenate([cand_ids[sel], gids], axis=1)
@@ -241,28 +430,81 @@ class SpatialShards:
         return cand_ids, cand_d, overflow
 
     # ------------------------------------------------------------------
-    # kNN-join (all-pairs distance operator)
+    # distributed distance browsing
     # ------------------------------------------------------------------
 
-    def _knn_join_partition(self, pi: int, qrects: np.ndarray, k: int):
-        return self._run_partition("knn_join", pi, qrects, k)
+    def browse(self, points: np.ndarray, k: int):
+        """Open a distributed browsing session: per-partition
+        ``BrowseState`` cursors with a cross-shard pool merge on every
+        ``next_batch()`` (core/knn_browse.make_sharded_browse).  The
+        sharded program serves any device count, so it doubles as the
+        single-device path — there is no separate host browse loop, which
+        is why this requires ``enable_mesh()`` first (an implicit enable
+        here would silently flip every OTHER operator on this object from
+        the host path to the mesh path)."""
+        from repro.core import knn_browse
+
+        if not self.mesh_enabled:
+            raise RuntimeError(
+                "distributed browsing runs on the mesh path — call "
+                "enable_mesh() first (works on a single device too)")
+        if k not in self._browse_starts:
+            self._browse_starts[k] = knn_browse.make_sharded_browse(
+                self._forest.tree, self._forest.ids_map, k,
+                mesh=self._mesh, axis=self._mesh_axis)
+        return self._browse_starts[k](np.asarray(points, np.float32))
+
+    # ------------------------------------------------------------------
+    # warmup — registry-keyed, one path for every operator
+    # ------------------------------------------------------------------
+
+    def warm(self, op: str, batch: int, k: Optional[int] = None,
+             result_cap: int = 4096, probe=None, **op_params) -> None:
+        """Pre-compile operator ``op`` so serving loops never pay an XLA
+        compile.  Registry-keyed: the spec supplies the query width and
+        engine kind, so one warmup covers select, join, every distance
+        operator, and browse.
+
+        Host path: every partition's engine at every power-of-two bucket up
+        to ``batch`` (routed subsets can land in any bucket ≤ the full
+        batch's).  Mesh path: the single SPMD program at the serving batch
+        shape (subsets never change shape there).  ``join`` warms against
+        ``probe`` (rects or RTree) — its engines close over the probe tree.
+        """
+        import jax.numpy as jnp
+        spec = traversal.get_spec(op)
+        if k is None and (spec.kind == "distance" or op == "browse"):
+            raise ValueError(f"warming {op!r} needs k")
+        if op == "join":
+            if probe is None:
+                raise ValueError("join warmup needs the probe relation")
+            self.join(probe, result_cap=result_cap, **op_params)
+            return
+        if op == "browse":
+            cur = self.browse(np.zeros((batch, 2), np.float32), k)
+            cur.next_batch()
+            return
+        params = {"k": k} if spec.kind == "distance" else \
+            {"result_cap": result_cap}
+        width = spec.query_width
+        if self.mesh_enabled:
+            q = np.zeros((batch, width), np.float32)
+            prog = self._mesh_program(op, **params)
+            prog(jnp.asarray(q))
+            return
+        buckets = []
+        bucket = 1 << (max(batch, 1) - 1).bit_length()
+        while bucket >= 1:
+            buckets.append(bucket)
+            bucket //= 2
+        for pi in range(len(self.partitions)):
+            fn = self.engine_for(op, pi, **params)
+            for bk in buckets:
+                fn(jnp.asarray(np.zeros((bk, width), np.float32)))
+
+    # preserved spellings of the historical per-operator warmups
+    def warm_knn(self, batch: int, k: int) -> None:
+        self.warm("knn", batch, k=k)
 
     def warm_knn_join(self, batch: int, k: int) -> None:
-        self._warm_buckets(self._knn_join_partition, batch, k, width=4)
-
-    def knn_join(self, qrects: np.ndarray, k: int
-                 ) -> Tuple[np.ndarray, np.ndarray, bool]:
-        """Distributed kNN-join → (global ids (B, k), sq-dists (B, k),
-        overflow flag): for each outer rect, its k nearest data rects across
-        all partitions under squared rect-to-rect MINDIST.
-
-        Identical two-phase routing to ``knn`` with the router matrix
-        generalized to rect-to-MBR MINDIST: phase 1 answers on the primary
-        partition (smallest MBR distance), phase 2 re-asks only partitions
-        whose MBR MINDIST ≤ τ, and per-query streams merge by (distance,
-        global id).  ``overflow`` True means some partition's beam truncated
-        and the result may be approximate (see knn_join_vector).
-        """
-        qrects = np.asarray(qrects, np.float32)
-        dmat = mindist_rect_matrix_np(qrects, self.router_mbrs)   # (B, P)
-        return self._two_phase_knn(qrects, k, dmat, self._knn_join_partition)
+        self.warm("knn_join", batch, k=k)

@@ -19,3 +19,13 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh (tests / examples, e.g. (2, 4) on 8 host devices)."""
     return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def spatial_mesh(n_devices=None):
+    """1-D mesh over the ``model`` axis for the spatial query service: the
+    partition fan-out axis of the mesh-sharded engine
+    (distributed/spatial_shard.enable_mesh).  Defaults to every local
+    device; force a multi-device CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (tests/CI)."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), ("model",))

@@ -37,8 +37,22 @@ MODE_TO_SPEC = {
     "join": "join",
     "knn": "knn",
     "knn-join": "knn_join",
+    "knn-filtered": "knn_filtered",
     "browse": "browse",
 }
+
+
+def _use_mesh(args) -> bool:
+    """Route through the mesh dispatcher?  ``--mesh on`` always, ``off``
+    never, ``auto`` (default) whenever more than one device is visible
+    (force a multi-device CPU with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N)."""
+    if args.mesh == "on":
+        return True
+    if args.mesh == "off":
+        return False
+    import jax
+    return len(jax.devices()) > 1
 
 
 def make_queries(n: int, batch: int, selectivity: float, seed: int = 1):
@@ -49,14 +63,22 @@ def make_queries(n: int, batch: int, selectivity: float, seed: int = 1):
     return np.concatenate([lo, lo + side], axis=-1)
 
 
-def _build_shards(args):
+def _build_shards(args, sort_key=None):
     rng = np.random.default_rng(args.seed)
     pts = rng.random((args.n, 2), dtype=np.float32)
     rects = str_pack.points_to_rects(pts)
     t0 = time.time()
-    shards = SpatialShards.build(rects, args.partitions, fanout=args.fanout)
+    shards = SpatialShards.build(rects, args.partitions, fanout=args.fanout,
+                                 sort_key=sort_key)
+    note = ""
+    if _use_mesh(args):
+        from .mesh import spatial_mesh
+        mesh = spatial_mesh()
+        shards.enable_mesh(mesh)
+        note = (f", mesh path over {mesh.shape['model']} device(s) "
+                f"(one SPMD program per batch)")
     print(f"built {len(shards.partitions)} partitions over {args.n} rects "
-          f"in {time.time() - t0:.2f}s")
+          f"in {time.time() - t0:.2f}s{note}")
     return rng, rects, shards
 
 
@@ -65,8 +87,8 @@ def _serve_select(args, spec):
     rng, _, shards = _build_shards(args)
     qs = make_queries(args.batches, args.batch_size, args.selectivity,
                       args.seed + 1)
-    # warm the per-partition compiled selects
-    shards.range_select(qs[0])
+    # warm the compiled selects (per-partition engines / mesh program)
+    shards.warm("select", args.batch_size)
 
     pool = ShardPool(
         shards=[lambda payload, s=shards: s.range_select(payload)],
@@ -91,9 +113,9 @@ def _serve_knn(args, spec):
     cross-shard top-k merge (distributed/spatial_shard.py)."""
     rng, _, shards = _build_shards(args)
     qs = rng.random((args.batches, args.batch_size, 2), dtype=np.float32)
-    # compile every partition's kNN at this batch bucket up front so no
-    # XLA compile (or spurious straggler re-issue) lands in the timed loop
-    shards.warm_knn(args.batch_size, args.k)
+    # compile the kNN path at this batch bucket up front so no XLA compile
+    # (or spurious straggler re-issue) lands in the timed loop
+    shards.warm("knn", args.batch_size, k=args.k)
 
     # single engine, no spare replica: ShardPool's deadline re-issue could
     # only resubmit the identical call to the same host, so the batches are
@@ -125,7 +147,7 @@ def _serve_knn_join(args, spec):
     eps = np.float32(args.query_eps)
     centers = rng.random((args.batches, args.batch_size, 2), dtype=np.float32)
     qs = np.concatenate([centers - eps, centers + eps], axis=-1)
-    shards.warm_knn_join(args.batch_size, args.k)
+    shards.warm("knn_join", args.batch_size, k=args.k)
 
     t0 = time.time()
     returned = 0
@@ -145,47 +167,98 @@ def _serve_knn_join(args, spec):
 
 
 def _serve_join(args, spec):
-    """Spatial-join service: repeated full nested-index joins of the data
-    tree against per-batch probe trees (one compiled pair engine)."""
-    from repro.core import join_vector, rtree
+    """Spatial-join service: the probe relation joined against the
+    partitioned data fleet (host fallback: one pair engine per partition;
+    mesh: the probe tree replicated into the single SPMD program)."""
+    from repro.core import rtree
 
-    rng = np.random.default_rng(args.seed)
-    pts = rng.random((args.n, 2), dtype=np.float32)
-    rects = str_pack.points_to_rects(pts)
+    # sort_key='lx' fleet + probe so the O3/O4 sorted-key pruning applies
+    rng, _, shards = _build_shards(args, sort_key="lx")
     n_probe = max(args.n // 10, 64)
     probe_pts = rng.random((n_probe, 2), dtype=np.float32)
     eps = np.float32(args.query_eps)
     probes = np.concatenate([probe_pts - eps, probe_pts + eps], axis=-1)
-    t0 = time.time()
-    tree = rtree.build_rtree(rects, fanout=args.fanout, sort_key="lx")
-    probe_tree = rtree.build_rtree(probes, fanout=args.fanout, sort_key="lx")
-    print(f"built data tree ({args.n}) + probe tree ({n_probe}) in "
-          f"{time.time() - t0:.2f}s")
-    jn = join_vector.make_join_bfs(probe_tree, tree, o3=True, o4=True,
-                                   result_cap=args.join_cap)
-    pairs, n_pairs, ctr = jn()                       # warm/compile
+    probe_tree = rtree.build_rtree(probes, fanout=args.fanout,
+                                   sort_key="lx")
+    shards.warm("join", args.batch_size, probe=probe_tree,
+                result_cap=args.join_cap, o3=True, o4=True)
     t0 = time.time()
     total = 0
+    overflowed = False
     for _ in range(args.batches):
-        pairs, n_pairs, ctr = jn()
-        total += int(n_pairs)
+        pairs, ovf = shards.join(probe_tree, result_cap=args.join_cap,
+                                 o3=True, o4=True)
+        total += len(pairs)
+        overflowed |= ovf
     dt = time.time() - t0
     jps = args.batches / dt
-    print(f"served {args.batches} joins in {dt:.2f}s → {jps:,.2f} joins/s, "
-          f"{total} pair rows"
-          + (", WARNING: pair-frontier overflow" if int(ctr.overflow)
-             else ""))
-    return {"joins_per_s": jps, "pairs": total,
-            "overflow": bool(int(ctr.overflow))}
+    print(f"served {args.batches} joins × {n_probe} probes in {dt:.2f}s → "
+          f"{jps:,.2f} joins/s, {total} pair rows"
+          + (", WARNING: pair-frontier overflow" if overflowed else ""))
+    return {"joins_per_s": jps, "pairs": total, "overflow": overflowed}
+
+
+def _serve_knn_filtered(args, spec):
+    """Filtered-kNN service: k nearest neighbors among the data rects
+    intersecting a per-query filter window (core/knn_filtered.py) — the
+    predicate-composed distance spec served through the same two-phase
+    router / mesh dispatcher as plain kNN, with zero operator-specific
+    serving code."""
+    rng, _, shards = _build_shards(args)
+    eps = np.float32(args.filter_eps)
+    pts = rng.random((args.batches, args.batch_size, 2), dtype=np.float32)
+    qs = np.concatenate([pts, pts - eps, pts + eps], axis=-1)
+    shards.warm("knn_filtered", args.batch_size, k=args.k)
+
+    t0 = time.time()
+    returned = 0
+    overflowed = False
+    for b in range(args.batches):
+        ids, dists, ovf = shards.knn_filtered(qs[b], args.k)
+        returned += int((ids >= 0).sum())
+        overflowed |= ovf
+    dt = time.time() - t0
+    qps = args.batches * args.batch_size / dt
+    print(f"served {args.batches} batches × {args.batch_size} filtered-kNN "
+          f"queries (k={args.k}, window ±{args.filter_eps}) in {dt:.2f}s → "
+          f"{qps:,.0f} q/s, {returned} neighbor rows"
+          + (", WARNING: frontier overflow — results may be approximate"
+             if overflowed else ""))
+    return {"qps": qps, "neighbors": returned, "overflow": overflowed}
 
 
 def _serve_browse(args, spec):
     """Distance-browsing service: each request opens a resumable session
     over its query batch and streams ``--browse-steps`` batches of k
     neighbors — the incremental operator the fixed-k endpoints can't serve
-    without restarting from the root."""
+    without restarting from the root.  On the mesh path the session is a
+    distributed cursor: per-partition BrowseStates with a cross-shard pool
+    merge per batch (one SPMD program per ``next_batch``)."""
     import jax.numpy as jnp
     from repro.core import knn_browse, rtree
+
+    if _use_mesh(args):
+        rng, _, shards = _build_shards(args)
+        qs = rng.random((args.batches, args.batch_size, 2), dtype=np.float32)
+        shards.warm("browse", args.batch_size, k=args.k)
+        t0 = time.time()
+        returned = 0
+        overflowed = False
+        for b in range(args.batches):
+            cursor = shards.browse(qs[b], args.k)
+            for _ in range(args.browse_steps):
+                ids, dists = cursor.next_batch()
+                returned += int((ids >= 0).sum())
+            overflowed |= bool(cursor.overflow.any())
+        dt = time.time() - t0
+        qps = args.batches * args.batch_size / dt
+        print(f"served {args.batches} distributed browse sessions × "
+              f"{args.batch_size} queries × {args.browse_steps} batches of "
+              f"k={args.k} in {dt:.2f}s → {qps:,.0f} sessions·q/s, "
+              f"{returned} neighbor rows"
+              + (", WARNING: lost-bound crossed — results may be approximate"
+                 if overflowed else ""))
+        return {"qps": qps, "neighbors": returned, "overflow": overflowed}
 
     rng = np.random.default_rng(args.seed)
     pts = rng.random((args.n, 2), dtype=np.float32)
@@ -225,6 +298,7 @@ RUNNERS = {
     "join": _serve_join,
     "knn": _serve_knn,
     "knn_join": _serve_knn_join,
+    "knn_filtered": _serve_knn_filtered,
     "browse": _serve_browse,
 }
 
@@ -239,6 +313,14 @@ def main(argv=None):
     ap.add_argument("--query-eps", type=float, default=0.002,
                     help="half-extent of the outer query rects "
                          "(knn-join / join modes)")
+    ap.add_argument("--filter-eps", type=float, default=0.2,
+                    help="half-extent of the per-query filter window "
+                         "(knn-filtered mode)")
+    ap.add_argument("--mesh", default="auto", choices=("auto", "on", "off"),
+                    help="mesh dispatcher: one shard_map program per batch "
+                         "over the model axis (auto: when devices > 1; "
+                         "force devices with XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--browse-steps", type=int, default=4,
                     help="next_batch() calls per browse session")
     ap.add_argument("--join-cap", type=int, default=1 << 17,

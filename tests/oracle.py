@@ -8,6 +8,13 @@ vectorized cell, compare exactly (select/join id sets) or to distance
 tolerance with id-at-reported-distance verification (kNN / kNN-join), and
 assert no overflow was flagged.
 
+A second axis — ``assert_sharded_parity(op, seeds)`` — verifies the
+distributed dispatcher the same way: the host-orchestrated partition
+fan-out and the mesh ``shard_map`` path must return bit-identical results,
+and the mesh result must be invariant under a permutation of the
+partitions (the cross-shard merges order by (distance, global id) /
+sorted global id, which no partition placement can perturb).
+
 Kernel backends require layout='d1' (the level-global SoA arrays); non-d1 ×
 backend cells are skipped rather than errored so callers can request full
 matrices.  Fused cells (whole-level kernels with in-kernel emission) only
@@ -223,11 +230,73 @@ class _KnnJoinOp:
                           mindist_rect_matrix_np, ctx)
 
 
+class _KnnFilteredOp:
+    spec_name = "knn_filtered"
+
+    @staticmethod
+    def height(inst):
+        return inst["tree"].height
+
+    @staticmethod
+    def engine_args(inst, layout, backend, fused):
+        return (inst["tree"],), dict(k=inst["k"], layout=layout,
+                                     backend=backend, fused=fused)
+
+    @staticmethod
+    def make(seed, n=2500, fanout=16, batch=6, k=8, weps=0.2, **_):
+        rng = np.random.default_rng(seed)
+        rects = uniform_rects(rng, n, eps=0.002)
+        pts = (rng.random((batch, 2)).astype(np.float32) * 0.5
+               + np.float32(0.25))
+        win = np.concatenate([pts - np.float32(weps),
+                              pts + np.float32(weps)], axis=1)
+        queries = np.concatenate([pts, win], axis=1).astype(np.float32)
+        # oracle: mask out rects not intersecting the window, then kNN
+        d = mindist_matrix_np(pts, rects)
+        inter = ((win[:, None, 0] <= rects[None, :, 2]) &
+                 (win[:, None, 2] >= rects[None, :, 0]) &
+                 (win[:, None, 1] <= rects[None, :, 3]) &
+                 (win[:, None, 3] >= rects[None, :, 1]))
+        d = np.where(inter, d, np.inf)
+        order = np.argsort(d, axis=1, kind="stable")[:, :k]
+        od = np.take_along_axis(d, order, axis=1)
+        return dict(rects=rects, queries=queries, k=k, oracle_d=od,
+                    win=win, tree=rtree.build_rtree(rects, fanout=fanout))
+
+    @staticmethod
+    def run(inst, layout, backend, fused=False):
+        from repro.core import knn_filtered
+        fn = knn_filtered.make_knn_filtered_bfs(
+            inst["tree"], k=inst["k"], layout=layout, backend=backend,
+            fused=fused)
+        return fn(jnp.asarray(inst["queries"]))
+
+    @staticmethod
+    def check(inst, result, ctx):
+        ids, d, ctr = result
+        ids, d = np.asarray(ids), np.asarray(d)
+        assert not bool(ctr.overflow), ctx
+        np.testing.assert_allclose(np.sort(d, axis=1),
+                                   np.sort(inst["oracle_d"], axis=1),
+                                   rtol=1e-4, atol=1e-9, err_msg=ctx)
+        for i, q in enumerate(inst["queries"]):
+            valid = ids[i] >= 0
+            got = inst["rects"][ids[i][valid]]
+            true_d = mindist_matrix_np(q[:2], got)[0]
+            np.testing.assert_allclose(true_d, d[i][valid], rtol=1e-4,
+                                       atol=1e-9, err_msg=ctx)
+            w = inst["win"][i]
+            assert ((got[:, 0] <= w[2]) & (got[:, 2] >= w[0]) &
+                    (got[:, 1] <= w[3]) & (got[:, 3] >= w[1])).all(), ctx
+            assert len(set(ids[i][valid].tolist())) == valid.sum(), ctx
+
+
 OPS = {
     "select": _SelectOp,
     "join": _JoinOp,
     "knn": _KnnOp,
     "knn_join": _KnnJoinOp,
+    "knn_filtered": _KnnFilteredOp,
 }
 
 
@@ -272,4 +341,102 @@ def assert_matches_oracle(op: str, layouts=LAYOUTS, backends=(None,),
             cells += 1
     assert cells > 0, \
         f"no runnable cells for {op}: {layouts} × {backends} × {fused}"
+    return cells
+
+
+# --------------------------------------------------------------------------
+# sharded axis: host-orchestrated ≡ mesh-SPMD, invariant under permutation
+# --------------------------------------------------------------------------
+
+SHARDED_OPS = ("select", "join", "knn", "knn_join", "knn_filtered")
+
+
+def _shards_for(rects, n_partitions, fanout, order=None, mesh=None):
+    from repro.distributed.spatial_shard import SpatialShards
+    s = SpatialShards.build(rects, n_partitions, fanout=fanout)
+    if order is not None:
+        s.partitions = [s.partitions[i] for i in order]
+        s.router_mbrs = np.stack([p.mbr for p in s.partitions])
+    if mesh is not False:
+        s.enable_mesh(mesh)
+    return s
+
+
+def _sharded_result(op, shards, inst):
+    if op == "select":
+        return shards.range_select(inst["queries"], result_cap=inst["cap"])
+    if op == "join":
+        return shards.join(inst["probe"], result_cap=inst["cap"])
+    return getattr(shards, op)(inst["queries"], inst["k"])
+
+
+def _assert_same_result(op, a, b, ctx):
+    if op == "select":
+        assert len(a) == len(b), ctx
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y, err_msg=ctx)
+        return
+    if op == "join":
+        np.testing.assert_array_equal(a[0], b[0], err_msg=ctx)
+        assert a[1] == b[1], ctx
+        return
+    np.testing.assert_array_equal(a[0], b[0], err_msg=ctx)      # global ids
+    np.testing.assert_array_equal(a[1], b[1], err_msg=ctx)      # distances
+    assert a[2] == b[2], ctx                                    # overflow
+
+
+def _sharded_instance(op, seed, n, batch, k):
+    rng = np.random.default_rng(seed)
+    rects = uniform_rects(rng, n, eps=0.002)
+    inst = dict(rects=rects, k=k, cap=max(n, 4096))
+    if op == "select":
+        lo = rng.random((batch, 2)).astype(np.float32) * 0.9
+        inst["queries"] = np.concatenate([lo, lo + 0.05], axis=1) \
+            .astype(np.float32)
+    elif op == "join":
+        lo = rng.random((batch * 32, 2)).astype(np.float32) * 0.9
+        inst["probe"] = np.concatenate([lo, lo + 0.01], axis=1) \
+            .astype(np.float32)
+        inst["cap"] = 1 << 15
+    elif op == "knn":
+        inst["queries"] = rng.random((batch, 2)).astype(np.float32)
+    elif op == "knn_join":
+        lo = rng.random((batch, 2)).astype(np.float32) * 0.9
+        inst["queries"] = np.concatenate([lo, lo + 0.01], axis=1) \
+            .astype(np.float32)
+    elif op == "knn_filtered":
+        pts = (rng.random((batch, 2)).astype(np.float32) * 0.5
+               + np.float32(0.25))
+        inst["queries"] = np.concatenate(
+            [pts, pts - np.float32(0.2), pts + np.float32(0.2)],
+            axis=1).astype(np.float32)
+    else:
+        raise KeyError(op)
+    return rng, inst
+
+
+def assert_sharded_parity(op, seeds=(0,), n=4000, n_partitions=4,
+                          fanout=16, batch=6, k=8, mesh=None) -> int:
+    """The distributed dispatcher's oracle axis: for each seed, (1) the
+    host-orchestrated fan-out and the one-program mesh path return
+    bit-identical results, and (2) the mesh result is unchanged when the
+    partitions are packed in a shuffled order.  Returns cells verified."""
+    cells = 0
+    for seed in seeds:
+        rng, inst = _sharded_instance(op, seed, n, batch, k)
+        host = _shards_for(inst["rects"], n_partitions, fanout, mesh=False)
+        meshed = _shards_for(inst["rects"], n_partitions, fanout, mesh=mesh)
+        ctx = f"sharded {op} seed={seed} host-vs-mesh"
+        res_host = _sharded_result(op, host, inst)
+        res_mesh = _sharded_result(op, meshed, inst)
+        _assert_same_result(op, res_host, res_mesh, ctx)
+        perm = rng.permutation(len(host.partitions))
+        permuted = _shards_for(inst["rects"], n_partitions, fanout,
+                               order=perm, mesh=mesh)
+        res_perm = _sharded_result(op, permuted, inst)
+        _assert_same_result(op, res_mesh, res_perm,
+                            f"sharded {op} seed={seed} permutation "
+                            f"invariance (perm={perm.tolist()})")
+        cells += 1
+    assert cells > 0
     return cells

@@ -196,3 +196,39 @@ def test_property_browse_prefix_consistency(n, fanout, kb, k, seed):
     diff = ids != fi
     if diff.any():                     # ids may differ only at tied distances
         np.testing.assert_array_equal(d[diff], fd[diff])
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=st.integers(600, 4000), n_partitions=st.sampled_from([2, 3, 4]),
+       kb=st.sampled_from([4, 8]), steps=st.integers(1, 3),
+       seed=st.integers(0, 2**31 - 1))
+def test_property_sharded_browse_prefix_consistency(n, n_partitions, kb,
+                                                    steps, seed):
+    """The distributed browse cursor (per-partition BrowseStates +
+    cross-shard pool merge, distributed/spatial_shard.browse) emits the
+    same global distance order as the single-tree fixed-k operator: every
+    ``steps·kb`` prefix equals make_knn_bfs(steps·kb) — distances
+    bit-for-bit (each partition scores the same (query, rect) pairs in the
+    same f32 math), ids identical away from distance ties."""
+    from repro.distributed.spatial_shard import SpatialShards
+    rng = np.random.default_rng(seed)
+    rects = uniform_rects(rng, n, eps=0.002)
+    pts = rng.random((3, 2)).astype(np.float32)
+    shards = SpatialShards.build(rects, n_partitions, fanout=16).enable_mesh()
+    cur = shards.browse(pts, kb)
+    ids, ds = [], []
+    for _ in range(steps):
+        i, d = cur.next_batch()
+        ids.append(i)
+        ds.append(d)
+    ids = np.concatenate(ids, axis=1)
+    d = np.concatenate(ds, axis=1).astype(np.float32)
+    assert not cur.overflow.any()
+    t = rtree.build_rtree(rects, fanout=16)
+    fi, fd, fc = knn_vector.make_knn_bfs(t, k=kb * steps)(jnp.asarray(pts))
+    fi, fd = np.asarray(fi), np.asarray(fd)
+    assert int(fc.overflow) == 0
+    np.testing.assert_array_equal(d, fd.astype(np.float32))
+    diff = ids != fi
+    if diff.any():                     # ids may differ only at tied distances
+        np.testing.assert_array_equal(d[diff], fd[diff])

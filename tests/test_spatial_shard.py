@@ -1,22 +1,41 @@
 """Distributed spatial service: sharded select ≡ single-tree select;
-straggler deadline re-issue."""
+straggler deadline re-issue.
+
+Shard fleets are built once per module through a cache keyed by
+(n, n_partitions, fanout, seed) — rebuilding 30k-rect fleets per test was
+the sharded suite's dominant tier-1 cost.
+"""
 import time
 
 import numpy as np
 import pytest
 
-from repro.core import rtree, str_pack
 from repro.distributed.spatial_shard import SpatialShards
 from repro.runtime.straggler import ShardPool
 
 from conftest import brute_select, uniform_rects
 
 
-def test_sharded_select_matches_brute():
-    rng = np.random.default_rng(20)
-    rects = uniform_rects(rng, 30_000, eps=0.004)
-    shards = SpatialShards.build(rects, n_partitions=6, fanout=32)
+@pytest.fixture(scope="module")
+def shard_cache():
+    cache = {}
+
+    def get(n, n_partitions, fanout=64, seed=20, eps=0.004):
+        key = (n, n_partitions, fanout, seed, eps)
+        if key not in cache:
+            rng = np.random.default_rng(seed)
+            rects = uniform_rects(rng, n, eps=eps)
+            cache[key] = (rects, SpatialShards.build(
+                rects, n_partitions=n_partitions, fanout=fanout))
+        return cache[key]
+
+    return get
+
+
+def test_sharded_select_matches_brute(shard_cache):
+    rects, shards = shard_cache(30_000, 6, fanout=32)
     assert len(shards.partitions) >= 4
+    rng = np.random.default_rng(25)
     lo = rng.random((12, 2)).astype(np.float32) * 0.9
     qs = np.concatenate([lo, lo + 0.07], axis=1).astype(np.float32)
     res = shards.range_select(qs)
@@ -24,10 +43,8 @@ def test_sharded_select_matches_brute():
         np.testing.assert_array_equal(res[i], brute_select(rects, q))
 
 
-def test_partition_coverage():
-    rng = np.random.default_rng(21)
-    rects = uniform_rects(rng, 5000)
-    shards = SpatialShards.build(rects, n_partitions=4)
+def test_partition_coverage(shard_cache):
+    _, shards = shard_cache(5000, 4, eps=0.0, seed=21)
     total = np.concatenate([p.ids for p in shards.partitions])
     assert len(total) == 5000 and len(set(total.tolist())) == 5000
 
