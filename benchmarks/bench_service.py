@@ -7,19 +7,36 @@ host-orchestrated fan-out vs the mesh-sharded one-program path.
 mesh}: the host path issues one jit round-trip per touched partition per
 phase, the mesh path executes the whole batch as ONE ``shard_map`` program
 (routing, per-partition BFS, and the cross-shard τ/top-k merge all
-in-program — distributed/spatial_shard.enable_mesh).  The summary lands in
-``BENCH_shard.json``; ``--dryrun`` shrinks sizes for the CI slow lane and
-asserts host ≡ mesh outputs while it is at it.
+in-program — distributed/spatial_shard.enable_mesh).  Queue cells serve the
+same rows as a stream of small requests through the continuous-batching
+``launch/queue.ServeQueue`` (per-request host serving vs coalesced mesh
+dispatches).  The summary lands in ``BENCH_shard.json``.
+
+``run_serve_queue()`` is the serving sweep → ``BENCH_serve.json``: a
+closed-loop client fleet issues small kNN requests against (a) per-request
+host dispatch, (b) per-request mesh dispatch, (c) the queue over R replica
+engines (``SpatialShards.replicate``) for each replica count — recording
+QPS, rows per coalesced dispatch, the device-dispatch amortization factor,
+and straggler re-issue/failure counts.  The artifact also records
+``cores``/``devices``: replica scaling is a *device*-level mechanism, so on
+a host with fewer physical cores than forced devices the aggregate QPS
+plateaus at core saturation (the dispatch-amortization and collective-
+elimination effects still show).
+
+``--dryrun`` shrinks sizes for the CI slow lane and asserts host ≡ mesh ≡
+queued outputs bit-exactly while it is at it.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 
 import numpy as np
 
 from repro.core import rtree, select_vector
 from repro.distributed.spatial_shard import SpatialShards
+from repro.launch.queue import ServeQueue
 
 from .common import Rows, point_rects, square_queries, time_fn, uniform_points
 
@@ -48,14 +65,26 @@ def run(n: int = 500_000, partitions: int = 8, fanout: int = 64,
 def run_sharded(n: int = 200_000, partition_counts=(2, 4, 8),
                 fanout: int = 64, batch: int = 64, k: int = 8,
                 selectivity: float = 0.001, seed: int = 0,
+                request_rows: int = 4,
                 out_json: str = "BENCH_shard.json", check: bool = False):
-    """Host-orchestrated vs mesh-SPMD sweep → BENCH_shard.json."""
+    """Host-orchestrated vs mesh-SPMD sweep → BENCH_shard.json.
+
+    Each cell also serves the kNN batch as ``batch / request_rows`` small
+    requests: once per-request on the host path (the pre-queue serving
+    architecture) and once through ``ServeQueue`` over the mesh engine,
+    which coalesces the stream back into ONE mesh dispatch — with
+    ``check``, the queued per-request responses must be bit-exact with the
+    host fan-out's.
+    """
     import jax
     rows = Rows("spatial_service_sharded")
     rects = point_rects(n, seed)
     qs4 = square_queries(batch, selectivity, seed + 1)
     pts = uniform_points(batch, seed + 2)
+    reqs = [pts[i:i + request_rows]
+            for i in range(0, batch, request_rows)]
     summary = {"n": n, "fanout": fanout, "batch": batch, "k": k,
+               "request_rows": request_rows,
                "devices": len(jax.devices()), "sweep": []}
 
     for p in partition_counts:
@@ -66,30 +95,147 @@ def run_sharded(n: int = 200_000, partition_counts=(2, 4, 8),
         cell = {"partitions": len(shards.partitions)}
         shards.warm("select", batch)
         shards.warm("knn", batch, k=k)
+        shards.warm("knn", request_rows, k=k)
         dt_h, out_h = time_fn(lambda: shards.range_select(qs4))
         dt_hk, knn_h = time_fn(lambda: shards.knn(pts, k))
+        dt_sh, _ = time_fn(lambda: [shards.knn(r, k) for r in reqs],
+                           iters=2)
         shards.enable_mesh()
         shards.warm("select", batch)
         shards.warm("knn", batch, k=k)
         dt_m, out_m = time_fn(lambda: shards.range_select(qs4))
         dt_mk, knn_m = time_fn(lambda: shards.knn(pts, k))
+        # the serving view of the same rows: the queue coalesces the
+        # request stream back into full-batch mesh dispatches (max_batch ==
+        # batch, so every coalesced bucket is a shape warmed above)
+        with ServeQueue(shards, "knn", k=k, max_batch=batch,
+                        max_delay_s=0.05, deadline_s=600.0) as q:
+            q.query_many(reqs)                       # settle the pipeline
+            dt_q, out_q = time_fn(lambda: q.query_many(reqs), iters=2)
+            qsum = q.summary
         cell["select_host_qps"] = batch / dt_h
         cell["select_mesh_qps"] = batch / dt_m
         cell["knn_host_qps"] = batch / dt_hk
         cell["knn_mesh_qps"] = batch / dt_mk
+        cell["knn_serve_host_qps"] = batch / dt_sh
+        cell["knn_queue_qps"] = batch / dt_q
         cell["knn_mesh_dispatches"] = int(shards.last_counters.dispatches)
+        cell["queue_rows_per_dispatch"] = qsum.get("rows_per_dispatch", 0)
         if check:
             for a, b in zip(out_h, out_m):
                 np.testing.assert_array_equal(a, b)
             np.testing.assert_array_equal(knn_h[0], knn_m[0])
             np.testing.assert_array_equal(knn_h[1], knn_m[1])
+            for i, (ids, d, _) in enumerate(out_q):
+                off = i * request_rows
+                m = len(reqs[i])
+                np.testing.assert_array_equal(ids, knn_h[0][off:off + m])
+                np.testing.assert_array_equal(d, knn_h[1][off:off + m])
         summary["sweep"].append(cell)
         rows.add(partitions=cell["partitions"],
                  select_host_qps=round(cell["select_host_qps"], 1),
                  select_mesh_qps=round(cell["select_mesh_qps"], 1),
                  knn_host_qps=round(cell["knn_host_qps"], 1),
                  knn_mesh_qps=round(cell["knn_mesh_qps"], 1),
+                 knn_serve_host_qps=round(cell["knn_serve_host_qps"], 1),
+                 knn_queue_qps=round(cell["knn_queue_qps"], 1),
                  dispatches=cell["knn_mesh_dispatches"])
+
+    with open(out_json, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"wrote {out_json}")
+    return rows
+
+
+def run_serve_queue(n: int = 100_000, partitions: int = 2,
+                    fanout: int = 64, k: int = 8, request_rows: int = 4,
+                    requests: int = 128, clients: int = 16,
+                    replica_counts=(1, 2, 4), max_batch: int = 128,
+                    depth: int = 2, seed: int = 0,
+                    out_json: str = "BENCH_serve.json",
+                    check: bool = False):
+    """Serving sweep → BENCH_serve.json: per-request host / per-request
+    mesh / queued-mesh-over-R-replicas QPS on one request stream."""
+    import concurrent.futures as cf
+
+    import jax
+
+    rows = Rows("spatial_serve_queue")
+    rects = point_rects(n, seed)
+    pts = uniform_points(requests * request_rows, seed + 2)
+    reqs = [pts[i * request_rows:(i + 1) * request_rows]
+            for i in range(requests)]
+    total = requests * request_rows
+    shards = SpatialShards.build(rects, partitions, fanout=fanout)
+    n_dev = len(jax.devices())
+    summary = {"n": n, "partitions": len(shards.partitions),
+               "fanout": fanout, "k": k, "request_rows": request_rows,
+               "requests": requests, "clients": clients,
+               "max_batch": max_batch, "depth": depth,
+               "devices": n_dev, "cores": os.cpu_count() or 1,
+               "sweep": []}
+
+    # pre-queue serving baselines: one dispatch (chain) per request
+    shards.warm("knn", request_rows, k=k)
+    dt, host_ref = time_fn(lambda: [shards.knn(r, k) for r in reqs],
+                           iters=2)
+    summary["host_per_request_qps"] = total / dt
+    rows.add(config="host per-request", qps=round(total / dt, 1))
+
+    mesh_solo = shards.replicate(replicas=1)[0]
+    mesh_solo.warm("knn", request_rows, k=k)
+    dt, _ = time_fn(lambda: [mesh_solo.knn(r, k) for r in reqs], iters=2)
+    summary["mesh_per_request_qps"] = total / dt
+    rows.add(config="mesh per-request", qps=round(total / dt, 1))
+
+    for r_count in replica_counts:
+        if r_count > n_dev or n_dev % r_count:
+            print(f"  skip replicas={r_count} ({n_dev} devices)")
+            continue
+        reps = shards.replicate(replicas=r_count)
+        # warm the shapes the serving loop hits: the per-request bucket
+        # (straggler tails), the full coalesced bucket, and one below it —
+        # with a packed inbox and max_delay_s headroom, every gather pads
+        # into the top half of the bucket range, so deeper buckets never
+        # compile mid-serve (each warm is a full mesh-program compile;
+        # warming the entire pow2 ladder on every replica dominates the
+        # benchmark's wall clock for no coverage gain)
+        bucket_cap = 1 << (max_batch - 1).bit_length()
+        req_bk = 1 << (request_rows - 1).bit_length()
+        for rep in reps:
+            for bk in sorted({req_bk, bucket_cap // 2, bucket_cap}):
+                rep.warm("knn", bk, k=k)
+
+        def serve_pass(reps=reps, r_count=r_count):
+            with ServeQueue(reps, "knn", k=k, max_batch=max_batch,
+                            max_delay_s=0.1, depth=depth,
+                            deadline_s=600.0) as q:
+                with cf.ThreadPoolExecutor(clients) as ex:
+                    def client(cid):
+                        return [(i, q.query(reqs[i]))
+                                for i in range(cid, requests, clients)]
+                    out = [f.result() for f in
+                           [ex.submit(client, c) for c in range(clients)]]
+                return out, q.summary
+
+        serve_pass()                                 # settle the pipeline
+        dt, (out, qsum) = time_fn(serve_pass, iters=2)
+        cell = {"replicas": r_count, "queued_mesh_qps": total / dt,
+                "rows_per_dispatch": qsum.get("rows_per_dispatch", 0),
+                "dispatches": qsum.get("batches", 0),
+                "dispatch_amortization": requests / max(
+                    qsum.get("batches", 1), 1),
+                "reissues": qsum["reissues"], "failures": qsum["failures"]}
+        summary["sweep"].append(cell)
+        rows.add(config=f"queued mesh R={r_count}",
+                 qps=round(cell["queued_mesh_qps"], 1),
+                 rows_per_dispatch=round(cell["rows_per_dispatch"], 1),
+                 reissues=cell["reissues"], failures=cell["failures"])
+        if check:
+            flat = dict(pair for chunk in out for pair in chunk)
+            for i, (ids, d, _) in sorted(flat.items()):
+                np.testing.assert_array_equal(ids, host_ref[i][0])
+                np.testing.assert_array_equal(d, host_ref[i][1])
 
     with open(out_json, "w") as f:
         json.dump(summary, f, indent=2)
@@ -101,15 +247,23 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", action="store_true",
                     help="tiny sizes for the CI slow lane; asserts host ≡ "
-                         "mesh outputs")
+                         "mesh ≡ queued outputs")
     ap.add_argument("--n", type=int, default=200_000)
     ap.add_argument("--batch", type=int, default=64)
     ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--serve-n", type=int, default=100_000,
+                    help="workload size for the serve-queue sweep")
     args = ap.parse_args(argv)
     if args.dryrun:
-        return run_sharded(n=8000, partition_counts=(2, 4), fanout=16,
-                           batch=16, k=4, check=True)
-    return run_sharded(n=args.n, batch=args.batch, k=args.k)
+        out = run_sharded(n=8000, partition_counts=(2, 4), fanout=16,
+                          batch=16, k=4, check=True)
+        run_serve_queue(n=8000, partitions=2, fanout=16, k=4,
+                        request_rows=2, requests=16, clients=4,
+                        replica_counts=(1, 2), max_batch=16, check=True)
+        return out
+    out = run_sharded(n=args.n, batch=args.batch, k=args.k)
+    run_serve_queue(n=args.serve_n, k=args.k)
+    return out
 
 
 if __name__ == "__main__":

@@ -66,7 +66,11 @@ class PackedForest:
         return self.tree.height
 
     def device_put(self, mesh, axis: str = "model") -> "PackedForest":
-        """Shard the stacked leaves along ``axis`` (leading partition dim)."""
+        """Shard the stacked leaves along ``axis`` (leading partition dim).
+        Any OTHER mesh axis (e.g. the ``data`` replica axis of a 2-D
+        ``(data, model)`` serving mesh) is left unnamed in the spec, so the
+        leaves replicate across it — every data row holds a full copy of
+        the forest."""
         import jax
         from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -151,3 +155,29 @@ def pack_forest(trees: Sequence[RTree], ids: Sequence[np.ndarray],
         fanout=fanout, sort_key=trees[0].sort_key)
     return PackedForest(tree=stacked, ids_map=ids_map, mbrs=mbrs,
                         n_real=p_real)
+
+
+def replicate_forest(packed: PackedForest, meshes,
+                     axis: str = "model") -> List[PackedForest]:
+    """Replica fan-out across the data axis: place ONE host-packed forest
+    onto each replica mesh (disjoint device groups — the rows of the
+    ``(data, model)`` serving grid, launch/mesh.replica_meshes).
+
+    The partition packing is shared — every replica mesh must have the same
+    ``axis`` size, so a single ``pack_forest(..., n_shards=size)`` feeds all
+    of them and only the device placement differs.  The returned forests
+    are genuinely independent engines: dispatches to different replicas run
+    on different devices, which is what makes the straggler pool's deadline
+    re-issue (runtime/straggler.ShardPool) target distinct hardware and
+    serving QPS scale with the replica count, not just partitions."""
+    sizes = {m.shape[axis] for m in meshes}
+    if len(sizes) != 1:
+        raise ValueError(f"replica meshes disagree on the {axis!r} axis "
+                         f"size: {sorted(sizes)}")
+    (size,) = sizes
+    if packed.n_partitions % size:
+        raise ValueError(
+            f"forest packed for a multiple of {packed.n_partitions} "
+            f"partitions cannot shard over a {size}-device {axis!r} axis — "
+            f"re-pack with n_shards={size}")
+    return [packed.device_put(m, axis) for m in meshes]

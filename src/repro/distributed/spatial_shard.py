@@ -139,6 +139,41 @@ class SpatialShards:
         self._browse_starts = {}
         return self
 
+    def replicate(self, replicas: Optional[int] = None, meshes=None,
+                  axis: str = "model") -> List["SpatialShards"]:
+        """Replica fan-out on the data axis: R independent mesh engines over
+        disjoint device groups, each serving the full public API against a
+        complete copy of the fleet.
+
+        The partition list and the host-side forest pack are shared (packed
+        ONCE, device_put per replica mesh — distributed/forest.
+        replicate_forest); only device placement and compiled-program caches
+        differ, so dispatches to different replicas overlap on real hardware.
+        These are the engines that make the straggler pool's deadline
+        re-issue meaningful (a re-issue targets a *different* replica's
+        devices) and let serving QPS scale with devices, not just
+        partitions.  ``meshes`` defaults to ``launch/mesh.replica_meshes
+        (replicas)`` — the rows of the ``(data, model)`` serving grid.
+        ``self`` is left untouched (host path or current mesh state), so it
+        stays usable as the parity reference."""
+        from repro.distributed import forest as forest_mod
+
+        if meshes is None:
+            from repro.launch.mesh import replica_meshes
+            meshes = replica_meshes(replicas or 1, axis=axis)
+        packed = forest_mod.pack_forest(
+            [p.tree for p in self.partitions],
+            [p.ids for p in self.partitions],
+            n_shards=meshes[0].shape[axis])
+        forests = forest_mod.replicate_forest(packed, meshes, axis=axis)
+        reps = []
+        for mesh, fst in zip(meshes, forests):
+            rep = SpatialShards(self.partitions, self.fanout)
+            rep._mesh, rep._mesh_axis = mesh, axis
+            rep._forest = fst
+            reps.append(rep)
+        return reps
+
     def _mesh_program(self, op: str, outer_tree=None, **params):
         key = (op, tuple(sorted(params.items())),
                None if outer_tree is None else id(outer_tree))

@@ -1,0 +1,295 @@
+"""Continuous-batching admission queue for the spatial query service.
+
+The mesh engine's per-dispatch overhead is amortized over whatever batch a
+caller hands it — and BENCH_shard.json showed the mesh path *losing* to the
+host fallback exactly because serve-sized batches are too small.  This
+module closes that gap operationally: concurrent client requests for any
+batched ``OperatorSpec`` are admitted into one queue, coalesced into
+power-of-two buckets (the same ``SpatialShards._bucket`` padding policy the
+fleet already compiles against, so coalescing adds no new trace shapes),
+and served with ONE mesh dispatch per coalesced batch.
+
+Pipeline shape (``depth`` in-flight batches per replica):
+
+    clients ──submit──▶ inbox ──┐
+                                │  runner thread: drain ≤ max_batch rows
+                                │  (waiting ≤ max_delay_s for stragglers),
+                                │  assemble + pow2-pad the batch   ── host
+                                ▼
+                   dispatch workers (depth × R threads)
+                                │  ShardPool.query(replica r, batch)
+                                │  — deadline re-issue to a DIFFERENT
+                                │    replica, failures counted    ── device
+                                ▼
+                   per-request slices → response futures
+
+Double-buffering falls out of the split: while a dispatch worker blocks on
+device traversal compute, the runner thread is already assembling the next
+batch (and with ``depth ≥ 2`` a second dispatch per replica is admitted
+before the first returns, so the device never waits on host-side batch
+assembly).  Replica fan-out comes from ``SpatialShards.replicate`` — the
+round-robin across R replicas multiplies throughput by the data-axis size
+and gives the straggler pool genuinely distinct engines to re-issue to.
+
+Responses are bit-exact with direct per-request ``SpatialShards`` calls
+regardless of arrival interleaving: every operator the queue admits scores
+queries row-independently (asserted by the hypothesis schedule property in
+tests/test_spatial_shard.py).  The batch-level ``overflow`` flag is
+conservative — a request reports overflow if any request in its coalesced
+batch overflowed.
+"""
+from __future__ import annotations
+
+import collections
+import concurrent.futures as cf
+import dataclasses
+import queue as queue_mod
+import threading
+import time
+from typing import Any, Dict, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core import traversal
+from repro.distributed.spatial_shard import SpatialShards
+from repro.runtime.straggler import ShardPool
+
+# browse is resumable (a session, not a one-shot request) and the join is
+# query-less — neither coalesces into a shared query batch
+QUEUEABLE_OPS = ("select", "knn", "knn_join", "knn_filtered")
+
+_STOP = object()
+
+
+@dataclasses.dataclass
+class _Request:
+    rows: np.ndarray            # (m, W) query rows
+    future: cf.Future           # resolves to this request's sliced result
+
+
+class ServeQueue:
+    """Continuous-batching front end over one fleet or a replica list.
+
+    ``engines`` — a ``SpatialShards`` or a sequence of them (the replicas
+    from ``SpatialShards.replicate``; each must serve operator ``op``).
+    ``op`` — a registered batched operator (``QUEUEABLE_OPS``).
+    ``k`` / ``result_cap`` — the operator's parameters.
+    ``max_batch`` — coalescing target in query rows (a single larger
+    request still dispatches whole); the assembled batch is padded to its
+    power-of-two bucket with ``SpatialShards._bucket``.
+    ``max_delay_s`` — how long the runner waits for more requests once one
+    is pending (the latency price of a fuller batch).
+    ``depth`` — in-flight dispatches per replica (2 = double-buffered).
+    ``deadline_s`` — straggler deadline per dispatch (ShardPool re-issue).
+    """
+
+    def __init__(self, engines: Union[SpatialShards,
+                                      Sequence[SpatialShards]],
+                 op: str, *, k: Optional[int] = None,
+                 result_cap: int = 4096, max_batch: int = 256,
+                 max_delay_s: float = 0.002, depth: int = 2,
+                 deadline_s: float = 30.0):
+        if isinstance(engines, SpatialShards):
+            engines = [engines]
+        if not engines:
+            raise ValueError("need at least one engine")
+        spec = traversal.get_spec(op)
+        if op not in QUEUEABLE_OPS:
+            raise ValueError(
+                f"operator {op!r} does not admit request coalescing "
+                f"(queueable: {QUEUEABLE_OPS})")
+        if spec.kind == "distance" and k is None:
+            raise ValueError(f"queueing {op!r} needs k")
+        if depth < 1 or max_batch < 1:
+            raise ValueError("depth and max_batch must be >= 1")
+        self.op = op
+        self.spec = spec
+        self.k = k
+        self.result_cap = result_cap
+        self.max_batch = max_batch
+        self.max_delay_s = max_delay_s
+        self.depth = depth
+        self.replicas = list(engines)
+        self.pool = ShardPool(
+            [self._replica_call(r) for r in self.replicas],
+            deadline_s=deadline_s,
+            max_workers=depth * len(self.replicas) + 1)
+        self.stats: Dict[str, int] = collections.defaultdict(int)
+        self._inbox: "queue_mod.Queue" = queue_mod.Queue()
+        self._inflight: collections.deque = collections.deque()
+        self._carry: Optional[_Request] = None
+        self._rr = 0
+        self._closed = False
+        self._lock = threading.Lock()
+        self._exec = cf.ThreadPoolExecutor(
+            max_workers=depth * len(self.replicas),
+            thread_name_prefix="serve-queue-dispatch")
+        self._runner = threading.Thread(target=self._serve_loop,
+                                        name="serve-queue-runner",
+                                        daemon=True)
+        self._runner.start()
+
+    # ------------------------------------------------------------------
+    # client API
+    # ------------------------------------------------------------------
+
+    def submit(self, rows: np.ndarray) -> cf.Future:
+        """Admit one request of ``rows`` (m, W) query rows; returns a
+        future resolving to the per-request result — distance operators:
+        (ids (m, k), dists (m, k), overflow), select: list of m id arrays."""
+        rows = np.asarray(rows, np.float32)
+        if rows.ndim != 2 or rows.shape[0] < 1 \
+                or rows.shape[1] != self.spec.query_width:
+            raise ValueError(
+                f"request rows must be (m >= 1, {self.spec.query_width}), "
+                f"got {rows.shape}")
+        fut: cf.Future = cf.Future()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("queue is closed")
+            self._inbox.put(_Request(rows=rows, future=fut))
+        return fut
+
+    def query(self, rows: np.ndarray):
+        """Blocking convenience wrapper around :meth:`submit`."""
+        return self.submit(rows).result()
+
+    def query_many(self, requests: Sequence[np.ndarray]) -> List[Any]:
+        """Admit many requests at once; results come back in submission
+        order regardless of how the batches coalesce."""
+        return [f.result() for f in [self.submit(r) for r in requests]]
+
+    def close(self) -> None:
+        """Flush everything admitted so far, then shut the pipeline down.
+        Safe to call twice; runs on scope exit when used as a context
+        manager (including on exceptions)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        self._inbox.put(_STOP)
+        self._runner.join()
+        self._exec.shutdown(wait=True)
+        self.pool.shutdown()
+
+    def __enter__(self) -> "ServeQueue":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
+    # pipeline internals
+    # ------------------------------------------------------------------
+
+    def _replica_call(self, shards: SpatialShards):
+        if self.op == "select":
+            def call(batch, s=shards):
+                return s.range_select(batch, result_cap=self.result_cap)
+        else:
+            def call(batch, s=shards):
+                return getattr(s, self.op)(batch, self.k)
+        return call
+
+    def _gather(self) -> Optional[List[_Request]]:
+        """Drain the inbox into one coalesced batch: block for the first
+        request, then keep admitting until ``max_batch`` rows are pending
+        or ``max_delay_s`` has elapsed.  A request that would push the
+        batch past the ``max_batch`` power-of-two bucket is *carried* into
+        the next batch instead (so coalescing never creates trace shapes
+        beyond the warmed buckets; a single over-sized request still
+        dispatches whole, in its own bucket).  Returns None on shutdown."""
+        bucket_cap = 1 << (self.max_batch - 1).bit_length()
+        if self._carry is not None:
+            reqs, self._carry = [self._carry], None
+            rows = len(reqs[0].rows)
+        else:
+            try:
+                first = self._inbox.get(timeout=0.05)
+            except queue_mod.Empty:
+                return []
+            if first is _STOP:
+                return None
+            reqs = [first]
+            rows = len(first.rows)
+        deadline = time.monotonic() + self.max_delay_s
+        while rows < self.max_batch:
+            wait = deadline - time.monotonic()
+            try:
+                nxt = self._inbox.get(timeout=wait) if wait > 0 \
+                    else self._inbox.get_nowait()
+            except queue_mod.Empty:
+                break
+            if nxt is _STOP:
+                # keep flushing what we have; re-post so the loop exits
+                # once the inbox (and any carry) is drained
+                self._inbox.put(_STOP)
+                break
+            if rows + len(nxt.rows) > bucket_cap:
+                self._carry = nxt
+                break
+            reqs.append(nxt)
+            rows += len(nxt.rows)
+        return reqs
+
+    def _serve_loop(self) -> None:
+        while True:
+            reqs = self._gather()
+            if reqs is None:
+                break
+            if not reqs:
+                continue
+            # host-side assembly: concatenate + pow2-bucket pad — overlaps
+            # the device compute of the in-flight dispatches below
+            batch = SpatialShards._bucket(
+                np.concatenate([r.rows for r in reqs], axis=0))
+            while len(self._inflight) >= self.depth * len(self.replicas):
+                self._inflight.popleft().result()
+            ridx = self._rr % len(self.replicas)
+            self._rr += 1
+            self._inflight.append(
+                self._exec.submit(self._run_batch, ridx, batch, reqs))
+        for fut in self._inflight:
+            fut.result()
+        self._inflight.clear()
+
+    def _run_batch(self, ridx: int, batch: np.ndarray,
+                   reqs: List[_Request]) -> None:
+        """One coalesced dispatch (deadline/failure handling in the pool),
+        then per-request slicing and future resolution."""
+        try:
+            out = self.pool.query(ridx, batch)
+        except Exception as exc:        # every engine failed
+            for r in reqs:
+                r.future.set_exception(exc)
+            return
+        self.stats["batches"] += 1
+        self.stats["requests"] += len(reqs)
+        self.stats["rows"] += sum(len(r.rows) for r in reqs)
+        self.stats["padded_rows"] += len(batch)
+        off = 0
+        for r in reqs:
+            m = len(r.rows)
+            if self.op == "select":
+                r.future.set_result(out[off:off + m])
+            else:
+                ids, d, ovf = out
+                r.future.set_result((ids[off:off + m], d[off:off + m], ovf))
+            off += m
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+
+    @property
+    def summary(self) -> Dict[str, float]:
+        """Coalescing + robustness stats: dispatched batches, admitted
+        requests/rows, mean rows per dispatch, straggler re-issues and
+        engine failures (from the backing ShardPool)."""
+        s = dict(self.stats)
+        s["reissues"] = self.pool.reissues
+        s["failures"] = self.pool.failures
+        s["replicas"] = len(self.replicas)
+        if s.get("batches"):
+            s["rows_per_dispatch"] = s["rows"] / s["batches"]
+        return s

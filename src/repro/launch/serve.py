@@ -17,6 +17,15 @@ the served surface can never silently lag the operator family.  ``--dryrun``
 shrinks every size for the CI smoke that instantiates each registered spec
 end-to-end.  ``--mode lm`` drives the LM decode path (reduced config) as a
 batched token service — both serving styles share the launcher.
+
+``--queue`` switches the queueable operators to async continuous batching
+(launch/queue.ServeQueue): ``--clients`` concurrent closed-loop clients
+submit small requests that coalesce into pow2-bucketed batches, one mesh
+dispatch per batch, double-buffered ``--depth`` deep.  ``--replicas R``
+fans the packed forest out to R disjoint replica engines
+(SpatialShards.replicate) that the queue round-robins across and the
+straggler pool re-issues between.  ``--dryrun --queue`` asserts every
+queued response bit-exact against the direct host-path call.
 """
 from __future__ import annotations
 
@@ -57,8 +66,7 @@ def _use_mesh(args) -> bool:
 
 def make_queries(n: int, batch: int, selectivity: float, seed: int = 1):
     rng = np.random.default_rng(seed)
-    side = np.sqrt(selectivity).astype(np.float32) if hasattr(
-        np.sqrt(selectivity), "astype") else float(np.sqrt(selectivity))
+    side = float(np.sqrt(selectivity))
     lo = rng.random((n, batch, 2), dtype=np.float32) * (1 - side)
     return np.concatenate([lo, lo + side], axis=-1)
 
@@ -82,28 +90,49 @@ def _build_shards(args, sort_key=None):
     return rng, rects, shards
 
 
+def _replica_fleet(args, shards):
+    """The engine list the straggler pool / serve queue dispatches over:
+    ``--replicas R`` on the mesh path fans the packed forest out over R
+    disjoint device groups (SpatialShards.replicate — the data axis), so a
+    deadline re-issue targets a genuinely distinct engine.  Off the mesh
+    path (or R <= 1) the single fleet serves alone and the pool skips the
+    pointless self-re-issue."""
+    r = getattr(args, "replicas", 1)
+    if r > 1 and _use_mesh(args):
+        replicas = shards.replicate(replicas=r)
+        print(f"replica fan-out: {r} engines × "
+              f"{replicas[0]._mesh.shape['model']} device(s) each "
+              f"(data axis)")
+        return replicas
+    return [shards]
+
+
 def _serve_select(args, spec):
-    """Distributed range select behind the straggler pool."""
+    """Distributed range select behind the straggler pool — one pool shard
+    per replica engine, round-robin primaries, deadline re-issue to the
+    next replica."""
     rng, _, shards = _build_shards(args)
     qs = make_queries(args.batches, args.batch_size, args.selectivity,
                       args.seed + 1)
-    # warm the compiled selects (per-partition engines / mesh program)
-    shards.warm("select", args.batch_size)
+    engines = _replica_fleet(args, shards)
+    # warm the compiled selects (per-partition engines / mesh programs)
+    for e in engines:
+        e.warm("select", args.batch_size)
 
-    pool = ShardPool(
-        shards=[lambda payload, s=shards: s.range_select(payload)],
-        deadline_s=args.deadline)
-    t0 = time.time()
-    total = 0
-    for b in range(args.batches):
-        res = pool.query(0, qs[b])
-        total += sum(len(r) for r in res)
-    dt = time.time() - t0
+    with ShardPool(
+            shards=[(lambda payload, s=e: s.range_select(payload))
+                    for e in engines],
+            deadline_s=args.deadline) as pool:
+        t0 = time.time()
+        total = 0
+        for b in range(args.batches):
+            res = pool.query(b % len(engines), qs[b])
+            total += sum(len(r) for r in res)
+        dt = time.time() - t0
     qps = args.batches * args.batch_size / dt
     print(f"served {args.batches} batches × {args.batch_size} queries in "
           f"{dt:.2f}s → {qps:,.0f} q/s, {total} result rows, "
-          f"{pool.reissues} straggler re-issues")
-    pool.shutdown()
+          f"{pool.reissues} straggler re-issues, {pool.failures} failures")
     return {"qps": qps, "results": total}
 
 
@@ -292,6 +321,102 @@ def _serve_browse(args, spec):
     return {"qps": qps, "neighbors": returned, "overflow": overflowed}
 
 
+def _queued_payloads(args, op, rng):
+    """The per-request query arrays (and operator params) for the queued
+    runner — same distributions as the synchronous runners."""
+    if op == "select":
+        qs = make_queries(args.batches, args.batch_size, args.selectivity,
+                          args.seed + 1)
+        return list(qs), {}
+    if op == "knn":
+        pts = rng.random((args.batches, args.batch_size, 2),
+                         dtype=np.float32)
+        return list(pts), {"k": args.k}
+    if op == "knn_join":
+        eps = np.float32(args.query_eps)
+        centers = rng.random((args.batches, args.batch_size, 2),
+                             dtype=np.float32)
+        return list(np.concatenate([centers - eps, centers + eps],
+                                   axis=-1)), {"k": args.k}
+    if op == "knn_filtered":
+        eps = np.float32(args.filter_eps)
+        pts = rng.random((args.batches, args.batch_size, 2),
+                         dtype=np.float32)
+        return list(np.concatenate([pts, pts - eps, pts + eps],
+                                   axis=-1)), {"k": args.k}
+    raise ValueError(f"no queued payload builder for {op!r}")
+
+
+def _serve_queued(args, spec):
+    """Async continuous-batching service: ``--clients`` closed-loop client
+    threads submit their requests through ONE ServeQueue (launch/queue.py),
+    which coalesces concurrent arrivals into power-of-two buckets and
+    amortizes a single mesh dispatch over all of them — with ``--replicas``
+    engines round-robined behind the straggler pool, double-buffered at
+    ``--depth`` in-flight batches per replica."""
+    import concurrent.futures as cf
+
+    from .queue import ServeQueue
+
+    op = spec.name
+    rng, _, shards = _build_shards(args)
+    payloads, qparams = _queued_payloads(args, op, rng)
+    engines = _replica_fleet(args, shards)
+    # warm every pow2 bucket a coalesced batch can land in
+    bucket_cap = 1 << (args.max_batch - 1).bit_length()
+    bk = 1 << (args.batch_size - 1).bit_length()
+    while bk <= bucket_cap:
+        for e in engines:
+            e.warm(op, bk, **qparams)
+        bk <<= 1
+
+    n_clients = max(1, min(args.clients, args.batches))
+
+    with ServeQueue(engines, op, max_batch=args.max_batch,
+                    max_delay_s=args.max_delay, depth=args.depth,
+                    deadline_s=args.deadline, **qparams) as q:
+
+        def client(cid):
+            # closed loop: each client waits for its response before
+            # issuing the next request (sorted results keyed by index)
+            out = []
+            for i in range(cid, args.batches, n_clients):
+                out.append((i, q.query(payloads[i])))
+            return out
+
+        t0 = time.time()
+        with cf.ThreadPoolExecutor(n_clients) as ex:
+            parts = list(ex.map(client, range(n_clients)))
+        dt = time.time() - t0
+        results = dict(pair for part in parts for pair in part)
+        summary = q.summary
+
+    if args.dryrun:
+        # bit-exact parity with direct per-request calls on the base fleet
+        for i, p in enumerate(payloads):
+            if op == "select":
+                ref = shards.range_select(p)
+                for got_row, ref_row in zip(results[i], ref):
+                    np.testing.assert_array_equal(got_row, ref_row)
+            else:
+                ids, d, _ = results[i]
+                ref_ids, ref_d, _ = getattr(shards, op)(p, args.k)
+                np.testing.assert_array_equal(ids, ref_ids)
+                np.testing.assert_array_equal(d, ref_d)
+
+    qps = args.batches * args.batch_size / dt
+    print(f"queued {args.batches} requests × {args.batch_size} rows from "
+          f"{n_clients} clients over {len(engines)} replica(s) in "
+          f"{dt:.2f}s → {qps:,.0f} q/s; "
+          f"{summary.get('batches', 0)} dispatches, "
+          f"{summary.get('rows_per_dispatch', 0):.0f} rows/dispatch, "
+          f"{summary['reissues']} re-issues, {summary['failures']} failures")
+    return {"qps": qps, "dispatches": summary.get("batches", 0),
+            "rows_per_dispatch": summary.get("rows_per_dispatch", 0.0),
+            "reissues": summary["reissues"],
+            "failures": summary["failures"]}
+
+
 # spec name → serve runner; every registered OperatorSpec must be servable
 RUNNERS = {
     "select": _serve_select,
@@ -321,6 +446,25 @@ def main(argv=None):
                          "over the model axis (auto: when devices > 1; "
                          "force devices with XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--queue", action="store_true",
+                    help="async continuous-batching service: coalesce "
+                         "concurrent client requests into pow2 buckets and "
+                         "amortize one mesh dispatch over all of them "
+                         "(launch/queue.py; select/knn/knn-join/"
+                         "knn-filtered)")
+    ap.add_argument("--clients", type=int, default=8,
+                    help="closed-loop client threads driving the queue")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="replica fan-out on the data mesh axis: R engine "
+                         "copies over disjoint device groups (mesh path "
+                         "only) — the straggler pool re-issues across them")
+    ap.add_argument("--max-batch", type=int, default=256,
+                    help="coalescing target in query rows per dispatch")
+    ap.add_argument("--max-delay", type=float, default=0.002,
+                    help="max seconds the queue waits to fill a batch")
+    ap.add_argument("--depth", type=int, default=2,
+                    help="in-flight dispatches per replica (2 = double-"
+                         "buffered)")
     ap.add_argument("--browse-steps", type=int, default=4,
                     help="next_batch() calls per browse session")
     ap.add_argument("--join-cap", type=int, default=1 << 17,
@@ -342,17 +486,28 @@ def main(argv=None):
         args.n = min(args.n, 2000)
         args.partitions = min(args.partitions, 2)
         args.fanout = min(args.fanout, 16)
-        args.batches = min(args.batches, 2)
+        args.batches = min(args.batches, 4 if args.queue else 2)
         args.batch_size = min(args.batch_size, 8)
         args.k = min(args.k, 4)
         args.browse_steps = min(args.browse_steps, 2)
         args.join_cap = min(args.join_cap, 1 << 15)
+        args.max_batch = min(args.max_batch, 32)
+        args.clients = min(args.clients, 4)
+        # CI smoke boxes are slow and shared: a lapsed deadline would only
+        # add spurious re-issue work to the dryrun, never find a bug
+        args.deadline = max(args.deadline, 60.0)
 
     if args.mode == "lm":
         return _serve_lm(args)
     spec = traversal.get_spec(MODE_TO_SPEC[args.mode])
     missing = set(traversal.spec_names()) - set(RUNNERS)
     assert not missing, f"registered specs without a serve runner: {missing}"
+    if args.queue:
+        from .queue import QUEUEABLE_OPS
+        if spec.name in QUEUEABLE_OPS:
+            return _serve_queued(args, spec)
+        print(f"--queue: {spec.name} does not coalesce (session/query-less "
+              f"operator); serving synchronously")
     return RUNNERS[spec.name](args, spec)
 
 

@@ -2,46 +2,96 @@
 
 Queries are idempotent reads over an immutable index, so the cheap and
 correct mitigation is **deadline re-issue**: dispatch a query micro-batch
-to its home shard; if the deadline lapses, re-issue to a hot-spare replica
-and take whichever answer lands first.  (Training-side straggler handling
-is different — checkpoint/restart + synchronous steps — and lives in
-fault_tolerance.py.)
+to its home shard; if the deadline lapses — or the shard *raises* — re-issue
+to a hot-spare replica and take whichever answer lands first.  A raised
+shard exception is a re-issue trigger exactly like a missed deadline (the
+``failures`` stat counts them); the pool only propagates an error once every
+engine that could serve the payload has failed.  (Training-side straggler
+handling is different — checkpoint/restart + synchronous steps — and lives
+in fault_tolerance.py.)
 
 The executor here is host-side and backend-agnostic: ``shards`` are
-callables (in production: per-slice dispatch handles; in tests: fakes with
-injected delays).
+callables (in production: per-replica dispatch handles built by
+``launch/serve.py`` from ``SpatialShards.replicate``; in tests: fakes with
+injected delays/exceptions).  Re-issue only happens when a *distinct*
+engine exists to re-issue to: with a single shard and no spares, a
+"re-issue" would resubmit the identical callable to the same engine — the
+pool skips it and simply waits the primary out.
+
+``ShardPool`` is a context manager; ``shutdown()`` runs on scope exit even
+when the serving loop raises.
 """
 from __future__ import annotations
 
 import concurrent.futures as cf
-import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 
 class ShardPool:
     def __init__(self, shards: Sequence[Callable[[Any], Any]],
                  spares: Sequence[Callable[[Any], Any]] = (),
-                 deadline_s: float = 1.0):
+                 deadline_s: float = 1.0,
+                 max_workers: Optional[int] = None):
         self.shards = list(shards)
         self.spares = list(spares)
         self.deadline = deadline_s
         self.reissues = 0
+        self.failures = 0
         self._pool = cf.ThreadPoolExecutor(
-            max_workers=len(self.shards) + max(len(self.spares), 1))
+            max_workers=max_workers
+            or len(self.shards) + max(len(self.spares), 1))
+
+    def __enter__(self) -> "ShardPool":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.shutdown()
+
+    def _backup_for(self, shard_id: int) -> Optional[Callable[[Any], Any]]:
+        """The distinct engine a re-issue may target, or None when no such
+        engine exists (single shard, no spares)."""
+        if self.spares:
+            return self.spares[shard_id % len(self.spares)]
+        if len(self.shards) > 1:
+            return self.shards[(shard_id + 1) % len(self.shards)]
+        return None
 
     def query(self, shard_id: int, payload) -> Any:
         primary = self._pool.submit(self.shards[shard_id], payload)
+        primary_failed = False
         try:
             return primary.result(timeout=self.deadline)
         except cf.TimeoutError:
             pass
+        except Exception:
+            # a crashed shard is a re-issue trigger, not a fatal answer —
+            # the module contract is "take whichever answer lands first"
+            self.failures += 1
+            primary_failed = True
+        backup_fn = self._backup_for(shard_id)
+        if backup_fn is None:
+            # no distinct engine: re-issuing would resubmit the identical
+            # callable to the same shard (and inflate ``reissues``); wait
+            # the primary out instead, propagating its eventual outcome
+            return primary.result()
         self.reissues += 1
-        spare = self.spares[shard_id % len(self.spares)] if self.spares \
-            else self.shards[(shard_id + 1) % len(self.shards)]
-        backup = self._pool.submit(spare, payload)
-        done, _ = cf.wait([primary, backup],
-                          return_when=cf.FIRST_COMPLETED)
-        return next(iter(done)).result()
+        backup = self._pool.submit(backup_fn, payload)
+        # race the survivors: the first *successful* completion wins;
+        # FIRST_COMPLETED alone could hand back a failed primary (or an
+        # arbitrary member when both already completed) whose .result()
+        # re-raises even though the other future succeeded
+        pending = {backup} if primary_failed else {primary, backup}
+        last_exc: Optional[BaseException] = None
+        while pending:
+            done, pending = cf.wait(pending, return_when=cf.FIRST_COMPLETED)
+            for fut in done:
+                exc = fut.exception()
+                if exc is None:
+                    return fut.result()
+                self.failures += 1
+                last_exc = exc
+        assert last_exc is not None
+        raise last_exc
 
     def query_many(self, payloads: Sequence[Tuple[int, Any]]) -> List[Any]:
         return [self.query(sid, p) for sid, p in payloads]

@@ -1,5 +1,7 @@
 """Distributed spatial service: sharded select ≡ single-tree select;
-straggler deadline re-issue.
+straggler deadline re-issue (winner race / exception re-issue / self-
+re-issue regressions); the continuous-batching serve queue (coalesced
+responses bit-exact with direct per-request calls); replica fan-out.
 
 Shard fleets are built once per module through a cache keyed by
 (n, n_partitions, fanout, seed) — rebuilding 30k-rect fleets per test was
@@ -11,9 +13,17 @@ import numpy as np
 import pytest
 
 from repro.distributed.spatial_shard import SpatialShards
+from repro.launch.queue import ServeQueue
 from repro.runtime.straggler import ShardPool
 
 from conftest import brute_select, uniform_rects
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # property tests skip, the rest of the module runs
+    HAVE_HYPOTHESIS = False
 
 
 @pytest.fixture(scope="module")
@@ -74,3 +84,280 @@ def test_no_reissue_when_fast():
     assert pool.query(0, 21) == 42
     assert pool.reissues == 0
     pool.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# ShardPool regressions: the three serving-layer bugs
+# ---------------------------------------------------------------------------
+
+def test_pool_winner_race_prefers_successful_backup():
+    """Bug 1: after a deadline lapse, FIRST_COMPLETED could hand back the
+    *failed* primary (it completes — by raising — while the backup runs)
+    and re-raise even though the backup succeeded.  The race must return
+    the first *successful* completion."""
+    def primary(payload):
+        time.sleep(0.15)
+        raise RuntimeError("primary died after missing its deadline")
+
+    def spare(payload):
+        time.sleep(0.25)          # backup lands AFTER the primary failure
+        return "spare-answer"
+
+    with ShardPool([primary], spares=[spare], deadline_s=0.02) as pool:
+        assert pool.query(0, "q") == "spare-answer"
+        assert pool.reissues == 1
+        assert pool.failures == 1      # the late primary failure is counted
+
+
+def test_pool_raises_only_when_every_engine_failed():
+    def primary(payload):
+        time.sleep(0.1)
+        raise RuntimeError("primary died")
+
+    def spare(payload):
+        raise ValueError("spare died")
+
+    with ShardPool([primary], spares=[spare], deadline_s=0.02) as pool:
+        with pytest.raises((RuntimeError, ValueError)):
+            pool.query(0, "q")
+        assert pool.failures == 2
+        assert pool.reissues == 1
+
+
+def test_pool_exception_triggers_reissue():
+    """Bug 2: a raised shard exception is a re-issue trigger, not a fatal
+    answer — the flaky primary crashes immediately, the spare answers."""
+    calls = {"flaky": 0, "spare": 0}
+
+    def flaky(payload):
+        calls["flaky"] += 1
+        raise RuntimeError("shard crashed")
+
+    def spare(payload):
+        calls["spare"] += 1
+        return "spare-answer"
+
+    with ShardPool([flaky], spares=[spare], deadline_s=5.0) as pool:
+        assert pool.query(0, "q") == "spare-answer"
+        assert pool.failures == 1
+        assert pool.reissues == 1
+        assert calls == {"flaky": 1, "spare": 1}
+
+
+def test_pool_single_shard_skips_self_reissue():
+    """Bug 3: with one shard and no spares, a 're-issue' resubmits the
+    identical callable to the same engine — the pool must wait the primary
+    out instead (and not inflate ``reissues``)."""
+    calls = {"n": 0}
+
+    def slow(payload):
+        calls["n"] += 1
+        time.sleep(0.15)
+        return "slow-answer"
+
+    with ShardPool([slow], deadline_s=0.02) as pool:
+        assert pool.query(0, "q") == "slow-answer"
+        assert pool.reissues == 0
+        assert calls["n"] == 1
+
+
+def test_pool_single_shard_propagates_failure_without_reissue():
+    def crash(payload):
+        raise RuntimeError("only engine died")
+
+    with ShardPool([crash], deadline_s=1.0) as pool:
+        with pytest.raises(RuntimeError):
+            pool.query(0, "q")
+        assert pool.failures == 1
+        assert pool.reissues == 0
+
+
+def test_pool_reissue_lands_on_distinct_replica():
+    """With real replicas (no spares), the deadline re-issue targets the
+    NEXT replica, never the engine that missed its deadline."""
+    hits = []
+
+    def replica(tag, delay=0.0):
+        def call(payload):
+            hits.append(tag)
+            time.sleep(delay)
+            return tag
+        return call
+
+    with ShardPool([replica("r0", delay=0.3), replica("r1")],
+                   deadline_s=0.02) as pool:
+        assert pool.query(0, "q") == "r1"
+        assert pool.reissues == 1
+        assert hits.count("r1") == 1
+
+
+def test_pool_context_manager_shuts_down_on_exception():
+    with pytest.raises(KeyError):
+        with ShardPool([lambda p: p]) as pool:
+            raise KeyError("serving loop blew up")
+    assert pool._pool._shutdown
+
+
+def test_pool_query_many_preserves_order():
+    with ShardPool([lambda p: ("a", p), lambda p: ("b", p)],
+                   deadline_s=5.0) as pool:
+        out = pool.query_many([(0, 1), (1, 2), (0, 3), (1, 4)])
+    assert out == [("a", 1), ("b", 2), ("a", 3), ("b", 4)]
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching serve queue (launch/queue.py)
+# ---------------------------------------------------------------------------
+
+def _queue_fleet(shard_cache):
+    return shard_cache(5000, 4, eps=0.0, seed=21)
+
+
+def test_queue_knn_bitexact_and_ordered(shard_cache):
+    rects, shards = _queue_fleet(shard_cache)
+    rng = np.random.default_rng(31)
+    reqs = [rng.random((m, 2)).astype(np.float32) for m in (1, 3, 2, 5, 1)]
+    with ServeQueue(shards, "knn", k=4, max_batch=16,
+                    max_delay_s=0.005) as q:
+        res = q.query_many(reqs)
+        summary = q.summary
+    assert summary["requests"] == len(reqs)
+    assert summary["failures"] == 0
+    for rows, (ids, d, ovf) in zip(reqs, res):
+        ref_ids, ref_d, ref_ovf = shards.knn(rows, 4)
+        np.testing.assert_array_equal(ids, ref_ids)
+        np.testing.assert_array_equal(d, ref_d)
+        assert not ovf and not ref_ovf
+
+
+def test_queue_select_bitexact(shard_cache):
+    rects, shards = _queue_fleet(shard_cache)
+    rng = np.random.default_rng(37)
+    reqs = []
+    for m in (2, 1, 4):
+        lo = rng.random((m, 2)).astype(np.float32) * 0.9
+        reqs.append(np.concatenate([lo, lo + 0.05], axis=1))
+    with ServeQueue(shards, "select", max_batch=8,
+                    max_delay_s=0.005) as q:
+        res = q.query_many(reqs)
+    for rows, got in zip(reqs, res):
+        ref = shards.range_select(rows)
+        assert len(got) == len(rows)
+        for got_row, ref_row in zip(got, ref):
+            np.testing.assert_array_equal(got_row, ref_row)
+
+
+def test_queue_rejects_uncoalescable_ops(shard_cache):
+    _, shards = _queue_fleet(shard_cache)
+    with pytest.raises(ValueError):
+        ServeQueue(shards, "join")
+    with pytest.raises(ValueError):
+        ServeQueue(shards, "browse", k=4)
+    with pytest.raises(ValueError):
+        ServeQueue(shards, "knn")        # distance op without k
+
+
+def test_queue_oversized_request_dispatches_whole(shard_cache):
+    """A single request larger than max_batch still runs (its own pow2
+    bucket), and smaller companions coalesce around it unharmed."""
+    rects, shards = _queue_fleet(shard_cache)
+    rng = np.random.default_rng(41)
+    big = rng.random((23, 2)).astype(np.float32)
+    small = rng.random((2, 2)).astype(np.float32)
+    with ServeQueue(shards, "knn", k=4, max_batch=8,
+                    max_delay_s=0.005) as q:
+        res = q.query_many([big, small])
+    for rows, (ids, d, _) in zip([big, small], res):
+        ref_ids, ref_d, _ = shards.knn(rows, 4)
+        np.testing.assert_array_equal(ids, ref_ids)
+        np.testing.assert_array_equal(d, ref_d)
+
+
+def _check_schedule_invisible(shards, sizes, seed, interleave):
+    """Core property: whatever the request schedule (sizes, submission
+    order, concurrent vs sequential arrival), every response is bit-exact
+    with the direct per-request SpatialShards call — coalescing must be
+    observationally invisible."""
+    rng = np.random.default_rng(seed)
+    reqs = [rng.random((m, 2)).astype(np.float32) for m in sizes]
+    with ServeQueue(shards, "knn", k=3, max_batch=8,
+                    max_delay_s=0.002) as q:
+        if interleave:
+            futs = [q.submit(r) for r in reqs]      # all in flight at once
+            res = [f.result() for f in futs]
+        else:
+            res = [q.query(r) for r in reqs]        # strictly sequential
+    for rows, (ids, d, _) in zip(reqs, res):
+        ref_ids, ref_d, _ = shards.knn(rows, 3)
+        np.testing.assert_array_equal(ids, ref_ids)
+        np.testing.assert_array_equal(d, ref_d)
+
+
+@pytest.mark.parametrize("sizes,seed,interleave", [
+    ([1], 0, True),                       # lone request, own bucket
+    ([8, 8], 1, True),                    # exactly fills max_batch
+    ([1, 1, 1, 1, 1, 1, 1, 1, 1], 2, True),   # many tiny, spills a batch
+    ([6, 5, 4], 3, True),                 # forces carry-over past bucket
+    ([3, 1, 2], 4, False),                # sequential: no coalescing at all
+])
+def test_queue_schedule_invisible(shard_cache, sizes, seed, interleave):
+    _, shards = _queue_fleet(shard_cache)
+    _check_schedule_invisible(shards, sizes, seed, interleave)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(sizes=st.lists(st.integers(min_value=1, max_value=6),
+                          min_size=1, max_size=10),
+           seed=st.integers(min_value=0, max_value=2**16),
+           interleave=st.booleans())
+    def test_queue_coalescing_is_invisible(shard_cache, sizes, seed,
+                                           interleave):
+        _, shards = _queue_fleet(shard_cache)
+        _check_schedule_invisible(shards, sizes, seed, interleave)
+
+
+# ---------------------------------------------------------------------------
+# Replica fan-out (data axis)
+# ---------------------------------------------------------------------------
+
+def test_replicate_parity_with_host_path(shard_cache):
+    """Every replica engine answers bit-exactly like the host fleet; the
+    replica count adapts to the visible device count (1 on the single-
+    device tier-1 run, 2 on the CI multi-device step)."""
+    import jax
+    rects, shards = _queue_fleet(shard_cache)
+    n_dev = len(jax.devices())
+    r = 2 if n_dev >= 2 and n_dev % 2 == 0 else 1
+    reps = shards.replicate(replicas=r)
+    assert len(reps) == r
+    rng = np.random.default_rng(43)
+    pts = rng.random((8, 2)).astype(np.float32)
+    hi, hd, _ = shards.knn(pts, 4)          # host-path reference
+    for rep in reps:
+        assert rep.mesh_enabled
+        mi, md, _ = rep.knn(pts, 4)
+        np.testing.assert_array_equal(hi, mi)
+        np.testing.assert_array_equal(hd, md)
+
+
+def test_queue_over_replicas_bitexact(shard_cache):
+    """The queue round-robins dispatches across replica engines; responses
+    stay bit-exact with the host fleet regardless of which replica served
+    which coalesced batch."""
+    import jax
+    rects, shards = _queue_fleet(shard_cache)
+    n_dev = len(jax.devices())
+    r = 2 if n_dev >= 2 and n_dev % 2 == 0 else 1
+    reps = shards.replicate(replicas=r)
+    rng = np.random.default_rng(47)
+    reqs = [rng.random((m, 2)).astype(np.float32) for m in (2, 3, 1, 4, 2)]
+    with ServeQueue(reps, "knn", k=4, max_batch=4,
+                    max_delay_s=0.001) as q:
+        res = q.query_many(reqs)
+        assert q.summary["replicas"] == r
+        assert q.summary["failures"] == 0
+    for rows, (ids, d, _) in zip(reqs, res):
+        ref_ids, ref_d, _ = shards.knn(rows, 4)
+        np.testing.assert_array_equal(ids, ref_ids)
+        np.testing.assert_array_equal(d, ref_d)
