@@ -243,6 +243,127 @@ def run_serve_queue(n: int = 100_000, partitions: int = 2,
     return rows
 
 
+def run_chaos(n: int = 100_000, partitions: int = 2, fanout: int = 64,
+              k: int = 8, request_rows: int = 4, requests: int = 160,
+              clients: int = 8, slow_s: float = 0.05, seed: int = 0,
+              out_json: str = "BENCH_chaos.json", check: bool = False):
+    """Fault-injected serving sweep → BENCH_chaos.json.
+
+    One request stream, four fault scenarios over two logical replicas
+    (the same host fleet listed twice — the injector and breaker key by
+    index): fault-free, one replica slowed ``slow_s`` per dispatch, one
+    replica dead from dispatch 0, and every replica dead (host-loop
+    degradation).  Per-request latencies are measured client-side with
+    coalescing pinned to one request per dispatch, so the artifact shows
+    the breaker working: early requests pay the fault (re-issue round
+    trips, the slow replica's tax), and once the quarantine engages the
+    late-window p99 recovers toward fault-free — while every scenario
+    serves 100% of requests (``check`` asserts bit-exactness too)."""
+    import concurrent.futures as cf
+    import time as time_mod
+
+    from repro.runtime.faults import FaultInjector, FaultPlan
+    from repro.runtime.health import HealthTracker
+
+    rows = Rows("spatial_serve_chaos")
+    rects = point_rects(n, seed)
+    pts = uniform_points(requests * request_rows, seed + 2)
+    reqs = [pts[i * request_rows:(i + 1) * request_rows]
+            for i in range(requests)]
+    total = requests * request_rows
+    shards = SpatialShards.build(rects, partitions, fanout=fanout)
+    shards.warm("knn", request_rows, k=k)
+    host_ref = [shards.knn(r, k) for r in reqs]
+    summary = {"n": n, "partitions": len(shards.partitions),
+               "fanout": fanout, "k": k, "request_rows": request_rows,
+               "requests": requests, "clients": clients,
+               "slow_s": slow_s, "scenarios": []}
+
+    # long cooldowns: once the breaker opens it stays open for the rest of
+    # the pass, so the early/late p99 split cleanly shows the recovery
+    scenarios = [
+        ("fault-free", None, dict()),
+        (f"one-slow-{slow_s:g}s", f"slow:r1@0:{slow_s:g}",
+         dict(slow_factor=5.0, suspect_factor=2.0, min_latency_samples=3,
+              quarantine_after=100, cooldown_s=1000.0)),
+        ("one-dead", "kill:r1@0",
+         dict(quarantine_after=3, cooldown_s=1000.0)),
+        ("all-dead-host-fallback", "kill:r0@0,kill:r1@0",
+         dict(quarantine_after=1, cooldown_s=1000.0)),
+    ]
+    for name, spec, hkw in scenarios:
+        injector = None if spec is None else \
+            FaultInjector(FaultPlan.from_spec(spec, seed=seed))
+        lats = [0.0] * requests
+        with ServeQueue([shards, shards], "knn", k=k,
+                        max_batch=request_rows, max_delay_s=0.002,
+                        deadline_s=600.0, max_retries=3, backoff_s=0.005,
+                        injector=injector, fallback=shards.host_view(),
+                        health=HealthTracker(2, **hkw)) as q:
+
+            def client(cid, q=q, lats=lats):
+                out = []
+                for i in range(cid, requests, clients):
+                    t0 = time_mod.perf_counter()
+                    out.append((i, q.query(reqs[i])))
+                    lats[i] = time_mod.perf_counter() - t0
+                return out
+
+            t0 = time_mod.perf_counter()
+            with cf.ThreadPoolExecutor(clients) as ex:
+                parts = [f.result() for f in
+                         [ex.submit(client, c) for c in range(clients)]]
+            dt = time_mod.perf_counter() - t0
+            qsum = q.summary
+        results = dict(pair for part in parts for pair in part)
+        assert len(results) == requests, \
+            f"{name}: {requests - len(results)} requests failed"
+        if check:
+            for i, (ids, d, _) in results.items():
+                np.testing.assert_array_equal(ids, host_ref[i][0])
+                np.testing.assert_array_equal(d, host_ref[i][1])
+        # request index ≈ admission order (closed loop): the early window
+        # absorbs the faults, the late window shows the breaker's payoff
+        arr = np.asarray(lats)
+        early, late = arr[:requests // 4], arr[-requests // 2:]
+        cell = {"scenario": name, "spec": spec, "qps": total / dt,
+                "p50_ms": float(np.percentile(arr, 50) * 1e3),
+                "p99_ms": float(np.percentile(arr, 99) * 1e3),
+                "p99_early_ms": float(np.percentile(early, 99) * 1e3),
+                "p99_late_ms": float(np.percentile(late, 99) * 1e3),
+                "quarantines": qsum["quarantines"],
+                "reissues": qsum["reissues"],
+                "failures": qsum["failures"],
+                "retries": qsum["retries"],
+                "degraded_dispatches": qsum["degraded_dispatches"],
+                "injected_exceptions":
+                    0 if injector is None
+                    else injector.injected["exceptions"],
+                "health": qsum["health"]}
+        summary["scenarios"].append(cell)
+        rows.add(scenario=name, qps=round(cell["qps"], 1),
+                 p50_ms=round(cell["p50_ms"], 2),
+                 p99_ms=round(cell["p99_ms"], 2),
+                 p99_late_ms=round(cell["p99_late_ms"], 2),
+                 quarantines=cell["quarantines"],
+                 degraded=cell["degraded_dispatches"])
+
+    if check:
+        by_name = {c["scenario"]: c for c in summary["scenarios"]}
+        slow = by_name[f"one-slow-{slow_s:g}s"]
+        assert slow["quarantines"] >= 1, "slow replica never quarantined"
+        # the whole point: after quarantine the slow replica's tax is gone
+        assert slow["p99_late_ms"] < slow_s * 1e3, \
+            f"p99 never recovered: {slow['p99_late_ms']:.1f}ms"
+        assert by_name["one-dead"]["quarantines"] >= 1
+        assert by_name["all-dead-host-fallback"]["degraded_dispatches"] > 0
+
+    with open(out_json, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"wrote {out_json}")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--dryrun", action="store_true",
@@ -260,9 +381,12 @@ def main(argv=None):
         run_serve_queue(n=8000, partitions=2, fanout=16, k=4,
                         request_rows=2, requests=16, clients=4,
                         replica_counts=(1, 2), max_batch=16, check=True)
+        run_chaos(n=8000, partitions=2, fanout=16, k=4, request_rows=2,
+                  requests=64, clients=4, slow_s=0.05, check=True)
         return out
     out = run_sharded(n=args.n, batch=args.batch, k=args.k)
     run_serve_queue(n=args.serve_n, k=args.k)
+    run_chaos(n=args.serve_n, k=args.k)
     return out
 
 

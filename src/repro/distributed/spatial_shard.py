@@ -139,6 +139,21 @@ class SpatialShards:
         self._browse_starts = {}
         return self
 
+    def host_view(self) -> "SpatialShards":
+        """A host-path engine over the same partitions — the serving
+        stack's degradation target when every mesh replica is quarantined
+        (launch/queue.ServeQueue ``fallback=``).  When this object already
+        serves on the host path it IS the fallback; when mesh-enabled, the
+        view is a twin that *shares* the partition list and the compiled
+        host-engine cache (so falling back never recompiles what the host
+        path already traced) but carries no mesh state — using it cannot
+        flip this object's operators off the mesh path."""
+        if not self.mesh_enabled:
+            return self
+        twin = SpatialShards(self.partitions, self.fanout)
+        twin._engines = self._engines
+        return twin
+
     def replicate(self, replicas: Optional[int] = None, meshes=None,
                   axis: str = "model") -> List["SpatialShards"]:
         """Replica fan-out on the data axis: R independent mesh engines over

@@ -26,6 +26,15 @@ fans the packed forest out to R disjoint replica engines
 (SpatialShards.replicate) that the queue round-robins across and the
 straggler pool re-issues between.  ``--dryrun --queue`` asserts every
 queued response bit-exact against the direct host-path call.
+
+``--chaos <spec>`` injects seeded deterministic faults into the queued
+replicas (runtime/faults.py grammar — e.g. ``kill:r1@5,slow:r0@0:0.2``)
+to exercise the robustness stack end-to-end: health circuit breaking
+quarantines the failing replica, dispatch retries + straggler re-issues
+absorb the faults, and if every replica's breaker opens the queue
+degrades to a host-loop fallback engine (SpatialShards.host_view) — so
+the run must finish with ZERO client-visible failures and (under
+``--dryrun``) bit-exact parity with the fault-free host path.
 """
 from __future__ import annotations
 
@@ -370,18 +379,32 @@ def _serve_queued(args, spec):
             e.warm(op, bk, **qparams)
         bk <<= 1
 
+    injector = None
+    if args.chaos:
+        from repro.runtime.faults import FaultInjector, FaultPlan
+        injector = FaultInjector(FaultPlan.from_spec(args.chaos,
+                                                     seed=args.seed))
+        print(f"chaos: injecting {injector.plan} (seed {args.seed})")
+
     n_clients = max(1, min(args.clients, args.batches))
 
     with ServeQueue(engines, op, max_batch=args.max_batch,
                     max_delay_s=args.max_delay, depth=args.depth,
-                    deadline_s=args.deadline, **qparams) as q:
+                    deadline_s=args.deadline, injector=injector,
+                    fallback=shards.host_view(), seed=args.seed,
+                    **qparams) as q:
+
+        errors = []
 
         def client(cid):
             # closed loop: each client waits for its response before
             # issuing the next request (sorted results keyed by index)
             out = []
             for i in range(cid, args.batches, n_clients):
-                out.append((i, q.query(payloads[i])))
+                try:
+                    out.append((i, q.query(payloads[i])))
+                except Exception as exc:     # counted as a failed request
+                    errors.append((i, exc))
             return out
 
         t0 = time.time()
@@ -391,9 +414,15 @@ def _serve_queued(args, spec):
         results = dict(pair for part in parts for pair in part)
         summary = q.summary
 
+    if errors and not args.chaos:
+        # without injection a request failure is a real bug — keep it loud
+        raise errors[0][1]
+
     if args.dryrun:
         # bit-exact parity with direct per-request calls on the base fleet
         for i, p in enumerate(payloads):
+            if i not in results:
+                continue                     # failed under chaos (asserted)
             if op == "select":
                 ref = shards.range_select(p)
                 for got_row, ref_row in zip(results[i], ref):
@@ -411,10 +440,36 @@ def _serve_queued(args, spec):
           f"{summary.get('batches', 0)} dispatches, "
           f"{summary.get('rows_per_dispatch', 0):.0f} rows/dispatch, "
           f"{summary['reissues']} re-issues, {summary['failures']} failures")
-    return {"qps": qps, "dispatches": summary.get("batches", 0),
-            "rows_per_dispatch": summary.get("rows_per_dispatch", 0.0),
-            "reissues": summary["reissues"],
-            "failures": summary["failures"]}
+    out = {"qps": qps, "dispatches": summary.get("batches", 0),
+           "rows_per_dispatch": summary.get("rows_per_dispatch", 0.0),
+           "reissues": summary["reissues"],
+           "failures": summary["failures"],
+           "failed_requests": len(errors)}
+    if args.chaos:
+        print(f"chaos: {injector.injected['exceptions']} injected "
+              f"exceptions, {injector.injected['delays']} injected delays "
+              f"→ {summary['retries']} retries, {summary['quarantines']} "
+              f"quarantine(s), {summary['degraded_dispatches']} degraded "
+              f"dispatches, {summary['deadline_exceeded']} deadline "
+              f"failures; health: {summary['health']}; "
+              f"{out['failed_requests']} failed requests")
+        out.update(
+            injected_exceptions=injector.injected["exceptions"],
+            injected_delays=injector.injected["delays"],
+            retries=summary["retries"],
+            quarantines=summary["quarantines"],
+            degraded_dispatches=summary["degraded_dispatches"],
+            deadline_exceeded=summary["deadline_exceeded"])
+        # the robustness contract: chaos must never surface to clients
+        assert out["failed_requests"] == 0, \
+            f"{out['failed_requests']} requests failed under chaos"
+        if args.dryrun:
+            # a smoke whose plan never fired proves nothing — the CI specs
+            # are sized (batches / max_batch above) so their clauses arm
+            assert injector.injected["exceptions"] \
+                + injector.injected["delays"] > 0, \
+                "chaos dryrun injected nothing — plan never armed"
+    return out
 
 
 # spec name → serve runner; every registered OperatorSpec must be servable
@@ -454,6 +509,12 @@ def main(argv=None):
                          "knn-filtered)")
     ap.add_argument("--clients", type=int, default=8,
                     help="closed-loop client threads driving the queue")
+    ap.add_argument("--chaos", default="",
+                    help="seeded fault-injection spec for the queued "
+                         "replicas (runtime/faults.py): comma-separated "
+                         "kill:rI@N, crash:rI@N, slow:rI@N:SECS, "
+                         "flaky:rI:P, spike:rI:P:SECS — the run asserts "
+                         "zero client-visible failures")
     ap.add_argument("--replicas", type=int, default=1,
                     help="replica fan-out on the data mesh axis: R engine "
                          "copies over disjoint device groups (mesh path "
@@ -486,12 +547,18 @@ def main(argv=None):
         args.n = min(args.n, 2000)
         args.partitions = min(args.partitions, 2)
         args.fanout = min(args.fanout, 16)
-        args.batches = min(args.batches, 4 if args.queue else 2)
+        # chaos smokes need enough dispatches for @N clauses to arm and for
+        # the breaker to trip (quarantine_after consecutive failures), and
+        # coalescing must not fold the whole run into a handful of
+        # dispatches — cap the batch at one request per dispatch
+        args.batches = min(args.batches,
+                           20 if args.chaos else (4 if args.queue else 2))
         args.batch_size = min(args.batch_size, 8)
         args.k = min(args.k, 4)
         args.browse_steps = min(args.browse_steps, 2)
         args.join_cap = min(args.join_cap, 1 << 15)
-        args.max_batch = min(args.max_batch, 32)
+        args.max_batch = min(args.max_batch,
+                             args.batch_size if args.chaos else 32)
         args.clients = min(args.clients, 4)
         # CI smoke boxes are slow and shared: a lapsed deadline would only
         # add spurious re-issue work to the dryrun, never find a bug

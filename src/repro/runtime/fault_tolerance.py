@@ -22,17 +22,27 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 
 from . import checkpoint as ckpt
+from . import faults
 
 
 @dataclasses.dataclass
 class FailurePlan:
     """Deterministic failure injection for tests: fail before the given
-    steps (once each)."""
+    steps (once each).  The schedule decision is a ``faults.FaultPlan`` of
+    crash clauses — the same engine the serving stack's chaos injection
+    uses (runtime/faults.py) — with the once-each memory kept here because
+    a restarted training loop revisits the crashed step."""
     fail_at: Tuple[int, ...] = ()
     _fired: set = dataclasses.field(default_factory=set)
 
+    def __post_init__(self):
+        self._plan = faults.FaultPlan.crash_at_steps(self.fail_at)
+
     def maybe_fail(self, step: int):
-        if step in self.fail_at and step not in self._fired:
+        if step in self._fired:
+            return
+        _, exc = self._plan.faults_for(0, step)
+        if exc is not None:
             self._fired.add(step)
             raise RuntimeError(f"injected failure at step {step}")
 

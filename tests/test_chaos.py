@@ -1,0 +1,293 @@
+"""Chaos parity suite: the serving stack under seeded fault injection.
+
+The robustness contract being asserted end-to-end: whatever faults a
+``FaultPlan`` injects into the replica engines — a replica killed mid-run,
+a replica slowed 10×, a transient crash on the Nth dispatch, random
+flakiness — every client request still succeeds, results stay bit-exact
+with a fault-free run, and the circuit breaker stops paying for dead
+replicas (a quarantined replica receives no further dispatches).  Plus
+the deadline semantics: coalescing never waits a request past its
+deadline, lapsed requests fail fast with ``DeadlineExceeded`` and never
+occupy a dispatch, and the retry/degradation ladder bounds every failure.
+
+Two logical replicas are modelled as the SAME host-path fleet listed
+twice (the injector and the health tracker key replicas by index, so the
+fault surface is real even though the engines share state — and it makes
+the suite runnable on a single device).
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.distributed.spatial_shard import SpatialShards
+from repro.launch.queue import DeadlineExceeded, ServeQueue
+from repro.runtime.faults import FaultInjector, FaultPlan, ReplicaDead
+from repro.runtime.health import HealthTracker
+
+from conftest import uniform_rects
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+@pytest.fixture(scope="module")
+def fleet():
+    rng = np.random.default_rng(21)
+    rects = uniform_rects(rng, 5000, eps=0.0)
+    return rects, SpatialShards.build(rects, n_partitions=4, fanout=64)
+
+
+def make_requests(n, seed=31, m=2):
+    rng = np.random.default_rng(seed)
+    return [rng.random((m, 2)).astype(np.float32) for _ in range(n)]
+
+
+def run_chaos(shards, reqs, spec, *, seed=0, health=None, fallback=True,
+              sequential=True, **qkw):
+    """Drive the queue over two logical replicas under ``spec`` injection;
+    returns (results, summary, injector)."""
+    injector = FaultInjector(FaultPlan.from_spec(spec, seed=seed))
+    with ServeQueue([shards, shards], "knn", k=4, max_batch=8,
+                    max_delay_s=0.002, injector=injector, health=health,
+                    fallback=shards.host_view() if fallback else None,
+                    **qkw) as q:
+        if sequential:        # one batch per request: deterministic routing
+            res = [q.query(r) for r in reqs]
+        else:
+            res = [f.result() for f in [q.submit(r) for r in reqs]]
+        summary = q.summary
+    return res, summary, injector
+
+
+def assert_parity(shards, reqs, res, k=4):
+    """Bit-exactness vs the fault-free direct per-request call."""
+    for rows, (ids, d, _) in zip(reqs, res):
+        ref_ids, ref_d, _ = shards.knn(rows, k)
+        np.testing.assert_array_equal(ids, ref_ids)
+        np.testing.assert_array_equal(d, ref_d)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance scenarios: kill, slow, crash-on-Nth
+# ---------------------------------------------------------------------------
+
+def test_killed_replica_quarantined_with_zero_client_failures(fleet):
+    """kill:r1@2 — replica 1 dies permanently on its 3rd dispatch.  Every
+    request must still succeed bit-exactly (straggler re-issue covers the
+    in-flight failures), the breaker must open after quarantine_after
+    consecutive failures, and — the point of the breaker — the dead
+    replica must receive NO dispatches once quarantined."""
+    _, shards = fleet
+    reqs = make_requests(12)
+    res, summary, inj = run_chaos(
+        shards, reqs, "kill:r1@2",
+        health=HealthTracker(2, quarantine_after=3, cooldown_s=1000.0))
+    assert_parity(shards, reqs, res)
+    # r1 primaries: dispatches 0,1 succeed, 2,3,4 fail → quarantined;
+    # every later round-robin turn routes to r0 without touching r1
+    assert inj.dispatches[1] == 5
+    assert summary["failures"] == 3
+    assert summary["reissues"] == 3
+    assert summary["quarantines"] == 1
+    assert summary["health"][1] == "quarantined"
+    assert summary["degraded_dispatches"] == 0
+    assert summary["requests"] == len(reqs)
+
+
+def test_slow_replica_quarantined_on_latency(fleet):
+    """slow:r1@0:0.25 — replica 1 is wedged 50×+.  No request fails (the
+    slow answers are still correct), but once both replicas have enough
+    latency samples the breaker opens on EWMA and the fleet stops paying
+    the 0.25s tax."""
+    _, shards = fleet
+    reqs = make_requests(10)
+    res, summary, inj = run_chaos(
+        shards, reqs, "slow:r1@0:0.25",
+        health=HealthTracker(2, quarantine_after=100, cooldown_s=1000.0,
+                             slow_factor=5.0, suspect_factor=2.0,
+                             min_latency_samples=2),
+        deadline_s=5.0)
+    assert_parity(shards, reqs, res)
+    assert summary["quarantines"] == 1
+    assert summary["health"][1] == "quarantined"
+    assert summary["failures"] == 0        # slow is not failed
+    # only the sampling dispatches reached r1; the rest routed around it
+    assert inj.dispatches[1] == 2
+
+
+def test_crash_on_nth_dispatch_recovers(fleet):
+    """crash:r0@1 — one transient crash.  The straggler pool re-issues
+    that batch to the other replica, the breaker notes a SUSPECT blip,
+    and the replica re-earns HEALTHY on its next success."""
+    _, shards = fleet
+    reqs = make_requests(8)
+    res, summary, _ = run_chaos(shards, reqs, "crash:r0@1")
+    assert_parity(shards, reqs, res)
+    assert summary["failures"] == 1
+    assert summary["reissues"] == 1
+    assert summary["quarantines"] == 0
+    assert summary["health"] == ["healthy", "healthy"]
+
+
+def test_every_replica_dead_degrades_to_host_fallback(fleet):
+    """kill both replicas from dispatch 0: availability must survive on
+    the host-loop fallback — degraded latency, zero failed requests,
+    results still bit-exact."""
+    _, shards = fleet
+    reqs = make_requests(6)
+    res, summary, _ = run_chaos(
+        shards, reqs, "kill:r0@0,kill:r1@0",
+        health=HealthTracker(2, quarantine_after=1, cooldown_s=1000.0),
+        max_retries=1, backoff_s=0.01)
+    assert_parity(shards, reqs, res)
+    assert summary["degraded_dispatches"] == len(reqs)
+    assert summary["health"] == ["quarantined", "quarantined"]
+    assert summary["quarantines"] == 2
+
+
+def test_no_fallback_and_exhausted_retries_propagates(fleet):
+    """With no fallback configured the availability contract is waived:
+    once the retry budget is spent the injected error reaches the client
+    future — but it must *reach* it (no hang, no swallowed batch)."""
+    _, shards = fleet
+    with ServeQueue([shards], "knn", k=4, max_retries=1, backoff_s=0.01,
+                    injector=FaultInjector(FaultPlan.from_spec("kill:r0@0")),
+                    health=HealthTracker(1, quarantine_after=100)) as q:
+        with pytest.raises(ReplicaDead):
+            q.query(make_requests(1)[0])
+
+
+# ---------------------------------------------------------------------------
+# determinism: the same seeded plan twice → identical injection + results
+# ---------------------------------------------------------------------------
+
+def det_health():
+    # neutralize the nondeterministic inputs (wall-clock latency EWMAs,
+    # quarantine timing) so routing is a pure function of the schedule
+    return HealthTracker(2, quarantine_after=100, slow_factor=1e9,
+                         cooldown_s=1000.0)
+
+
+def test_seeded_sweep_is_deterministic_and_bit_exact(fleet):
+    _, shards = fleet
+    reqs = make_requests(10)
+    spec = "flaky:r0:0.4,flaky:r1:0.3"
+    res1, _, inj1 = run_chaos(shards, reqs, spec, seed=9,
+                              health=det_health(), backoff_s=0.001)
+    res2, _, inj2 = run_chaos(shards, reqs, spec, seed=9,
+                              health=det_health(), backoff_s=0.001)
+    assert dict(inj1.dispatches) == dict(inj2.dispatches)
+    assert dict(inj1.injected) == dict(inj2.injected)
+    assert inj1.injected["exceptions"] > 0     # the sweep actually injected
+    for (i1, d1, _), (i2, d2, _) in zip(res1, res2):
+        np.testing.assert_array_equal(i1, i2)
+        np.testing.assert_array_equal(d1, d2)
+    assert_parity(shards, reqs, res1)          # and == the fault-free run
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(sizes=st.lists(st.integers(min_value=1, max_value=5),
+                          min_size=1, max_size=8),
+           p0=st.floats(min_value=0.0, max_value=0.6),
+           p1=st.floats(min_value=0.0, max_value=0.6),
+           seed=st.integers(min_value=0, max_value=2**16),
+           interleave=st.booleans())
+    def test_chaos_is_never_client_visible(fleet, sizes, p0, p1, seed,
+                                           interleave):
+        """Property: under ANY flaky schedule (with a fallback configured)
+        every request succeeds and every response is bit-exact with the
+        fault-free direct call — chaos must be observationally invisible
+        modulo latency."""
+        _, shards = fleet
+        rng = np.random.default_rng(seed)
+        reqs = [rng.random((m, 2)).astype(np.float32) for m in sizes]
+        res, summary, _ = run_chaos(
+            shards, reqs, f"flaky:r0:{p0},flaky:r1:{p1}", seed=seed,
+            health=HealthTracker(2, quarantine_after=2, cooldown_s=0.05),
+            sequential=not interleave, backoff_s=0.001)
+        assert summary["requests"] == len(reqs)
+        assert_parity(shards, reqs, res)
+
+
+# ---------------------------------------------------------------------------
+# deadlines (fake engine: fast, countable)
+# ---------------------------------------------------------------------------
+
+class CountingEngine:
+    """Pure per-row 'knn' fake — row-independent, so coalescing/slicing is
+    checkable without a real fleet, and calls are countable."""
+
+    def __init__(self):
+        self.calls = 0
+
+    def knn(self, batch, k):
+        self.calls += 1
+        b = np.asarray(batch, np.float32)
+        ids = (b[:, 0] * 1e6).astype(np.int64)[:, None] \
+            + np.arange(k)[None, :]
+        d = b[:, 1:2].astype(np.float64) * 10.0 + np.arange(k)[None, :]
+        return ids, d, False
+
+
+def test_deadline_exceeded_fails_fast_on_slow_dispatch():
+    eng = CountingEngine()
+    inj = FaultInjector(FaultPlan.from_spec("slow:r0@0:0.4"))
+    with ServeQueue([eng], "knn", k=3, injector=inj) as q:
+        with pytest.raises(DeadlineExceeded):
+            q.query(np.zeros((2, 2), np.float32), deadline=0.1)
+        # the queue survives: an undeadlined request still succeeds
+        rows = np.full((1, 2), 0.5, np.float32)
+        ids, d, _ = q.query(rows)
+        ref_ids, ref_d, _ = eng.knn(rows, 3)
+        np.testing.assert_array_equal(ids, ref_ids)
+        np.testing.assert_array_equal(d, ref_d)
+        assert q.summary["deadline_exceeded"] == 1
+
+
+def test_expired_request_is_never_dispatched():
+    eng = CountingEngine()
+    with ServeQueue([eng], "knn", k=3) as q:
+        fut = q.submit(np.zeros((2, 2), np.float32), deadline=0.0)
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=5)
+        summary = q.summary
+    assert eng.calls == 0                 # failed fast, no dispatch burned
+    assert summary.get("batches", 0) == 0
+    assert summary["deadline_exceeded"] == 1
+
+
+def test_coalescing_never_waits_past_a_deadline():
+    """With a huge max_delay the batch must still dispatch in time for a
+    deadlined request — the earliest deadline cuts the coalescing wait."""
+    eng = CountingEngine()
+    with ServeQueue([eng], "knn", k=3, max_delay_s=30.0) as q:
+        t0 = time.monotonic()
+        rows = np.full((2, 2), 0.25, np.float32)
+        ids, d, _ = q.query(rows, deadline=0.5)
+        elapsed = time.monotonic() - t0
+    assert elapsed < 2.0                  # nowhere near max_delay_s
+    ref_ids, ref_d, _ = eng.knn(rows, 3)
+    np.testing.assert_array_equal(ids, ref_ids)
+    np.testing.assert_array_equal(d, ref_d)
+
+
+def test_transient_failure_retried_within_budget():
+    eng = CountingEngine()
+    inj = FaultInjector(FaultPlan.from_spec("crash:r0@0"))
+    with ServeQueue([eng], "knn", k=3, injector=inj, backoff_s=0.01) as q:
+        rows = np.full((2, 2), 0.75, np.float32)
+        ids, d, _ = q.query(rows)
+        summary = q.summary
+    served_calls = eng.calls
+    ref_ids, ref_d, _ = eng.knn(rows, 3)
+    np.testing.assert_array_equal(ids, ref_ids)
+    np.testing.assert_array_equal(d, ref_d)
+    assert summary["retries"] == 1
+    assert summary["dispatch_failures"] == 1
+    assert served_calls == 1              # the injected crash pre-empted #0

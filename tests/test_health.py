@@ -1,0 +1,195 @@
+"""Circuit-breaker state machine (runtime/health.py), driven with an
+injected fake clock so every transition — failure quarantine, latency
+quarantine, half-open probation probes, exponential cooldown — is tested
+without sleeping."""
+import pytest
+
+from repro.runtime.health import (HEALTHY, PROBATION, QUARANTINED, SUSPECT,
+                                  HealthTracker)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def make(n=2, **kw):
+    clock = FakeClock()
+    kw.setdefault("quarantine_after", 3)
+    kw.setdefault("cooldown_s", 1.0)
+    return HealthTracker(n, clock=clock, **kw), clock
+
+
+# ---------------------------------------------------------------------------
+# failure-driven transitions
+# ---------------------------------------------------------------------------
+
+def test_starts_healthy_and_round_robins_from_start():
+    ht, _ = make(3)
+    assert ht.states() == [HEALTHY] * 3
+    assert ht.next_replica(0) == 0
+    assert ht.next_replica(1) == 1
+    assert ht.next_replica(2) == 2
+
+
+def test_suspect_still_serves_then_recovers():
+    ht, _ = make()
+    ht.record_failure(0)
+    assert ht.state(0) == SUSPECT
+    assert ht.next_replica(0) == 0      # suspect shares the rotation
+    assert ht.usable(0)                 # and remains a re-issue target
+    ht.record_success(0)
+    assert ht.state(0) == HEALTHY
+    assert ht.snapshot()["replicas"][0]["consecutive_failures"] == 0
+
+
+def test_kth_consecutive_failure_quarantines():
+    ht, _ = make()
+    for _ in range(3):
+        ht.record_failure(0)
+    assert ht.state(0) == QUARANTINED
+    assert ht.quarantines == 1
+    assert not ht.usable(0)
+    assert ht.next_replica(0) == 1      # traffic routes around the breaker
+    assert not ht.acquire(0)            # inside the cooldown: no dispatches
+
+
+def test_nonconsecutive_failures_do_not_quarantine():
+    ht, _ = make()
+    for _ in range(5):
+        ht.record_failure(0)
+        ht.record_success(0)
+    assert ht.state(0) == HEALTHY
+    assert ht.quarantines == 0
+
+
+def test_all_quarantined_returns_none():
+    ht, _ = make(2)
+    for rid in (0, 1):
+        for _ in range(3):
+            ht.record_failure(rid)
+    assert ht.states() == [QUARANTINED] * 2
+    assert ht.next_replica(0) is None   # the caller's cue to degrade
+
+
+# ---------------------------------------------------------------------------
+# probation (half-open) + exponential cooldown
+# ---------------------------------------------------------------------------
+
+def test_cooldown_elapse_grants_exactly_one_probe():
+    ht, clock = make(2)
+    for _ in range(3):
+        ht.record_failure(0)
+    clock.advance(1.5)                  # past the 1.0s cooldown
+    assert ht.acquire(0)                # the single half-open probe
+    assert ht.state(0) == PROBATION
+    assert not ht.acquire(0)            # a second concurrent probe is denied
+    assert ht.probes == 1
+    # the round-robin also finds the probe when no healthy replica remains
+    for _ in range(3):
+        ht.record_failure(1)
+    clock.advance(1.5)
+    assert ht.next_replica(0) in (0, 1)
+
+
+def test_probe_success_closes_the_breaker():
+    ht, clock = make()
+    for _ in range(3):
+        ht.record_failure(0)
+    clock.advance(1.5)
+    assert ht.acquire(0)
+    ht.record_success(0)
+    assert ht.state(0) == HEALTHY
+    assert ht.snapshot()["replicas"][0]["cooldown_s"] == 1.0   # reset
+
+
+def test_probe_failure_doubles_cooldown_capped():
+    ht, clock = make(cooldown_max_s=3.0)
+    for _ in range(3):
+        ht.record_failure(0)
+    for expected in (2.0, 3.0, 3.0):    # 1 → 2 → capped at 3
+        clock.advance(10.0)
+        assert ht.acquire(0)
+        ht.record_failure(0)
+        assert ht.state(0) == QUARANTINED
+        assert ht.snapshot()["replicas"][0]["cooldown_s"] == expected
+        # re-opened: the breaker denies dispatches inside the new cooldown
+        assert not ht.acquire(0)
+
+
+def test_late_failure_of_old_dispatch_keeps_quarantine_clock():
+    ht, clock = make()
+    for _ in range(3):
+        ht.record_failure(0)
+    until = ht._replicas[0].quarantined_until
+    ht.record_failure(0)                # a straggling old dispatch lands
+    assert ht.state(0) == QUARANTINED
+    assert ht._replicas[0].quarantined_until == until
+    assert ht.quarantines == 1          # not a second transition
+
+
+# ---------------------------------------------------------------------------
+# latency-driven transitions (EWMA vs the fleet's best)
+# ---------------------------------------------------------------------------
+
+def test_slow_replica_quarantined_on_latency():
+    ht, _ = make(2, slow_factor=10.0, min_latency_samples=3)
+    for _ in range(4):
+        ht.record_success(0, latency_s=0.01)
+        ht.record_success(1, latency_s=0.5)     # 50× the best
+    assert ht.state(1) == QUARANTINED
+    assert ht.state(0) == HEALTHY
+    assert ht.quarantines >= 1
+
+
+def test_moderately_slow_replica_is_suspect_not_quarantined():
+    ht, _ = make(2, slow_factor=10.0, suspect_factor=3.0)
+    for _ in range(4):
+        ht.record_success(0, latency_s=0.01)
+        ht.record_success(1, latency_s=0.05)    # 5×: slow but serving
+    assert ht.state(1) == SUSPECT
+    assert ht.usable(1)
+
+
+def test_latency_never_quarantines_the_last_live_replica():
+    ht, _ = make(2, slow_factor=10.0)
+    for _ in range(3):
+        ht.record_failure(0)                    # r0 is gone
+    for _ in range(6):
+        ht.record_success(1, latency_s=5.0)     # slow, but the only engine
+    assert ht.state(1) in (HEALTHY, SUSPECT)
+    assert ht.next_replica(0) == 1
+
+
+def test_latency_needs_min_samples_on_both_sides():
+    ht, _ = make(2, min_latency_samples=3)
+    ht.record_success(0, latency_s=0.01)
+    ht.record_success(1, latency_s=9.0)         # huge, but 1 sample
+    assert ht.state(1) == HEALTHY
+
+
+# ---------------------------------------------------------------------------
+# snapshot
+# ---------------------------------------------------------------------------
+
+def test_snapshot_reports_counters_and_states():
+    ht, _ = make(2)
+    ht.record_success(0, latency_s=0.02)
+    ht.record_failure(1)
+    snap = ht.snapshot()
+    assert snap["quarantines"] == 0 and snap["probes"] == 0
+    r0, r1 = snap["replicas"]
+    assert r0["state"] == HEALTHY and r0["dispatches"] == 1
+    assert r0["ewma_s"] == pytest.approx(0.02)
+    assert r1["state"] == SUSPECT and r1["failures"] == 1
+
+
+def test_rejects_empty_fleet():
+    with pytest.raises(ValueError):
+        HealthTracker(0)

@@ -13,7 +13,7 @@ import numpy as np
 import pytest
 
 from repro.distributed.spatial_shard import SpatialShards
-from repro.launch.queue import ServeQueue
+from repro.launch.queue import QueueClosed, ServeQueue
 from repro.runtime.straggler import ShardPool
 
 from conftest import brute_select, uniform_rects
@@ -205,6 +205,62 @@ def test_pool_query_many_preserves_order():
     assert out == [("a", 1), ("b", 2), ("a", 3), ("b", 4)]
 
 
+def test_pool_stats_consistent_snapshot_under_hammering():
+    """Satellite regression: ``stats()`` must be a consistent snapshot —
+    totals always equal the sum of the per-shard rows, even while
+    concurrent query_many calls race failures and re-issues into the
+    counters.  Shard r1 fails every call (its failures re-issue to r2);
+    snapshots taken mid-hammering must never tear."""
+    import threading
+
+    def ok(tag):
+        return lambda p: (tag, p)
+
+    def crash(p):
+        raise RuntimeError("r1 always dies")
+
+    n_threads, n_queries = 4, 30
+    with ShardPool([ok("r0"), crash, ok("r2")], deadline_s=5.0) as pool:
+        tears = []
+
+        def hammer(tid):
+            rng = np.random.default_rng(tid)
+            sids = rng.integers(0, 3, n_queries)
+            out = pool.query_many([(int(s), i) for i, s in enumerate(sids)])
+            for (sid, i, got) in zip(sids, range(n_queries), out):
+                assert got[1] == i          # re-issued answers stay correct
+            return int((sids == 1).sum())
+
+        def snapshotter(stop):
+            while not stop.is_set():
+                s = pool.stats()
+                if (s["failures"] != sum(v["failures"]
+                                         for v in s["by_shard"].values())
+                        or s["reissues"] != sum(
+                            v["reissues"] for v in s["by_shard"].values())):
+                    tears.append(s)
+
+        import concurrent.futures as cf
+        stop = threading.Event()
+        watcher = threading.Thread(target=snapshotter, args=(stop,))
+        watcher.start()
+        with cf.ThreadPoolExecutor(n_threads) as ex:
+            r1_hits = sum(ex.map(hammer, range(n_threads)))
+        stop.set()
+        watcher.join()
+        assert tears == []
+        # late done-callbacks may lag the last query()'s return briefly
+        deadline = time.time() + 2.0
+        while pool.failures < r1_hits and time.time() < deadline:
+            time.sleep(0.01)
+        s = pool.stats()
+        assert s["failures"] == r1_hits
+        assert s["by_shard"]["r1"]["failures"] == r1_hits
+        assert s["by_shard"]["r1"]["reissues"] == r1_hits
+        assert s["reissues"] == r1_hits
+        assert pool.failures == s["failures"]   # props agree with snapshot
+
+
 # ---------------------------------------------------------------------------
 # Continuous-batching serve queue (launch/queue.py)
 # ---------------------------------------------------------------------------
@@ -271,6 +327,68 @@ def test_queue_oversized_request_dispatches_whole(shard_cache):
         ref_ids, ref_d, _ = shards.knn(rows, 4)
         np.testing.assert_array_equal(ids, ref_ids)
         np.testing.assert_array_equal(d, ref_d)
+
+
+class _SlowFake:
+    """Pure per-row 'knn' fake with a fixed service time — lets the close()
+    races be provoked without a real fleet."""
+
+    def __init__(self, delay_s):
+        self.delay_s = delay_s
+
+    def knn(self, batch, k):
+        time.sleep(self.delay_s)
+        b = np.asarray(batch, np.float32)
+        ids = (b[:, 0] * 1e6).astype(np.int64)[:, None] \
+            + np.arange(k)[None, :]
+        return ids, b[:, 1:2].astype(np.float64), False
+
+
+def test_queue_close_fails_pending_with_queue_closed():
+    """Satellite regression: a client that submitted just before close()
+    must never block forever — every future the queue abandons fails with
+    QueueClosed, and every future it already served resolves normally."""
+    eng = _SlowFake(0.3)
+    rng = np.random.default_rng(53)
+    reqs = [rng.random((1, 2)).astype(np.float32) for _ in range(6)]
+    q = ServeQueue([eng], "knn", k=3, max_batch=1, depth=1)
+    futs = [q.submit(r) for r in reqs]
+    time.sleep(0.05)                      # first dispatch is in flight
+    q.close(drain=False)
+    served = closed = 0
+    for rows, f in zip(reqs, futs):
+        assert f.done()                   # nobody is left hanging
+        try:
+            ids, d, _ = f.result()
+        except QueueClosed:
+            closed += 1
+            continue
+        served += 1
+        ref_ids, ref_d, _ = eng.knn(rows, 3)
+        np.testing.assert_array_equal(ids, ref_ids)
+        np.testing.assert_array_equal(d, ref_d)
+    assert served >= 1                    # the in-flight batch completed
+    assert closed >= 1                    # the queued tail was failed fast
+    with pytest.raises(QueueClosed):
+        q.submit(reqs[0])
+
+
+def test_queue_close_drains_admitted_requests():
+    """Default close(): everything admitted before the close is flushed —
+    no request is dropped, none sees QueueClosed."""
+    eng = _SlowFake(0.05)
+    rng = np.random.default_rng(59)
+    reqs = [rng.random((1, 2)).astype(np.float32) for _ in range(4)]
+    q = ServeQueue([eng], "knn", k=3, max_batch=1, depth=1)
+    futs = [q.submit(r) for r in reqs]
+    q.close()
+    for rows, f in zip(reqs, futs):
+        ids, d, _ = f.result(timeout=0)   # already resolved by close()
+        ref_ids, ref_d, _ = eng.knn(rows, 3)
+        np.testing.assert_array_equal(ids, ref_ids)
+        np.testing.assert_array_equal(d, ref_d)
+    with pytest.raises(QueueClosed):
+        q.submit(reqs[0])
 
 
 def _check_schedule_invisible(shards, sizes, seed, interleave):
