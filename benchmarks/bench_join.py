@@ -43,6 +43,7 @@ def run(n: int = 100_000, fanout: int = 64, eps: float = 0.0005,
     variants = [
         ("V(D1)", dict(layout="d1")),
         ("V(D2)", dict(layout="d2")),
+        ("V(D3)", dict(layout="d3")),
         ("V(D1)+O3", dict(layout="d1", o3=True)),
         ("V(D1)+O3+O4", dict(layout="d1", o3=True, o4=True)),
         ("V(D1)+O3+O5", dict(layout="d1", o3=True, o5="dense")),

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import knn_scalar, knn_vector, rtree
+from repro.core.layouts import layout_names
 
 from .common import Rows, point_rects, time_fn, uniform_points
 
@@ -35,7 +36,7 @@ def run(n: int = 1_000_000, fanout: int = 64, batch: int = 64,
                     for key, v in ctr_sum.asdict().items()})
 
         # --- V-O1 batched BFS per layout ---
-        for layout in ("d1", "d2", "d0"):
+        for layout in layout_names():
             fn = knn_vector.make_knn_bfs(tree, k=k, layout=layout)
             dt, (_, _, ctr) = time_fn(fn, jnp.asarray(qpts))
             dt /= batch

@@ -9,6 +9,7 @@ import numpy as np
 
 from repro.core import flat as flatmod
 from repro.core import rtree, select_scalar, select_vector
+from repro.core.layouts import layout_names
 
 from .common import Rows, point_rects, square_queries, time_fn
 
@@ -49,7 +50,7 @@ def run(n: int = 1_000_000, fanout: int = 64, selectivity: float = 0.001,
     # not the algorithm (min_cap=128 is a TPU lane-alignment default)
     caps = select_vector.frontier_caps(tree, result_cap, slack=2,
                                        min_cap=32)
-    for layout in ("d1", "d2", "d0"):
+    for layout in layout_names():
         sel = select_vector.make_select_bfs(tree, layout=layout,
                                             result_cap=result_cap,
                                             caps=caps)

@@ -6,13 +6,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import rtree, select_vector
+from repro.core.layouts import layout_names
 
 from .common import Rows, point_rects, square_queries, time_fn
+
+# the vectorized-layout sweep: every registered layout except the AoS
+# baseline d0 (covered by bench_select.py's variant table)
+SWEEP_LAYOUTS = tuple(lo for lo in layout_names() if lo != "d0")
 
 
 def run_fanout(n: int = 1_000_000, selectivity: float = 0.001,
                batch: int = 64, seed: int = 0,
-               fanouts=(16, 32, 64, 128, 256, 512, 1024)):
+               fanouts=(16, 32, 64, 128, 256, 512, 1024),
+               layouts=SWEEP_LAYOUTS):
     rows = Rows("select_fanout_fig9_10a")
     qs = square_queries(batch, selectivity, seed + 1)
     rects = point_rects(n, seed)
@@ -21,7 +27,7 @@ def run_fanout(n: int = 1_000_000, selectivity: float = 0.001,
         tree = rtree.build_rtree(rects, fanout=f)
         caps = select_vector.frontier_caps(tree, result_cap, slack=2,
                                            min_cap=32)
-        for layout in ("d1", "d2"):
+        for layout in layouts:
             sel = select_vector.make_select_bfs(tree, layout=layout,
                                                 result_cap=result_cap,
                                                 caps=caps)
@@ -37,7 +43,8 @@ def run_fanout(n: int = 1_000_000, selectivity: float = 0.001,
 
 def run_selectivity(n: int = 1_000_000, fanout: int = 64, batch: int = 64,
                     seed: int = 0,
-                    sels=(1e-5, 1e-4, 1e-3, 1e-2)):
+                    sels=(1e-5, 1e-4, 1e-3, 1e-2),
+                    layouts=SWEEP_LAYOUTS):
     rows = Rows("select_selectivity_fig10b")
     rects = point_rects(n, seed)
     tree = rtree.build_rtree(rects, fanout=fanout)
@@ -45,7 +52,7 @@ def run_selectivity(n: int = 1_000_000, fanout: int = 64, batch: int = 64,
         qs = square_queries(batch, s, seed + 1)
         cap = min(max(int(n * s * 8), 1024), 1 << 17)
         caps = select_vector.frontier_caps(tree, cap, slack=2, min_cap=32)
-        for layout in ("d1", "d2"):
+        for layout in layouts:
             sel = select_vector.make_select_bfs(tree, layout=layout,
                                                 result_cap=cap, caps=caps)
             dt, (_, counts, ctr) = time_fn(sel, jnp.asarray(qs))

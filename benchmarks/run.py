@@ -20,7 +20,7 @@ def main(argv=None):
                     help="tiny sizes (CI smoke)")
     ap.add_argument("--only", default=None,
                     help="comma list: select,sweeps,join,knn,knn-join,"
-                         "fused,browse,service,lm")
+                         "fused,quant,browse,service,lm")
     ap.add_argument("--out-dir", default="runs/bench")
     args = ap.parse_args(argv)
 
@@ -79,6 +79,15 @@ def main(argv=None):
         rows, _ = bench_fused.run(
             n=n_fused, out_json=os.path.join(args.out_dir,
                                              "BENCH_fused.json"))
+        all_rows.append(rows)
+    if want("quant"):
+        from . import bench_quant
+        n_quant = 20_000 if args.quick else (2_000_000 if args.full
+                                             else 500_000)
+        print(f"[quantized D3 layout: bytes/node + latency]  n={n_quant}")
+        rows, _ = bench_quant.run(
+            n=n_quant, out_json=os.path.join(args.out_dir,
+                                             "BENCH_quant.json"))
         all_rows.append(rows)
     if want("browse"):
         from . import bench_browse

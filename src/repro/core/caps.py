@@ -18,7 +18,7 @@ from __future__ import annotations
 
 from typing import Optional, Sequence, Tuple
 
-from .layouts import round_up_to_lanes
+from .layouts import LANES, round_up_to_lanes
 
 
 def geometric_caps(n_steps: int, fanout: int, target: int, *, slack: int,
@@ -26,6 +26,7 @@ def geometric_caps(n_steps: int, fanout: int, target: int, *, slack: int,
                    max_cap: Optional[int] = None,
                    level_sizes: Optional[Sequence[int]] = None,
                    lane_round: bool = True,
+                   lanes: int = LANES,
                    final: Optional[str] = None) -> Tuple[int, ...]:
     """Geometric frontier caps, one per descent step (coarse → fine).
 
@@ -34,7 +35,10 @@ def geometric_caps(n_steps: int, fanout: int, target: int, *, slack: int,
     clamped to ``[min_cap, max_cap]`` (max first, then min — the historical
     order) and to ``level_sizes[e]`` when given.  ``lane_round`` applies the
     TPU lane round-up (the only call site of ``round_up_to_lanes`` in the
-    caps machinery).  ``final``:
+    caps machinery); ``lanes`` is the round-up width — layout-dependent
+    (``layouts.layout_lanes``: compressed D3 rows stream twice as many
+    boxes per block, so their frontiers round to 2x the f32 width), default
+    the historical 128 so existing caps stay bit-identical.  ``final``:
 
       None      — leave the last step as computed (kNN frontier policy)
       'boost'   — raise the last step to at least ``target`` (select: the
@@ -60,30 +64,31 @@ def geometric_caps(n_steps: int, fanout: int, target: int, *, slack: int,
     elif caps and final == "target":
         caps[-1] = int(target)
     if lane_round and final != "target":
-        caps = [round_up_to_lanes(c) for c in caps]
+        caps = [round_up_to_lanes(c, lanes) for c in caps]
     elif lane_round:
-        caps = [round_up_to_lanes(c) for c in caps[:-1]] + [caps[-1]]
+        caps = [round_up_to_lanes(c, lanes) for c in caps[:-1]] + [caps[-1]]
     return tuple(caps)
 
 
 def select_frontier_caps(tree, result_cap: int, slack: int = 4,
-                         min_cap: int = 128) -> Tuple[int, ...]:
+                         min_cap: int = 128,
+                         lanes: int = LANES) -> Tuple[int, ...]:
     """Select frontier capacity entering each level (root-1 … leaf): the
     historical ``select_vector.frontier_caps`` policy."""
     return geometric_caps(
         tree.height - 1, tree.fanout, result_cap, slack=slack,
         min_cap=min_cap,
         level_sizes=[lvl.n_nodes for lvl in tree.levels],
-        final="boost")
+        lanes=lanes, final="boost")
 
 
 def knn_frontier_caps(tree, k: int, slack: int = 4,
-                      min_cap: int = 64) -> Tuple[int, ...]:
+                      min_cap: int = 64, lanes: int = LANES) -> Tuple[int, ...]:
     """kNN/kNN-join frontier capacity entering each level (root-1 … leaf):
     the historical ``knn_vector.knn_frontier_caps`` policy."""
     return geometric_caps(
         tree.height - 1, tree.fanout, k, slack=slack, min_cap=min_cap,
-        level_sizes=[lvl.n_nodes for lvl in tree.levels])
+        level_sizes=[lvl.n_nodes for lvl in tree.levels], lanes=lanes)
 
 
 def join_pair_caps(height: int, fanout: int, result_cap: int,
@@ -98,8 +103,9 @@ def join_pair_caps(height: int, fanout: int, result_cap: int,
 
 
 def browse_caps(tree, k: int, slack: int = 4,
-                pool_slack: int = 16) -> Tuple[Tuple[int, ...],
-                                               Tuple[int, ...], int]:
+                pool_slack: int = 16,
+                lanes: int = LANES) -> Tuple[Tuple[int, ...],
+                                             Tuple[int, ...], int]:
     """Caps bundle for the resumable distance-browsing operator.
 
     Returns (frontier_caps, defer_caps, pool_cap):
@@ -112,12 +118,12 @@ def browse_caps(tree, k: int, slack: int = 4,
                       most the root itself.
       pool_cap      — scored-leaf candidate pool (emitted k at a time).
     """
-    frontier = knn_frontier_caps(tree, k, slack=slack)
+    frontier = knn_frontier_caps(tree, k, slack=slack, lanes=lanes)
     deep = geometric_caps(
         tree.height - 1, tree.fanout, k, slack=4 * slack, min_cap=128,
-        level_sizes=[lvl.n_nodes for lvl in tree.levels])
+        level_sizes=[lvl.n_nodes for lvl in tree.levels], lanes=lanes)
     # geometric_caps orders coarse → fine; defer_caps indexes by level
     # (0 = leaf-adjacent … height-1 = root)
     defer = tuple(reversed(deep)) + (1,)
-    pool_cap = round_up_to_lanes(max(pool_slack * k, 512))
+    pool_cap = round_up_to_lanes(max(pool_slack * k, 512), lanes)
     return frontier, defer, pool_cap

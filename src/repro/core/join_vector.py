@@ -39,7 +39,8 @@ from . import caps as caps_policy
 from . import traversal
 from .counters import StageModel
 from .join_scalar import elevate
-from .layouts import LevelD0, LevelD1, LevelD2, d0_unpack, tree_layout
+from .layouts import (LevelD0, LevelD1, LevelD2, LevelD3, d0_unpack,
+                      d3_dequantize, tree_layout)
 from .rtree import RTree
 
 
@@ -62,9 +63,26 @@ def _gather_children(layer, ids: jax.Array):
         lx, ly, hx, hy, ptr = d0_unpack(layer.entries[safe])
         out = (lx, ly, hx, hy, ptr)
         stages = 4
+    elif isinstance(layer, LevelD3):
+        # conservative dequantization: the enlarged boxes can only make the
+        # tile predicate over-approximate (leaf levels re-check exact rect
+        # geometry in the join score)
+        lx, ly, hx, hy = d3_dequantize(layer.qlo[safe], layer.qhi[safe],
+                                       layer.scale[safe], layer.bias[safe])
+        out = (lx, ly, hx, hy, layer.ptr[safe])
+        stages = 2
     else:
         raise TypeError(type(layer))
     return out, stages
+
+
+def _exact_leaf_children(g, rects: jax.Array):
+    """Replace dequantized leaf-child boxes with exact rect geometry
+    gathered through ptr (identical to the D1 leaf arrays, which store the
+    rect coords grouped by leaf node)."""
+    ptr = g[4]
+    r = rects[jnp.maximum(ptr, 0)]
+    return (r[..., 0], r[..., 1], r[..., 2], r[..., 3], ptr)
 
 
 def flip_indices_dense(i_lx: jax.Array, o_hx: jax.Array) -> jax.Array:
@@ -177,10 +195,14 @@ def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
         return delta, m, (o_valid, i_valid, optr, iptr)
 
     def score(ctx, li, frontier, qargs):
-        layers_o_, layers_i_ = ctx
+        layers_o_, layers_i_, rects_o_, rects_i_ = ctx
         o_ids, i_ids = frontier[0][0], frontier[1][0]   # (P,)
         go, stages = _gather_children(layers_o_[li], o_ids)
         gi, _ = _gather_children(layers_i_[li], i_ids)
+        if rects_o_ is not None and li == 0:
+            go = _exact_leaf_children(go, rects_o_)
+            gi = _exact_leaf_children(gi, rects_i_)
+            stages = 4
         (olx, oly, ohx, ohy, optr) = go
         (ilx, ily, ihx, ihy, iptr) = gi
         pair_valid = (o_ids >= 0) & (i_ids >= 0)
@@ -217,7 +239,7 @@ def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
 
     def fused_level(ctx, li, frontier, qargs, cap):
         from repro.kernels import ops as _kops
-        layers_o_, layers_i_ = ctx
+        layers_o_, layers_i_, _, _ = ctx
         o_ids, i_ids = frontier[0][0], frontier[1][0]
         go, stages = _gather_children(layers_o_[li], o_ids)
         gi, _ = _gather_children(layers_i_[li], i_ids)
@@ -241,7 +263,9 @@ def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
     run = traversal.make_mask_engine(
         JOIN_SPEC, height=h, caps=pair_caps[:-1], result_cap=pair_caps[-1],
         score=score, fused_level=fused_level if fused else None, n_streams=2)
-    ctx = (layers_o, layers_i)
+    rects_o = to.rects if layout == "d3" else None
+    rects_i = ti.rects if layout == "d3" else None
+    ctx = (layers_o, layers_i, rects_o, rects_i)
 
     def fn():
         res, counts, ctr = run(ctx)

@@ -29,6 +29,7 @@ from typing import Optional, Sequence, Tuple
 import numpy as np
 
 from . import caps as caps_policy
+from . import layouts
 from . import traversal
 from .counters import Counters, StageModel
 from .knn_vector import make_knn_score
@@ -87,7 +88,8 @@ def make_browse_bfs(tree: RTree, k: int, layout: str = "d1",
     if k <= 0:
         raise ValueError("k must be positive")
     ctx, score = make_knn_score(tree, layout, backend)
-    d_caps, d_defer, d_pool = caps_policy.browse_caps(tree, k)
+    d_caps, d_defer, d_pool = caps_policy.browse_caps(
+        tree, k, lanes=layouts.layout_lanes(layout))
     caps = tuple(caps) if caps is not None else d_caps
     defer_caps = tuple(defer_caps) if defer_caps is not None else d_defer
     pool_cap = pool_cap if pool_cap is not None else d_pool
@@ -182,7 +184,8 @@ def make_sharded_browse(stacked_tree, ids_map, k: int, *, mesh,
 
     def _engine_for(tree):
         ctx, score = make_knn_score(tree, layout, backend)
-        d_caps, d_defer, d_pool = caps_policy.browse_caps(tree, k)
+        d_caps, d_defer, d_pool = caps_policy.browse_caps(
+            tree, k, lanes=layouts.layout_lanes(layout))
         eng = traversal.make_browse_engine(
             BROWSE_SPEC, height=tree.height, batch_k=k, caps=d_caps,
             defer_caps=d_defer, pool_cap=d_pool, score=score)

@@ -39,16 +39,18 @@ from . import traversal
 from .counters import StageModel
 from .geometry import DIST_PAD, intersects, mindist, minmaxdist
 from .join_vector import _gather_children
-from .layouts import tree_layout
+from .layouts import (LevelD3, d3_dequantize, d3_slacked_upper, layout_lanes,
+                      tree_layout)
 from .rtree import RTree
 
 
 def filtered_caps(tree: RTree, k: int, slack: int = 8,
-                  min_cap: int = 256) -> Tuple[int, ...]:
+                  min_cap: int = 256, lanes: int = None) -> Tuple[int, ...]:
     """kNN caps with extra headroom: τ only tightens on window-contained
     children, so frontiers shrink later than in unfiltered kNN."""
+    kw = {} if lanes is None else dict(lanes=lanes)
     return caps_policy.knn_frontier_caps(tree, k, slack=slack,
-                                         min_cap=min_cap)
+                                         min_cap=min_cap, **kw)
 
 
 def make_knn_filtered_score(tree: RTree, layout: str,
@@ -63,15 +65,38 @@ def make_knn_filtered_score(tree: RTree, layout: str,
         raise ValueError("knn_filtered has no kernel backend yet "
                          "(window masks are composed in jnp)")
     layers = tree_layout(tree, layout)
+    rects = tree.rects if layout == "d3" else None
 
     def score(ctx, li, ids, queries, leaf):
-        layers_, = ctx
+        layers_, rects_ = ctx
         b, c = ids.shape
-        (lx, ly, hx, hy, ptr), stages = _gather_children(layers_[li],
-                                                         ids.reshape(-1))
-        f = lx.shape[-1]
-        lx, ly, hx, hy = (a.reshape(b, c, f) for a in (lx, ly, hx, hy))
-        ptr = ptr.reshape(b, c, f)
+        layer = layers_[li]
+        disp = None
+        if isinstance(layer, LevelD3):
+            # d3 soundness: the window-intersect qualify test runs on the
+            # enlarged dequantized box (over-approximates — never hides a
+            # candidate), the containment test under-approximates (a
+            # contained enlarged box implies a contained true box, so the τ
+            # guarantee still holds), and MINMAXDIST goes through the
+            # stored-slack correction; the leaf re-checks exact geometry.
+            safe = jnp.maximum(ids, 0)
+            ptr = layer.ptr[safe]
+            if leaf:
+                r = rects_[jnp.maximum(ptr, 0)]     # (B, C, F, 4)
+                lx, ly, hx, hy = (r[..., i] for i in range(4))
+                stages = 4
+            else:
+                lx, ly, hx, hy = d3_dequantize(
+                    layer.qlo[safe], layer.qhi[safe], layer.scale[safe],
+                    layer.bias[safe])
+                disp = layer.slack[safe].sum(axis=-1)[:, :, None]
+                stages = 2
+        else:
+            (lx, ly, hx, hy, ptr), stages = _gather_children(
+                layer, ids.reshape(-1))
+            f = lx.shape[-1]
+            lx, ly, hx, hy = (a.reshape(b, c, f) for a in (lx, ly, hx, hy))
+            ptr = ptr.reshape(b, c, f)
         px = queries[:, 0, None, None]
         py = queries[:, 1, None, None]
         wlx = queries[:, 2, None, None]
@@ -86,10 +111,12 @@ def make_knn_filtered_score(tree: RTree, layout: str,
             return md, None, ptr, stages
         contained = (lx >= wlx) & (ly >= wly) & (hx <= whx) & (hy <= why)
         mmd = minmaxdist(px, py, lx, ly, hx, hy)
+        if disp is not None:
+            mmd = d3_slacked_upper(mmd, disp)
         mmd = jnp.where(valid & contained, mmd, DIST_PAD)
         return md, mmd, ptr, stages
 
-    return (layers,), score
+    return (layers, rects), score
 
 
 def make_knn_filtered_bfs(tree: RTree, k: int, layout: str = "d1",
@@ -107,7 +134,7 @@ def make_knn_filtered_bfs(tree: RTree, k: int, layout: str = "d1",
         raise ValueError("knn_filtered has no fused generation")
     ctx, score = make_knn_filtered_score(tree, layout, backend)
     if caps is None:
-        caps = filtered_caps(tree, k)
+        caps = filtered_caps(tree, k, lanes=layout_lanes(layout))
     caps = tuple(caps)
     if len(caps) != tree.height - 1:
         raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")

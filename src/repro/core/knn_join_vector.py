@@ -46,7 +46,8 @@ from .geometry import (DIST_PAD, mindist_rect, mindist_rect_pairs,
                        minmaxdist_rect)
 from .join_vector import _gather_children
 from .knn_vector import knn_frontier_caps
-from .layouts import LevelD2, tree_layout
+from .layouts import (LevelD2, LevelD3, d3_dequantize, d3_slacked_upper,
+                      layout_lanes, tree_layout)
 from .rtree import RTree
 
 
@@ -100,26 +101,69 @@ def _rect_dists_for_level(layer, ids: jax.Array, qrects: jax.Array,
     return md, mmd, ptr, stages
 
 
+def _d3_rect_dists_for_level(layer: LevelD3, ids: jax.Array,
+                             qrects: jax.Array, rects: jax.Array, leaf: bool):
+    """Quantized-level analogue of ``_rect_dists_for_level``: internal
+    levels score the dequantized (enlarged) boxes — rect MINDIST stays an
+    admissible lower bound, rect MINMAXDIST is slack-corrected into a sound
+    upper bound — and the leaf level scores exact rect geometry."""
+    safe = jnp.maximum(ids, 0)
+    ptr = layer.ptr[safe]
+    valid = (ids >= 0)[:, :, None] & (ptr >= 0)
+    qlx = qrects[:, 0, None, None]
+    qly = qrects[:, 1, None, None]
+    qhx = qrects[:, 2, None, None]
+    qhy = qrects[:, 3, None, None]
+    if leaf:
+        r = rects[jnp.maximum(ptr, 0)]              # (B, C, F, 4)
+        md = mindist_rect(qlx, qly, qhx, qhy,
+                          r[..., 0], r[..., 1], r[..., 2], r[..., 3])
+        return jnp.where(valid, md, DIST_PAD), None, ptr, 4
+    lx, ly, hx, hy = d3_dequantize(layer.qlo[safe], layer.qhi[safe],
+                                   layer.scale[safe], layer.bias[safe])
+    md = mindist_rect(qlx, qly, qhx, qhy, lx, ly, hx, hy)
+    disp = layer.slack[safe].sum(axis=-1)[:, :, None]
+    mmd = d3_slacked_upper(
+        minmaxdist_rect(qlx, qly, qhx, qhy, lx, ly, hx, hy), disp)
+    md = jnp.where(valid, md, DIST_PAD)
+    mmd = jnp.where(valid, mmd, DIST_PAD)
+    return md, mmd, ptr, 2
+
+
 def make_knn_join_score(tree: RTree, layout: str, backend: Optional[str]):
     """Build the kNN-join score stage + engine context (contract as
     ``knn_vector.make_knn_score``, with rect queries)."""
-    if backend is not None and layout != "d1":
-        raise ValueError("kernel backend requires layout d1")
-    layers = None if backend is not None else tree_layout(tree, layout)
+    if backend is not None and layout not in ("d1", "d3"):
+        raise ValueError("kernel backend requires layout d1 or d3")
+    layers = None if backend is not None and layout != "d3" \
+        else tree_layout(tree, layout)
     levels = tree.levels if backend is not None else None
+    rects = tree.rects if layout == "d3" and backend is None else None
 
     def score(ctx, li, ids, qrects, leaf):
-        layers_, levels_ = ctx
+        layers_, levels_, rects_ = ctx
+        if backend is not None and layout == "d3" and not leaf:
+            from repro.kernels import ops as _kops
+            lvl3 = layers_[li]
+            md, mmd = _kops.knn_join_level_dists_d3(
+                ids, qrects, lvl3.qlo, lvl3.qhi, lvl3.scale, lvl3.bias,
+                lvl3.slack, lvl3.ptr, backend=backend)
+            return md, mmd, lvl3.ptr[jnp.maximum(ids, 0)], 2
         if backend is not None:
+            # d3 leaf rows fall through: level 0's SoA arrays are the exact
+            # rect coords, so the d1 leaf kernel is the exact re-check
             from repro.kernels import ops as _kops
             lvl = levels_[li]
             md, mmd = _kops.knn_join_level_dists(
                 ids, qrects, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child,
                 leaf=leaf, backend=backend)
             return md, mmd, lvl.child[jnp.maximum(ids, 0)], 4
+        if isinstance(layers_[li], LevelD3):
+            return _d3_rect_dists_for_level(layers_[li], ids, qrects,
+                                            rects_, leaf)
         return _rect_dists_for_level(layers_[li], ids, qrects, leaf)
 
-    return (layers, levels), score
+    return (layers, levels, rects), score
 
 
 def make_knn_join_bfs(tree: RTree, k: int, layout: str = "d1",
@@ -145,16 +189,18 @@ def make_knn_join_bfs(tree: RTree, k: int, layout: str = "d1",
         raise ValueError("k must be positive")
     if fused and backend is None:
         raise ValueError("fused kNN-join requires a kernel backend")
+    if fused and layout != "d1":
+        raise ValueError("fused kNN-join requires layout d1")
     ctx, score = make_knn_join_score(tree, layout, backend)
     if caps is None:
-        caps = knn_frontier_caps(tree, k)
+        caps = knn_frontier_caps(tree, k, lanes=layout_lanes(layout))
     caps = tuple(caps)
     if len(caps) != tree.height - 1:
         raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
 
     def fused_level(ctx_, li, ids, qrects, tau, leaf, cap):
         from repro.kernels import ops as _kops
-        _, levels_ = ctx_
+        _, levels_, _ = ctx_
         lvl = levels_[li]
         f = lvl.lx.shape[1]
         args = (ids, qrects, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child)

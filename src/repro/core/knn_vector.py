@@ -48,7 +48,9 @@ from . import caps as caps_policy
 from . import traversal
 from .counters import StageModel
 from .geometry import DIST_PAD, mindist, mindist_pairs, minmaxdist
-from .layouts import LevelD0, LevelD1, LevelD2, d0_unpack, tree_layout
+from .layouts import (LevelD0, LevelD1, LevelD2, LevelD3, d0_unpack,
+                      d3_dequantize, d3_slacked_upper, layout_lanes,
+                      tree_layout)
 from .rtree import RTree
 
 
@@ -98,12 +100,47 @@ def _dists_for_level(layer, ids: jax.Array, points: jax.Array):
     return md, mmd, ptr, stages
 
 
+def _d3_dists_for_level(layer: LevelD3, ids: jax.Array, points: jax.Array,
+                        rects: jax.Array, leaf: bool):
+    """Distance score over a quantized level.
+
+    Internal levels score the dequantized (enlarged) boxes: MINDIST on a
+    superset box is a valid lower bound, so the τ prune stays admissible;
+    MINMAXDIST goes through the stored-slack Lipschitz correction
+    (``d3_slacked_upper``) to stay a sound UPPER bound despite the
+    enlargement.  The leaf level scores exact rect geometry gathered
+    through ptr — final distances match the D1 path exactly.
+    """
+    safe = jnp.maximum(ids, 0)
+    ptr = layer.ptr[safe]
+    px = points[:, 0, None, None]
+    py = points[:, 1, None, None]
+    valid = (ids >= 0)[:, :, None] & (ptr >= 0)
+    if leaf:
+        r = rects[jnp.maximum(ptr, 0)]              # (B, C, F, 4)
+        lx, ly, hx, hy = r[..., 0], r[..., 1], r[..., 2], r[..., 3]
+        md = mindist(px, py, lx, ly, hx, hy)
+        mmd = minmaxdist(px, py, lx, ly, hx, hy)
+        stages = 4
+    else:
+        lx, ly, hx, hy = d3_dequantize(layer.qlo[safe], layer.qhi[safe],
+                                       layer.scale[safe], layer.bias[safe])
+        md = mindist(px, py, lx, ly, hx, hy)
+        disp = layer.slack[safe].sum(axis=-1)[:, :, None]   # (B, C, 1)
+        mmd = d3_slacked_upper(minmaxdist(px, py, lx, ly, hx, hy), disp)
+        stages = 2
+    md = jnp.where(valid, md, DIST_PAD)
+    mmd = jnp.where(valid, mmd, DIST_PAD)
+    return md, mmd, ptr, stages
+
+
 def knn_frontier_caps(tree: RTree, k: int, slack: int = 4,
-                      min_cap: int = 64) -> Tuple[int, ...]:
+                      min_cap: int = 64, lanes: int = None) -> Tuple[int, ...]:
     """Frontier capacity entering each level (root-1 … leaf) — the unified
     geometric policy (core/caps.py)."""
+    kw = {} if lanes is None else dict(lanes=lanes)
     return caps_policy.knn_frontier_caps(tree, k, slack=slack,
-                                         min_cap=min_cap)
+                                         min_cap=min_cap, **kw)
 
 
 def make_knn_score(tree: RTree, layout: str, backend: Optional[str]):
@@ -115,25 +152,40 @@ def make_knn_score(tree: RTree, layout: str, backend: Optional[str]):
     resumable distance-browsing operator (core/knn_browse.py), which is
     exactly what makes browsing a new spec rather than a new loop.
     """
-    if backend is not None and layout != "d1":
-        raise ValueError("kernel backend requires layout d1")
+    if backend is not None and layout not in ("d1", "d3"):
+        raise ValueError("kernel backend requires layout d1 or d3")
     # kernel backends consume the level-global SoA arrays directly — don't
     # materialize (and keep alive) an unused layout copy of the tree
-    layers = None if backend is not None else tree_layout(tree, layout)
+    layers = None if backend is not None and layout != "d3" \
+        else tree_layout(tree, layout)
     levels = tree.levels if backend is not None else None
+    rects = tree.rects if layout == "d3" and backend is None else None
 
     def score(ctx, li, ids, points, leaf):
-        layers_, levels_ = ctx
+        layers_, levels_, rects_ = ctx
+        if backend is not None and layout == "d3" and not leaf:
+            from repro.kernels import ops as _kops
+            lvl3 = layers_[li]
+            md, mmd = _kops.knn_level_dists_d3(
+                ids, points, lvl3.qlo, lvl3.qhi, lvl3.scale, lvl3.bias,
+                lvl3.slack, lvl3.ptr, backend=backend)
+            return md, mmd, lvl3.ptr[jnp.maximum(ids, 0)], 2
         if backend is not None:
+            # d3 leaf rows fall through: level 0's SoA arrays are the exact
+            # rect coords grouped by leaf node, so the d1 leaf kernel is the
+            # exact re-check
             from repro.kernels import ops as _kops
             lvl = levels_[li]
             md, mmd = _kops.knn_level_dists(
                 ids, points, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child,
                 leaf=leaf, backend=backend)
             return md, mmd, lvl.child[jnp.maximum(ids, 0)], 4
+        if isinstance(layers_[li], LevelD3):
+            return _d3_dists_for_level(layers_[li], ids, points, rects_,
+                                       leaf=leaf)
         return _dists_for_level(layers_[li], ids, points)
 
-    return (layers, levels), score
+    return (layers, levels, rects), score
 
 
 def make_knn_bfs(tree: RTree, k: int, layout: str = "d1",
@@ -160,16 +212,18 @@ def make_knn_bfs(tree: RTree, k: int, layout: str = "d1",
         raise ValueError("k must be positive")
     if fused and backend is None:
         raise ValueError("fused kNN requires a kernel backend")
+    if fused and layout != "d1":
+        raise ValueError("fused kNN requires layout d1")
     ctx, score = make_knn_score(tree, layout, backend)
     if caps is None:
-        caps = knn_frontier_caps(tree, k)
+        caps = knn_frontier_caps(tree, k, lanes=layout_lanes(layout))
     caps = tuple(caps)
     if len(caps) != tree.height - 1:
         raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
 
     def fused_level(ctx_, li, ids, points, tau, leaf, cap):
         from repro.kernels import ops as _kops
-        _, levels_ = ctx_
+        _, levels_, _ = ctx_
         lvl = levels_[li]
         f = lvl.lx.shape[1]
         args = (ids, points, lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.child)

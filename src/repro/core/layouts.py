@@ -1,23 +1,45 @@
-"""Physical node storage layouts D0 / D1 / D2 (paper §2.3).
+"""Physical node storage layouts D0 / D1 / D2 / D3 (paper §2.3 + quantized).
 
 The canonical ``RTree`` stores level-major SoA arrays (D1-global).  These
-converters materialize the paper's three *node-local* physical layouts as
-flat per-level buffers, so the layout-specific operators and kernels consume
-exactly the byte order the paper describes:
+converters materialize the *node-local* physical layouts, so the
+layout-specific operators and kernels consume exactly the byte order each
+layout describes:
 
   D0  (n_nodes, F, 5)   interleaved entries (lx, ly, hx, hy, ptr)  — AoS
   D1  coords (n_nodes, 4, F) + ptr (n_nodes, F)                    — SoA
   D2  lo (n_nodes, 2F) interleaved (lx0,ly0,lx1,ly1,...),
       hi (n_nodes, 2F) interleaved (hx0,hy0,...), ptr (n_nodes, F)
+  D3  qlo/qhi (n_nodes, F) uint16 — each value packs two 8-bit per-axis
+      offset codes ((x << 8) | y) relative to the node's own MBR, plus
+      per-node f32 scale/bias/slack (n_nodes, 2) and the int32 ptr array.
 
 D2 halves the number of compare *stages* (2 instead of 4) but fits half the
 children per vector register — the paper's trade-off, preserved here so the
 benchmark reproduces the D1-vs-D2 findings.
+
+D3 trades precision for bandwidth: a child MBR costs 4 bytes instead of
+D1's 16, so ~4× more boxes stream per VMEM/cache block.  Dequantization is
+*conservative* — lo codes floor, hi codes ceil — so the reconstructed box
+always CONTAINS the true child box and a quantized prune can only
+over-approximate, never drop a result; exact geometry is re-checked at leaf
+emission.  Three numerical guarantees make this sound in f32:
+
+  * ``scale`` is a power of two and codes are <= 255 (8 significand bits),
+    so ``code * scale`` is exact and ``bias + code * scale`` is one
+    correctly-rounded add — identical under fma/reassociation, so the
+    build-time fixup comparisons see exactly the query-time value;
+  * the scale floor ``max(|lo|,|hi|) * 2^-16 / 255`` keeps the quantization
+    step far above coordinate ulp, so the ceil-side code always reaches the
+    true hi (the fixup loop converges);
+  * ``slack`` stores the *measured* per-axis max displacement between true
+    and dequantized faces over the node's valid children, which turns
+    quantized MINMAXDIST into a sound upper bound via the Lipschitz fact
+    MMD(true) <= MMD(deq) + slack_x + slack_y.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -98,6 +120,26 @@ def level_to_d2(lvl: RTreeLevel) -> LevelD2:
     return LevelD2(lo=lo, hi=hi, ptr=lvl.child, count=lvl.count)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class LevelD3:
+    qlo: jax.Array     # (n_nodes, F) uint16: (x_code << 8) | y_code, floored
+    qhi: jax.Array     # (n_nodes, F) uint16: (x_code << 8) | y_code, ceiled
+    scale: jax.Array   # (n_nodes, 2) f32 power-of-two quantization step
+    bias: jax.Array    # (n_nodes, 2) f32 node-MBR lo corner (exact)
+    slack: jax.Array   # (n_nodes, 2) f32 measured max face displacement
+    ptr: jax.Array     # (n_nodes, F) int32
+    count: jax.Array
+
+    def tree_flatten(self):
+        return ((self.qlo, self.qhi, self.scale, self.bias, self.slack,
+                 self.ptr, self.count), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
 def d0_unpack(entries: jax.Array) -> Tuple[jax.Array, ...]:
     """(n, F, 5) → (lx, ly, hx, hy, ptr_i32). Strided de-interleave — the
     extra shuffles are exactly why the paper calls D0 SIMD-hostile."""
@@ -108,7 +150,172 @@ def d0_unpack(entries: jax.Array) -> Tuple[jax.Array, ...]:
     return lx, ly, hx, hy, ptr
 
 
+# ---------------------------------------------------------------------------
+# D3 quantization
+# ---------------------------------------------------------------------------
+
+# Fixup sweeps after the initial floor/ceil code estimate.  The initial
+# estimate is at most a couple of steps off (the division is one rounded
+# f32 op); measurements show <= 2 corrections ever fire, and the
+# unconditional 0/255 fallback after the sweeps makes soundness independent
+# of this constant anyway.
+_D3_FIXUPS = 4
+
+
+def _d3_scale(node_lo: jax.Array, node_hi: jax.Array) -> jax.Array:
+    """Power-of-two quantization step per axis for node boxes.
+
+    ``raw`` is the extent spread over 255 steps, floored so the step never
+    sinks below ``max(|lo|,|hi|) * 2^-16 / 255`` (keeps deq(255) >= hi under
+    any f32 rounding: the margin is ~64 coordinate ulps) nor below a tiny
+    absolute floor (degenerate zero boxes at the origin).  Rounding up to a
+    power of two makes ``code * scale`` exact for 8-bit codes.
+    """
+    mag = jnp.maximum(jnp.abs(node_lo), jnp.abs(node_hi))
+    raw = jnp.maximum(node_hi - node_lo, mag * jnp.float32(2.0 ** -16))
+    raw = jnp.maximum(raw, jnp.float32(2.0 ** -100)) / jnp.float32(255.0)
+    _, e = jnp.frexp(raw)          # raw = m * 2^e, m in [0.5, 1)
+    return jnp.ldexp(jnp.float32(1.0), e)
+
+
+def _d3_axis_codes(v: jax.Array, bias: jax.Array, scale: jax.Array,
+                   hi_side: bool) -> jax.Array:
+    """Conservative 8-bit codes for one axis of one corner.
+
+    ``v`` is (n, F); ``bias``/``scale`` are (n, 1).  lo codes floor and are
+    fixed DOWN until ``deq(c) <= v`` (fallback: code 0, which dequantizes to
+    the node lo exactly and is always <= any contained child coordinate);
+    hi codes ceil and are fixed UP until ``deq(c) >= v`` (fallback: 255,
+    whose dequantization clears the node hi by construction of the scale).
+    All comparisons use the exact query-time value ``bias + c * scale``.
+    """
+    t = (v - bias) / scale
+    c = jnp.ceil(t) if hi_side else jnp.floor(t)
+    c = jnp.clip(c, 0.0, 255.0)
+    for _ in range(_D3_FIXUPS):
+        deq = bias + c * scale
+        if hi_side:
+            c = jnp.where(deq < v, jnp.minimum(c + 1.0, 255.0), c)
+        else:
+            c = jnp.where(deq > v, jnp.maximum(c - 1.0, 0.0), c)
+    deq = bias + c * scale
+    if hi_side:
+        c = jnp.where(deq < v, jnp.float32(255.0), c)
+    else:
+        c = jnp.where(deq > v, jnp.float32(0.0), c)
+    return c.astype(jnp.int32)
+
+
+def d3_quantize(lx: jax.Array, ly: jax.Array, hx: jax.Array, hy: jax.Array,
+                node_mbr: jax.Array, valid: jax.Array):
+    """Quantize child rects (n, F) against their own node boxes (n, 4).
+
+    Children must lie inside their node's MBR (the STR build guarantees
+    node_mbr is the exact min/max over members; ``rtree.validate_structure``
+    asserts it).  Returns ``(qlo, qhi, scale, bias, slack)`` where qlo/qhi
+    are (n, F) uint16 packed ``(x_code << 8) | y_code`` and scale/bias/slack
+    are (n, 2) f32.  ``slack`` is the measured max displacement between true
+    and dequantized faces per axis over ``valid`` children (0 if none).
+    """
+    bias = node_mbr[:, 0:2].astype(jnp.float32)                # (n, 2)
+    scale = _d3_scale(bias, node_mbr[:, 2:4].astype(jnp.float32))
+    bx, by = bias[:, 0:1], bias[:, 1:2]
+    sx, sy = scale[:, 0:1], scale[:, 1:2]
+    clx = _d3_axis_codes(lx, bx, sx, hi_side=False)
+    cly = _d3_axis_codes(ly, by, sy, hi_side=False)
+    chx = _d3_axis_codes(hx, bx, sx, hi_side=True)
+    chy = _d3_axis_codes(hy, by, sy, hi_side=True)
+    qlo = ((clx.astype(jnp.uint16) << 8) | cly.astype(jnp.uint16))
+    qhi = ((chx.astype(jnp.uint16) << 8) | chy.astype(jnp.uint16))
+
+    def disp(c_lo, c_hi, v_lo, v_hi, b, s):
+        d = jnp.maximum(v_lo - (b + c_lo.astype(jnp.float32) * s),
+                        (b + c_hi.astype(jnp.float32) * s) - v_hi)
+        return jnp.max(jnp.where(valid, d, 0.0), axis=1)
+    slack = jnp.stack([disp(clx, chx, lx, hx, bx, sx),
+                       disp(cly, chy, ly, hy, by, sy)], axis=1)
+    return qlo, qhi, scale, bias, slack
+
+
+def d3_dequantize(qlo: jax.Array, qhi: jax.Array, scale: jax.Array,
+                  bias: jax.Array) -> Tuple[jax.Array, ...]:
+    """Reconstruct conservative boxes from packed codes.
+
+    ``qlo``/``qhi`` are (..., F) uint16; ``scale``/``bias`` are (..., 2)
+    broadcast against them.  Returns (lx, ly, hx, hy), each (..., F) f32,
+    with lx/ly <= and hx/hy >= the true child faces.
+    """
+    bx, by = bias[..., 0:1], bias[..., 1:2]
+    sx, sy = scale[..., 0:1], scale[..., 1:2]
+    lx = bx + (qlo >> 8).astype(jnp.float32) * sx
+    ly = by + (qlo & 0xFF).astype(jnp.float32) * sy
+    hx = bx + (qhi >> 8).astype(jnp.float32) * sx
+    hy = by + (qhi & 0xFF).astype(jnp.float32) * sy
+    return lx, ly, hx, hy
+
+
+def d3_slacked_upper(sq_dist: jax.Array, disp: jax.Array) -> jax.Array:
+    """Sound squared-distance upper bound for the TRUE box given a squared
+    bound ``sq_dist`` computed on the dequantized (enlarged) box and the
+    node's total face displacement ``disp`` (= slack_x + slack_y, >= 0,
+    broadcastable).  Perturbing each face by at most its axis slack moves
+    any min/max-of-faces distance by at most ``disp`` in the sqrt domain;
+    the (1 + 2^-16) factor absorbs the f32 rounding of sqrt/add/square.
+    Callers must re-mask invalid lanes (the slacked pad value stays finite
+    but is no longer the exact DIST_PAD sentinel)."""
+    up = jnp.sqrt(jnp.maximum(sq_dist, 0.0)) + disp
+    return up * up * jnp.float32(1.0 + 2.0 ** -16)
+
+
+def level_to_d3(lvl: RTreeLevel) -> LevelD3:
+    qlo, qhi, scale, bias, slack = d3_quantize(
+        lvl.lx, lvl.ly, lvl.hx, lvl.hy, lvl.node_mbr, lvl.child >= 0)
+    return LevelD3(qlo=qlo, qhi=qhi, scale=scale, bias=bias, slack=slack,
+                   ptr=lvl.child, count=lvl.count)
+
+
+# ---------------------------------------------------------------------------
+# layout registry — the one source of truth for valid layout names, their
+# level converters, and their per-layout frontier lane widths (a D3 node row
+# streams 4-byte boxes instead of 16-byte ones, so its frontiers round to
+# twice the f32 lane width; d0-d2 keep the historical 128).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayoutSpec:
+    name: str
+    converter: Callable[[RTreeLevel], object]
+    lanes: int
+
+
+LAYOUTS: Dict[str, LayoutSpec] = {
+    "d0": LayoutSpec("d0", level_to_d0, LANES),
+    "d1": LayoutSpec("d1", level_to_d1, LANES),
+    "d2": LayoutSpec("d2", level_to_d2, LANES),
+    "d3": LayoutSpec("d3", level_to_d3, 2 * LANES),
+}
+
+
+def layout_names() -> Tuple[str, ...]:
+    """Valid physical layout names, registry order."""
+    return tuple(LAYOUTS)
+
+
+def _layout_spec(layout: str) -> LayoutSpec:
+    try:
+        return LAYOUTS[layout]
+    except KeyError:
+        raise ValueError(
+            f"unknown layout {layout!r}: valid layouts are "
+            f"{', '.join(LAYOUTS)}") from None
+
+
+def layout_lanes(layout: str) -> int:
+    """Frontier lane width for ``layout`` (caps round up to this)."""
+    return _layout_spec(layout).lanes
+
+
 def tree_layout(tree: RTree, layout: str):
     """Materialize every level of ``tree`` in the requested physical layout."""
-    fn = {"d0": level_to_d0, "d1": level_to_d1, "d2": level_to_d2}[layout]
+    fn = _layout_spec(layout).converter
     return tuple(fn(lvl) for lvl in tree.levels)

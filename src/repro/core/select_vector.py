@@ -38,7 +38,8 @@ from .compaction import compact_1d
 from .counters import Counters, StageModel
 from .flat import FlatTree
 from .geometry import intersects
-from .layouts import LevelD0, LevelD1, LevelD2, d0_unpack, tree_layout
+from .layouts import (LevelD0, LevelD1, LevelD2, LevelD3, d0_unpack,
+                      d3_dequantize, layout_lanes, tree_layout)
 from .rtree import RTree
 
 
@@ -86,12 +87,42 @@ def _masks_for_level(layer, ids: jax.Array, queries: jax.Array):
     return m, ptr, stages
 
 
+def _d3_masks_for_level(layer: LevelD3, ids: jax.Array, queries: jax.Array,
+                        rects: jax.Array, leaf: bool):
+    """Select predicate over a quantized level.
+
+    Internal levels test the dequantized (conservatively enlarged) boxes —
+    the mask can only over-approximate, never drop a qualifying child.
+    The leaf level re-checks EXACT rect geometry (gathered through ptr), so
+    emitted ids are bit-identical to the D1 path: extra leaf nodes admitted
+    by the quantized internal prune contribute no rects, and compaction
+    preserves the shared relative order of the real ones.
+    """
+    safe = jnp.maximum(ids, 0)
+    valid = (ids >= 0)[:, :, None]
+    ptr = layer.ptr[safe]
+    if leaf:
+        r = rects[jnp.maximum(ptr, 0)]              # (B, C, F, 4)
+        lx, ly, hx, hy = r[..., 0], r[..., 1], r[..., 2], r[..., 3]
+        stages = 4
+    else:
+        lx, ly, hx, hy = d3_dequantize(layer.qlo[safe], layer.qhi[safe],
+                                       layer.scale[safe], layer.bias[safe])
+        stages = 2                                  # two packed code streams
+    m = intersects(queries[:, 0, None, None], queries[:, 1, None, None],
+                   queries[:, 2, None, None], queries[:, 3, None, None],
+                   lx, ly, hx, hy)
+    m = m & valid & (ptr >= 0)
+    return m, ptr, stages
+
+
 def frontier_caps(tree: RTree, result_cap: int, slack: int = 4,
-                  min_cap: int = 128) -> Tuple[int, ...]:
+                  min_cap: int = 128, lanes: int = None) -> Tuple[int, ...]:
     """Frontier capacity entering each level (root-1 … leaf) + result cap —
     the unified geometric policy (core/caps.py)."""
+    kw = {} if lanes is None else dict(lanes=lanes)
     return caps_policy.select_frontier_caps(tree, result_cap, slack=slack,
-                                            min_cap=min_cap)
+                                            min_cap=min_cap, **kw)
 
 
 def make_select_bfs(tree: RTree, layout: str = "d1", result_cap: int = 4096,
@@ -115,23 +146,35 @@ def make_select_bfs(tree: RTree, layout: str = "d1", result_cap: int = 4096,
     Returns fn(queries) → (ids (B, result_cap), counts (B,), Counters)
     (ids omitted in count_only mode).
     """
-    if backend is not None and layout != "d1":
-        raise ValueError("kernel backend requires layout d1")
+    if backend is not None and layout not in ("d1", "d3"):
+        raise ValueError("kernel backend requires layout d1 or d3")
     if fused and backend is None:
         raise ValueError("fused select requires a kernel backend")
     layers = tree_layout(tree, layout)
     if caps is None:
-        caps = frontier_caps(tree, result_cap)
+        caps = frontier_caps(tree, result_cap, lanes=layout_lanes(layout))
     caps = tuple(caps)
     if len(caps) != tree.height - 1:
         raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
     levels = tree.levels if backend is not None else None
+    rects = tree.rects if layout == "d3" and backend is None else None
 
     def score(ctx, li, frontier, qargs):
-        layers_, levels_ = ctx
+        layers_, levels_, rects_ = ctx
         ids, queries = frontier[0], qargs[0]
         b = queries.shape[0]
-        if backend is not None:
+        if backend is not None and layout == "d3" and li > 0:
+            from repro.kernels import ops as _kops
+            lvl3 = layers_[li]
+            mask = _kops.select_level_masks_d3(
+                ids, queries, lvl3.qlo, lvl3.qhi, lvl3.scale, lvl3.bias,
+                lvl3.ptr, backend=backend).astype(bool)
+            ptr = lvl3.ptr[jnp.maximum(ids, 0)]
+            stages = 2
+        elif backend is not None:
+            # d3 leaf rows fall through here: level 0's SoA arrays ARE the
+            # exact rect coords grouped by leaf node, so the d1 kernel is
+            # the exact leaf re-check
             from repro.kernels import ops as _kops
             lvl = levels_[li]
             mask = _kops.select_level_masks(
@@ -139,6 +182,9 @@ def make_select_bfs(tree: RTree, layout: str = "d1", result_cap: int = 4096,
                 lvl.child, backend=backend).astype(bool)
             ptr = lvl.child[jnp.maximum(ids, 0)]
             stages = 4
+        elif isinstance(layers_[li], LevelD3):
+            mask, ptr, stages = _d3_masks_for_level(
+                layers_[li], ids, queries, rects_, leaf=(li == 0))
         else:
             mask, ptr, stages = _masks_for_level(ids=ids, queries=queries,
                                                  layer=layers_[li])
@@ -147,8 +193,15 @@ def make_select_bfs(tree: RTree, layout: str = "d1", result_cap: int = 4096,
 
     def fused_level(ctx, li, frontier, qargs, cap):
         from repro.kernels import ops as _kops
-        _, levels_ = ctx
+        layers_, levels_, _ = ctx
         ids, queries = frontier[0], qargs[0]
+        if layout == "d3" and li > 0:
+            lvl3 = layers_[li]
+            f = lvl3.ptr.shape[1]
+            nxt, qcnt, o = _kops.select_level_fused_d3(
+                ids, queries, lvl3.qlo, lvl3.qhi, lvl3.scale, lvl3.bias,
+                lvl3.ptr, cap=cap, backend=backend)
+            return (nxt,), qcnt, o, f, 2, None
         lvl = levels_[li]
         f = lvl.lx.shape[1]
         nxt, qcnt, o = _kops.select_level_fused(
@@ -160,7 +213,7 @@ def make_select_bfs(tree: RTree, layout: str = "d1", result_cap: int = 4096,
         SELECT_SPEC, height=tree.height, caps=caps, result_cap=result_cap,
         score=score, fused_level=fused_level if fused else None,
         count_only=count_only)
-    ctx = (layers, levels)
+    ctx = (layers, levels, rects)
 
     if count_only:
         def fn(queries: jax.Array):

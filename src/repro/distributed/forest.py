@@ -141,17 +141,24 @@ def pack_forest(trees: Sequence[RTree], ids: Sequence[np.ndarray],
             hy=jnp.asarray(hy), child=jnp.asarray(child),
             count=jnp.asarray(count), node_mbr=jnp.asarray(node_mbr)))
 
-    n_max_rects = max(len(i) for i in ids)
+    n_max_rects = max(max(len(i) for i in ids),
+                      max(t.rects.shape[0] for t in trees))
     ids_map = np.full((p, n_max_rects), -1, np.int32)
     for pi, gl in enumerate(ids):
         ids_map[pi, :len(gl)] = gl
+    # The quantized D3 layout re-checks exact leaf geometry through
+    # ``tree.rects``, so the stacked forest carries each partition's data
+    # rects padded to a shared shape (empty-box rows are unreachable: no
+    # leaf ptr refers to them).  Same memory order as the leaf level
+    # arrays, and the P(axis) sharding prefix applies unchanged.
+    rects = np.empty((p, n_max_rects, 4), dtype)
+    rects[:] = np.array([lo_pad, lo_pad, hi_pad, hi_pad], dtype)
+    for pi, t in enumerate(trees):
+        rects[pi, :t.rects.shape[0]] = np.asarray(t.rects)
     mbrs = np.asarray(levels[-1].node_mbr[:, 0, :])
     stacked = RTree(
         levels=tuple(levels),
-        # engines never touch .rects; a zero-row leaf keeps the pytree
-        # shape (and the P(axis) sharding prefix) valid without storing a
-        # padded copy of every partition's data rects
-        rects=jnp.zeros((p, 0, 4), dtype),
+        rects=jnp.asarray(rects),
         fanout=fanout, sort_key=trees[0].sort_key)
     return PackedForest(tree=stacked, ids_map=ids_map, mbrs=mbrs,
                         n_real=p_real)

@@ -51,9 +51,16 @@ class Partition:
 
 
 class SpatialShards:
-    def __init__(self, partitions: List[Partition], fanout: int):
+    def __init__(self, partitions: List[Partition], fanout: int,
+                 layout: str = "d1"):
+        from repro.core.layouts import layout_lanes
+        layout_lanes(layout)           # validate the name early (ValueError)
         self.partitions = partitions
         self.fanout = fanout
+        # fleet-wide physical node layout: injected into every engine /
+        # mesh-program build, so the whole serving surface (select, join,
+        # the distance operators, browse) runs one consistent layout
+        self.layout = layout
         self.router_mbrs = np.stack([p.mbr for p in partitions])
         # one compiled-engine cache for every operator, keyed by
         # (spec name, partition, build params) through the spec registry —
@@ -70,7 +77,7 @@ class SpatialShards:
     @classmethod
     def build(cls, rects: np.ndarray, n_partitions: int, fanout: int = 64,
               sort_key: Optional[str] = None,
-              mesh=None) -> "SpatialShards":
+              mesh=None, layout: str = "d1") -> "SpatialShards":
         n = len(rects)
         cx = (rects[:, 0] + rects[:, 2]) / 2
         cy = (rects[:, 1] + rects[:, 3]) / 2
@@ -97,10 +104,19 @@ class SpatialShards:
                                rects.dtype)
                 parts.append(Partition(tree=tree, mbr=mbr, offset=len(parts),
                                        ids=ids))
-        out = cls(parts, fanout)
+        out = cls(parts, fanout, layout=layout)
         if mesh is not None:
             out.enable_mesh(mesh)
         return out
+
+    def _layout_params(self, params: dict) -> dict:
+        """Inject the fleet layout into engine build params.  d1 (the
+        default) adds nothing, so historical cache keys and traces are
+        untouched."""
+        if self.layout != "d1":
+            params = dict(params)
+            params.setdefault("layout", self.layout)
+        return params
 
     # ------------------------------------------------------------------
     # mesh dispatcher
@@ -150,7 +166,8 @@ class SpatialShards:
         flip this object's operators off the mesh path."""
         if not self.mesh_enabled:
             return self
-        twin = SpatialShards(self.partitions, self.fanout)
+        twin = SpatialShards(self.partitions, self.fanout,
+                             layout=self.layout)
         twin._engines = self._engines
         return twin
 
@@ -183,13 +200,15 @@ class SpatialShards:
         forests = forest_mod.replicate_forest(packed, meshes, axis=axis)
         reps = []
         for mesh, fst in zip(meshes, forests):
-            rep = SpatialShards(self.partitions, self.fanout)
+            rep = SpatialShards(self.partitions, self.fanout,
+                                layout=self.layout)
             rep._mesh, rep._mesh_axis = mesh, axis
             rep._forest = fst
             reps.append(rep)
         return reps
 
     def _mesh_program(self, op: str, outer_tree=None, **params):
+        params = self._layout_params(params)
         key = (op, tuple(sorted(params.items())),
                None if outer_tree is None else id(outer_tree))
         if key not in self._mesh_programs:
@@ -234,6 +253,7 @@ class SpatialShards:
         """The compiled engine of registered operator ``op`` for partition
         ``pi``, built through the spec registry (traversal.build) and cached
         per build params; jax.jit retraces per batch shape on its own."""
+        params = self._layout_params(params)
         key = (op, pi, tuple(sorted(params.items())))
         if key not in self._engines:
             self._engines[key] = traversal.build(
@@ -301,7 +321,8 @@ class SpatialShards:
         ``sort_key='lx'`` (pass a pre-built probe tree; the fleet needs
         ``SpatialShards.build(..., sort_key='lx')``)."""
         import jax.numpy as jnp
-        jn_params = dict(result_cap=result_cap, o3=o3, o4=o4)
+        jn_params = self._layout_params(
+            dict(result_cap=result_cap, o3=o3, o4=o4))
         probe_tree = probe if isinstance(probe, rtree.RTree) else \
             rtree.build_rtree(np.asarray(probe, np.float32),
                               fanout=self.fanout,
@@ -501,7 +522,7 @@ class SpatialShards:
         if k not in self._browse_starts:
             self._browse_starts[k] = knn_browse.make_sharded_browse(
                 self._forest.tree, self._forest.ids_map, k,
-                mesh=self._mesh, axis=self._mesh_axis)
+                mesh=self._mesh, axis=self._mesh_axis, layout=self.layout)
         return self._browse_starts[k](np.asarray(points, np.float32))
 
     # ------------------------------------------------------------------

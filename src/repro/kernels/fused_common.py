@@ -63,3 +63,26 @@ def chunk_tile(raw_ref, node_refs, bi, ci, r):
     row_ok = jnp.stack([raw_ref[bi, ci * r + i] for i in range(r)]) >= 0
     valid = (child >= 0) & row_ok[:, None]
     return lx, ly, hx, hy, child, valid
+
+
+def d3_chunk_tile(raw_ref, node_refs, bi, ci, r):
+    """D3 analogue of ``chunk_tile``: each frontier row streams the two
+    packed-uint16 code rows (qlo, qhi — 4 bytes/child instead of D1's 16),
+    the (1, 2) per-node scale/bias rows, and the ptr row; the codes are
+    dequantized in-register to (R, F) conservative boxes.  The arithmetic
+    (bias + code * pow2-scale) is exact, so the tile matches
+    ``core.layouts.d3_dequantize`` bitwise."""
+    qlo = stack_rows(node_refs[0::5]).astype(jnp.int32)   # (R, F)
+    qhi = stack_rows(node_refs[1::5]).astype(jnp.int32)
+    sc = stack_rows(node_refs[2::5])                      # (R, 2)
+    bs = stack_rows(node_refs[3::5])
+    ptr = stack_rows(node_refs[4::5])
+    sx, sy = sc[:, 0:1], sc[:, 1:2]
+    bx, by = bs[:, 0:1], bs[:, 1:2]
+    lx = bx + (qlo >> 8).astype(jnp.float32) * sx
+    ly = by + (qlo & 0xFF).astype(jnp.float32) * sy
+    hx = bx + (qhi >> 8).astype(jnp.float32) * sx
+    hy = by + (qhi & 0xFF).astype(jnp.float32) * sy
+    row_ok = jnp.stack([raw_ref[bi, ci * r + i] for i in range(r)]) >= 0
+    valid = (ptr >= 0) & row_ok[:, None]
+    return lx, ly, hx, hy, ptr, valid

@@ -24,12 +24,16 @@ from .rtree_join import join_level_fused as _join_fused_pallas
 from .rtree_join import join_pair_masks as _join_pallas
 from .rtree_knn import knn_leaf_fused as _knn_leaf_fused_pallas
 from .rtree_knn import knn_level_dists as _knn_pallas
+from .rtree_knn import knn_level_dists_d3 as _knn_d3_pallas
 from .rtree_knn import knn_level_fused as _knn_fused_pallas
 from .rtree_knn_join import knn_join_leaf_fused as _knn_join_leaf_fused_pallas
 from .rtree_knn_join import knn_join_level_dists as _knn_join_pallas
+from .rtree_knn_join import knn_join_level_dists_d3 as _knn_join_d3_pallas
 from .rtree_knn_join import knn_join_level_fused as _knn_join_fused_pallas
 from .rtree_select import select_level_fused as _select_fused_pallas
+from .rtree_select import select_level_fused_d3 as _select_fused_d3_pallas
 from .rtree_select import select_level_masks as _select_pallas
+from .rtree_select import select_level_masks_d3 as _select_d3_pallas
 
 
 def _on_tpu() -> bool:
@@ -60,10 +64,17 @@ def _join_level_fused_ref(o_ids, i_ids, alive_cnt, flip_max, o_coords,
 _KERNELS = {
     ("select", "score"): (_ref.select_level_masks_ref, _select_pallas),
     ("select", "fused"): (_ref.select_level_fused_ref, _select_fused_pallas),
+    ("select", "score_d3"): (_ref.select_level_masks_d3_ref,
+                             _select_d3_pallas),
+    ("select", "fused_d3"): (_ref.select_level_fused_d3_ref,
+                             _select_fused_d3_pallas),
     ("knn", "score"): (_ref.knn_level_dists_ref, _knn_pallas),
+    ("knn", "score_d3"): (_ref.knn_level_dists_d3_ref, _knn_d3_pallas),
     ("knn", "fused"): (_ref.knn_level_fused_ref, _knn_fused_pallas),
     ("knn", "fused_leaf"): (_ref.knn_leaf_fused_ref, _knn_leaf_fused_pallas),
     ("knn_join", "score"): (_ref.knn_join_level_dists_ref, _knn_join_pallas),
+    ("knn_join", "score_d3"): (_ref.knn_join_level_dists_d3_ref,
+                               _knn_join_d3_pallas),
     ("knn_join", "fused"): (_ref.knn_join_level_fused_ref,
                             _knn_join_fused_pallas),
     ("knn_join", "fused_leaf"): (_ref.knn_join_leaf_fused_ref,
@@ -93,6 +104,42 @@ def select_level_masks(ids, queries, lx, ly, hx, hy, child,
     """BFS level-step qualify masks: (B,C) ids × (B,4) queries → (B,C,F)."""
     return kernel_call("select", "score", ids, queries, lx, ly, hx, hy,
                        child, backend=backend)
+
+
+def select_level_masks_d3(ids, queries, qlo, qhi, scale, bias, ptr,
+                          backend: str = "auto"):
+    """Quantized-level qualify masks: (B,C) ids × (B,4) queries over packed
+    uint16 code rows → (B,C,F) conservative bitmask (superset of the exact
+    D1 mask; the operator re-checks exact geometry at the leaf)."""
+    return kernel_call("select", "score_d3", ids, queries, qlo, qhi, scale,
+                       bias, ptr, backend=backend)
+
+
+def select_level_fused_d3(ids, queries, qlo, qhi, scale, bias, ptr, *,
+                          cap: int, backend: str = "auto"):
+    """Fused quantized select level: streams the packed uint16 code blocks
+    and compress-stores qualifying children in-kernel — contract as
+    ``select_level_fused``."""
+    return kernel_call("select", "fused_d3", ids, queries, qlo, qhi, scale,
+                       bias, ptr, cap=cap, backend=backend)
+
+
+def knn_level_dists_d3(ids, points, qlo, qhi, scale, bias, slack, ptr,
+                       backend: str = "auto"):
+    """Quantized kNN level distances: → (MINDIST lower bound, slack-
+    corrected MINMAXDIST upper bound) each (B,C,F) f32, DIST_PAD on invalid
+    lanes.  Internal levels only — leaf rows go through the exact D1
+    kernel."""
+    return kernel_call("knn", "score_d3", ids, points, qlo, qhi, scale,
+                       bias, slack, ptr, backend=backend)
+
+
+def knn_join_level_dists_d3(ids, qrects, qlo, qhi, scale, bias, slack, ptr,
+                            backend: str = "auto"):
+    """Quantized kNN-join level pair distances (rect queries): contract as
+    ``knn_level_dists_d3``."""
+    return kernel_call("knn_join", "score_d3", ids, qrects, qlo, qhi, scale,
+                       bias, slack, ptr, backend=backend)
 
 
 def knn_level_dists(ids, points, lx, ly, hx, hy, child, *,

@@ -20,6 +20,16 @@ from repro.core.compaction import beam_rows, compact_pairs, compact_rows
 from repro.core.geometry import (DIST_PAD, DIST_VALID_MAX, intersects,
                                  mindist, mindist_rect, minmaxdist,
                                  minmaxdist_rect)
+from repro.core.layouts import d3_dequantize, d3_slacked_upper
+
+
+def _d3_gather_boxes(ids, qlo, qhi, scale, bias):
+    """Gather + dequantize one frontier's node rows of a D3 level.
+
+    Uses the shared ``d3_dequantize`` so the refs can never drift from the
+    operator jnp path (same exact bias + code * pow2-scale arithmetic)."""
+    safe = jnp.maximum(ids, 0)                      # (B, C)
+    return d3_dequantize(qlo[safe], qhi[safe], scale[safe], bias[safe])
 
 
 def knn_join_level_dists_ref(ids, qrects, lx, ly, hx, hy, child, *,
@@ -73,6 +83,70 @@ def select_level_masks_ref(ids, queries, lx, ly, hx, hy, child):
     m = intersects(qlx, qly, qhx, qhy, glx, gly, ghx, ghy)
     m = m & (child[safe] >= 0) & (ids >= 0)[:, :, None]
     return m.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# D3 quantized-layout twins (internal levels only: the operators route leaf
+# rows through the exact D1 kernels, so no leaf variant exists here)
+# ---------------------------------------------------------------------------
+
+def select_level_masks_d3_ref(ids, queries, qlo, qhi, scale, bias, ptr):
+    """Oracle for kernels.rtree_select.select_level_masks_d3: the intersect
+    predicate over dequantized (conservatively enlarged) boxes."""
+    lx, ly, hx, hy = _d3_gather_boxes(ids, qlo, qhi, scale, bias)
+    qlx = queries[:, 0, None, None]
+    qly = queries[:, 1, None, None]
+    qhx = queries[:, 2, None, None]
+    qhy = queries[:, 3, None, None]
+    m = intersects(qlx, qly, qhx, qhy, lx, ly, hx, hy)
+    m = m & (ptr[jnp.maximum(ids, 0)] >= 0) & (ids >= 0)[:, :, None]
+    return m.astype(jnp.int32)
+
+
+def select_level_fused_d3_ref(ids, queries, qlo, qhi, scale, bias, ptr, *,
+                              cap: int):
+    """Twin of kernels.rtree_select.select_level_fused_d3: quantized masks +
+    compress-store compaction over the flat level."""
+    b = ids.shape[0]
+    mask = select_level_masks_d3_ref(ids, queries, qlo, qhi, scale, bias,
+                                     ptr).astype(bool)
+    p = ptr[jnp.maximum(ids, 0)]
+    return compact_rows(p.reshape(b, -1), mask.reshape(b, -1), cap)
+
+
+def knn_level_dists_d3_ref(ids, points, qlo, qhi, scale, bias, slack, ptr):
+    """Oracle for kernels.rtree_knn.knn_level_dists_d3: MINDIST on the
+    enlarged boxes (admissible lower bound) + slack-corrected MINMAXDIST
+    (sound upper bound)."""
+    safe = jnp.maximum(ids, 0)
+    lx, ly, hx, hy = _d3_gather_boxes(ids, qlo, qhi, scale, bias)
+    px = points[:, 0, None, None]
+    py = points[:, 1, None, None]
+    md = mindist(px, py, lx, ly, hx, hy)
+    disp = slack[safe].sum(axis=-1)[:, :, None]
+    mmd = d3_slacked_upper(minmaxdist(px, py, lx, ly, hx, hy), disp)
+    valid = (ids >= 0)[:, :, None] & (ptr[safe] >= 0)
+    pad = jnp.float32(DIST_PAD)
+    return jnp.where(valid, md, pad), jnp.where(valid, mmd, pad)
+
+
+def knn_join_level_dists_d3_ref(ids, qrects, qlo, qhi, scale, bias, slack,
+                                ptr):
+    """Oracle for kernels.rtree_knn_join.knn_join_level_dists_d3 (rect
+    queries; bounds as ``knn_level_dists_d3_ref``)."""
+    safe = jnp.maximum(ids, 0)
+    lx, ly, hx, hy = _d3_gather_boxes(ids, qlo, qhi, scale, bias)
+    qlx = qrects[:, 0, None, None]
+    qly = qrects[:, 1, None, None]
+    qhx = qrects[:, 2, None, None]
+    qhy = qrects[:, 3, None, None]
+    md = mindist_rect(qlx, qly, qhx, qhy, lx, ly, hx, hy)
+    disp = slack[safe].sum(axis=-1)[:, :, None]
+    mmd = d3_slacked_upper(
+        minmaxdist_rect(qlx, qly, qhx, qhy, lx, ly, hx, hy), disp)
+    valid = (ids >= 0)[:, :, None] & (ptr[safe] >= 0)
+    pad = jnp.float32(DIST_PAD)
+    return jnp.where(valid, md, pad), jnp.where(valid, mmd, pad)
 
 
 # ---------------------------------------------------------------------------

@@ -55,6 +55,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.geometry import DIST_PAD, DIST_VALID_MAX, mindist, minmaxdist
+from repro.core.layouts import d3_slacked_upper
 
 from .fused_common import chunk_tile as _chunk_tile
 from .fused_common import pad_frontier as _pad_frontier
@@ -149,6 +150,86 @@ def knn_level_dists(ids, points, lx, ly, hx, hy, child, *,
     invalid = (ids < 0)[:, :, None]
     if leaf:
         return jnp.where(invalid, _PAD, out[0]), None
+    return (jnp.where(invalid, _PAD, out[0]),
+            jnp.where(invalid, _PAD, out[1]))
+
+
+# ---------------------------------------------------------------------------
+# D3 quantized-layout kernel: the node block streams two packed-uint16 code
+# rows (4 bytes per child MBR — ~4x the children per DMA'd block) plus the
+# (1, 2) scale/bias/slack rows; boxes are dequantized in-register.  MINDIST
+# on the conservatively enlarged boxes is an admissible lower bound;
+# MINMAXDIST goes through the stored-slack Lipschitz correction
+# (core.layouts.d3_slacked_upper) to stay a sound upper bound.  Internal
+# levels only — the operators route leaf rows through the exact D1 kernel.
+# ---------------------------------------------------------------------------
+
+def _knn_d3_kernel(ids_ref, p_ref, qlo_ref, qhi_ref, sc_ref, bi_ref, sl_ref,
+                   ptr_ref, md_ref, mmd_ref):
+    px = p_ref[0, 0]
+    py = p_ref[0, 1]
+    qlo = qlo_ref[0, :].astype(jnp.int32)
+    qhi = qhi_ref[0, :].astype(jnp.int32)
+    sx, sy = sc_ref[0, 0], sc_ref[0, 1]
+    bx, by = bi_ref[0, 0], bi_ref[0, 1]
+    # exact dequantization (8-bit codes x pow2 scale) — bitwise identical to
+    # the jnp layout path, so kernel and ref twin can never drift
+    lx = bx + (qlo >> 8).astype(jnp.float32) * sx
+    ly = by + (qlo & 0xFF).astype(jnp.float32) * sy
+    hx = bx + (qhi >> 8).astype(jnp.float32) * sx
+    hy = by + (qhi & 0xFF).astype(jnp.float32) * sy
+    md = mindist(px, py, lx, ly, hx, hy)
+    disp = sl_ref[0, 0] + sl_ref[0, 1]
+    mmd = d3_slacked_upper(minmaxdist(px, py, lx, ly, hx, hy), disp)
+    valid = ptr_ref[0, :] >= 0
+    md_ref[0, 0, :] = jnp.where(valid, md, _PAD)
+    mmd_ref[0, 0, :] = jnp.where(valid, mmd, _PAD)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def knn_level_dists_d3(ids, points, qlo, qhi, scale, bias, slack, ptr, *,
+                       interpret: bool = True):
+    """Score one quantized BFS level for a batch of kNN queries.
+
+    ids:     (B, C) int32 frontier node ids (-1 pad) — scalar-prefetched.
+    points:  (B, 2) query points.
+    qlo/qhi: (N, F) uint16 packed per-axis code rows.
+    scale/bias/slack: (N, 2) f32 per-node quantization params.
+    ptr:     (N, F) int32 child ids.
+    → (mindist (B, C, F) lower bound, slacked minmaxdist (B, C, F) upper
+    bound) f32, DIST_PAD on invalid lanes.
+    """
+    b, c = ids.shape
+    n, f = qlo.shape
+    safe_ids = jnp.maximum(ids, 0)
+
+    def node_map(bi, ci, ids_s):
+        return (ids_s[bi, ci], 0)
+
+    out_spec = pl.BlockSpec((1, 1, f), lambda bi, ci, ids_s: (bi, ci, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, c),
+        in_specs=[
+            pl.BlockSpec((1, 2), lambda bi, ci, ids_s: (bi, 0)),
+            pl.BlockSpec((1, f), node_map),
+            pl.BlockSpec((1, f), node_map),
+            pl.BlockSpec((1, 2), node_map),
+            pl.BlockSpec((1, 2), node_map),
+            pl.BlockSpec((1, 2), node_map),
+            pl.BlockSpec((1, f), node_map),
+        ],
+        out_specs=[out_spec, out_spec],
+    )
+    shape = jax.ShapeDtypeStruct((b, c, f), jnp.float32)
+    fn = pl.pallas_call(
+        _knn_d3_kernel,
+        grid_spec=grid_spec,
+        out_shape=[shape, shape],
+        interpret=interpret,
+    )
+    out = fn(safe_ids, points, qlo, qhi, scale, bias, slack, ptr)
+    invalid = (ids < 0)[:, :, None]
     return (jnp.where(invalid, _PAD, out[0]),
             jnp.where(invalid, _PAD, out[1]))
 

@@ -36,6 +36,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.geometry import DIST_PAD, mindist_rect, minmaxdist_rect
+from repro.core.layouts import d3_slacked_upper
 
 from .rtree_knn import fused_inner_call, fused_leaf_call
 
@@ -129,6 +130,77 @@ def knn_join_level_dists(ids, qrects, lx, ly, hx, hy, child, *,
     invalid = (ids < 0)[:, :, None]
     if leaf:
         return jnp.where(invalid, _PAD, out[0]), None
+    return (jnp.where(invalid, _PAD, out[0]),
+            jnp.where(invalid, _PAD, out[1]))
+
+
+# ---------------------------------------------------------------------------
+# D3 quantized-layout kernel (rect-query analogue of rtree_knn's — packed
+# uint16 code streams, in-register dequantization, slack-corrected
+# MINMAXDIST; internal levels only, the leaf re-checks through the exact
+# D1 kernel)
+# ---------------------------------------------------------------------------
+
+def _knn_join_d3_kernel(ids_ref, q_ref, qlo_ref, qhi_ref, sc_ref, bi_ref,
+                        sl_ref, ptr_ref, md_ref, mmd_ref):
+    qlx = q_ref[0, 0]
+    qly = q_ref[0, 1]
+    qhx = q_ref[0, 2]
+    qhy = q_ref[0, 3]
+    qlo = qlo_ref[0, :].astype(jnp.int32)
+    qhi = qhi_ref[0, :].astype(jnp.int32)
+    sx, sy = sc_ref[0, 0], sc_ref[0, 1]
+    bx, by = bi_ref[0, 0], bi_ref[0, 1]
+    lx = bx + (qlo >> 8).astype(jnp.float32) * sx
+    ly = by + (qlo & 0xFF).astype(jnp.float32) * sy
+    hx = bx + (qhi >> 8).astype(jnp.float32) * sx
+    hy = by + (qhi & 0xFF).astype(jnp.float32) * sy
+    md = mindist_rect(qlx, qly, qhx, qhy, lx, ly, hx, hy)
+    disp = sl_ref[0, 0] + sl_ref[0, 1]
+    mmd = d3_slacked_upper(
+        minmaxdist_rect(qlx, qly, qhx, qhy, lx, ly, hx, hy), disp)
+    valid = ptr_ref[0, :] >= 0
+    md_ref[0, 0, :] = jnp.where(valid, md, _PAD)
+    mmd_ref[0, 0, :] = jnp.where(valid, mmd, _PAD)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def knn_join_level_dists_d3(ids, qrects, qlo, qhi, scale, bias, slack, ptr,
+                            *, interpret: bool = True):
+    """Score one quantized BFS level for a batch of kNN-join outer rects —
+    contract as ``knn_level_dists_d3`` with rect queries: (admissible
+    MINDIST lower bound, slack-corrected MINMAXDIST upper bound)."""
+    b, c = ids.shape
+    n, f = qlo.shape
+    safe_ids = jnp.maximum(ids, 0)
+
+    def node_map(bi, ci, ids_s):
+        return (ids_s[bi, ci], 0)
+
+    out_spec = pl.BlockSpec((1, 1, f), lambda bi, ci, ids_s: (bi, ci, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, c),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda bi, ci, ids_s: (bi, 0)),
+            pl.BlockSpec((1, f), node_map),
+            pl.BlockSpec((1, f), node_map),
+            pl.BlockSpec((1, 2), node_map),
+            pl.BlockSpec((1, 2), node_map),
+            pl.BlockSpec((1, 2), node_map),
+            pl.BlockSpec((1, f), node_map),
+        ],
+        out_specs=[out_spec, out_spec],
+    )
+    shape = jax.ShapeDtypeStruct((b, c, f), jnp.float32)
+    fn = pl.pallas_call(
+        _knn_join_d3_kernel,
+        grid_spec=grid_spec,
+        out_shape=[shape, shape],
+        interpret=interpret,
+    )
+    out = fn(safe_ids, qrects, qlo, qhi, scale, bias, slack, ptr)
+    invalid = (ids < 0)[:, :, None]
     return (jnp.where(invalid, _PAD, out[0]),
             jnp.where(invalid, _PAD, out[1]))
 

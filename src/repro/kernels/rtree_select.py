@@ -40,6 +40,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .fused_common import chunk_tile as _chunk_tile
 from .fused_common import compress_store as _compress_store
+from .fused_common import d3_chunk_tile as _d3_chunk_tile
 from .fused_common import pad_frontier as _pad_frontier
 
 
@@ -172,5 +173,149 @@ def select_level_fused(ids, queries, lx, ly, hx, hy, child, *, cap: int,
     )
     out_ids, counts = fn(safe, ids, *([queries] +
                                       [lx, ly, hx, hy, child] * r))
+    counts = counts[:, 0]
+    return out_ids, counts, counts > cap
+
+
+# ---------------------------------------------------------------------------
+# D3 quantized-layout kernels: the node block streams two packed-uint16 code
+# rows (4 bytes per child MBR instead of D1's 16 — ~4x the children per
+# DMA'd block) plus the tiny (1, 2) scale/bias rows, and the predicate runs
+# on boxes dequantized in-register.  Dequantization is conservative (lo
+# codes floored, hi codes ceiled at build time), so the mask only ever
+# over-approximates the exact D1 mask; the operators re-check exact leaf
+# geometry through the D1 kernel.
+# ---------------------------------------------------------------------------
+
+def _select_d3_kernel(ids_ref, q_ref, qlo_ref, qhi_ref, sc_ref, bi_ref,
+                      ptr_ref, mask_ref):
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+    nid = ids_ref[b, c]
+    qlo = qlo_ref[0, :].astype(jnp.int32)
+    qhi = qhi_ref[0, :].astype(jnp.int32)
+    sx, sy = sc_ref[0, 0], sc_ref[0, 1]
+    bx, by = bi_ref[0, 0], bi_ref[0, 1]
+    # in-register dequantization: bias + code * pow2-scale is exact (codes
+    # have <= 8 significand bits), so these boxes match the jnp layout path
+    # bit-for-bit — the kernel can never disagree with its ref twin
+    lx = bx + (qlo >> 8).astype(jnp.float32) * sx
+    ly = by + (qlo & 0xFF).astype(jnp.float32) * sy
+    hx = bx + (qhi >> 8).astype(jnp.float32) * sx
+    hy = by + (qhi & 0xFF).astype(jnp.float32) * sy
+    m = (q_ref[0, 0] <= hx) & (q_ref[0, 2] >= lx) & \
+        (q_ref[0, 1] <= hy) & (q_ref[0, 3] >= ly)
+    m = m & (ptr_ref[0, :] >= 0) & (nid >= 0)
+    mask_ref[0, 0, :] = m.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def select_level_masks_d3(ids, queries, qlo, qhi, scale, bias, ptr, *,
+                          interpret: bool = True):
+    """Evaluate one quantized BFS level for a batch of queries.
+
+    ids:     (B, C) int32 frontier node ids (-1 pad) — scalar-prefetched.
+    queries: (B, 4) query rects.
+    qlo/qhi: (N, F) uint16 packed per-axis code rows.
+    scale:   (N, 2) f32 power-of-two steps; bias: (N, 2) f32 node-lo corner.
+    ptr:     (N, F) int32 child ids.
+    → mask (B, C, F) int32 conservative qualify bitmask (superset of the
+    exact D1 mask on the true child boxes).
+    """
+    b, c = ids.shape
+    n, f = qlo.shape
+    safe_ids = jnp.maximum(ids, 0)
+
+    def node_map(bi, ci, ids_s):
+        return (ids_s[bi, ci], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, c),
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda bi, ci, ids_s: (bi, 0)),
+            pl.BlockSpec((1, f), node_map),
+            pl.BlockSpec((1, f), node_map),
+            pl.BlockSpec((1, 2), node_map),
+            pl.BlockSpec((1, 2), node_map),
+            pl.BlockSpec((1, f), node_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, f), lambda bi, ci, ids_s: (bi, ci, 0)),
+    )
+    fn = pl.pallas_call(
+        _select_d3_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, c, f), jnp.int32),
+        interpret=interpret,
+    )
+    return fn(safe_ids, queries, qlo, qhi, scale, bias, ptr) * \
+        ((ids >= 0)[:, :, None]).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "chunk", "interpret"))
+def select_level_fused_d3(ids, queries, qlo, qhi, scale, bias, ptr, *,
+                          cap: int, chunk: int = 8, interpret: bool = True):
+    """Fused quantized level: stream the packed uint16 code blocks, dequantize
+    in-register, and compress-store the qualifying children — one
+    pallas_call, same contract as ``select_level_fused`` (compact_rows over
+    the flat level's conservative mask).
+    """
+    b, _ = ids.shape
+    n, f = qlo.shape
+    ids, r, nc = _pad_frontier(ids, chunk)
+    safe = jnp.maximum(ids, 0)
+
+    def kernel(safe_ref, raw_ref, q_ref, *rest):
+        node_refs = rest[:5 * r]
+        out_ref, cnt_ref, cnt_sm = rest[5 * r:]
+        bi = pl.program_id(0)
+        ci = pl.program_id(1)
+
+        @pl.when(ci == 0)
+        def _():
+            cnt_sm[0] = 0
+            out_ref[0, :] = jnp.full((cap,), -1, jnp.int32)
+
+        glx, gly, ghx, ghy, ptr_t, valid = _d3_chunk_tile(
+            raw_ref, node_refs, bi, ci, r)
+        qlx = q_ref[0, 0]
+        qly = q_ref[0, 1]
+        qhx = q_ref[0, 2]
+        qhy = q_ref[0, 3]
+        m = (qlx <= ghx) & (qhx >= glx) & (qly <= ghy) & (qhy >= gly)
+        m = (m & valid).reshape(-1)
+        _compress_store(m, [(ptr_t.reshape(-1), out_ref)], cnt_sm,
+                        cnt_ref, cap)
+
+    def bmap(bi, ci, s, rw):
+        return (bi, 0)
+
+    in_specs = [pl.BlockSpec((1, 4), bmap)]
+    for i in range(r):
+        def node_map(bi, ci, s, rw, i=i):
+            return (s[bi, ci * r + i], 0)
+        in_specs += [pl.BlockSpec((1, f), node_map),
+                     pl.BlockSpec((1, f), node_map),
+                     pl.BlockSpec((1, 2), node_map),
+                     pl.BlockSpec((1, 2), node_map),
+                     pl.BlockSpec((1, f), node_map)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nc),
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((1, cap), bmap),
+                   pl.BlockSpec((1, 1), bmap)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+    )
+    fn = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, cap), jnp.int32),
+                   jax.ShapeDtypeStruct((b, 1), jnp.int32)],
+        interpret=interpret,
+    )
+    out_ids, counts = fn(safe, ids, *([queries] +
+                                      [qlo, qhi, scale, bias, ptr] * r))
     counts = counts[:, 0]
     return out_ids, counts, counts > cap

@@ -44,6 +44,7 @@ import time
 import numpy as np
 
 from repro.core import str_pack, traversal
+from repro.core.layouts import layout_names
 from repro.distributed.spatial_shard import SpatialShards
 from repro.runtime.straggler import ShardPool
 
@@ -86,7 +87,7 @@ def _build_shards(args, sort_key=None):
     rects = str_pack.points_to_rects(pts)
     t0 = time.time()
     shards = SpatialShards.build(rects, args.partitions, fanout=args.fanout,
-                                 sort_key=sort_key)
+                                 sort_key=sort_key, layout=args.layout)
     note = ""
     if _use_mesh(args):
         from .mesh import spatial_mesh
@@ -304,7 +305,7 @@ def _serve_browse(args, spec):
     t0 = time.time()
     tree = rtree.build_rtree(rects, fanout=args.fanout)
     print(f"built tree over {args.n} rects in {time.time() - t0:.2f}s")
-    start = knn_browse.make_browse_bfs(tree, k=args.k)
+    start = knn_browse.make_browse_bfs(tree, k=args.k, layout=args.layout)
     qs = rng.random((args.batches, args.batch_size, 2), dtype=np.float32)
     # warm: one full session at the serving shape
     warm = start(jnp.asarray(qs[0]))
@@ -533,6 +534,10 @@ def main(argv=None):
     ap.add_argument("--n", type=int, default=200_000)
     ap.add_argument("--partitions", type=int, default=8)
     ap.add_argument("--fanout", type=int, default=64)
+    ap.add_argument("--layout", default="d1", choices=layout_names(),
+                    help="physical node layout for the whole fleet (d3: "
+                         "uint16-quantized MBRs, ~4x children per memory "
+                         "block, conservative prune + exact leaf re-check)")
     ap.add_argument("--batches", type=int, default=20)
     ap.add_argument("--batch-size", type=int, default=64)
     ap.add_argument("--selectivity", type=float, default=0.001)

@@ -15,11 +15,16 @@ and the mesh result must be invariant under a permutation of the
 partitions (the cross-shard merges order by (distance, global id) /
 sorted global id, which no partition placement can perturb).
 
-Kernel backends require layout='d1' (the level-global SoA arrays); non-d1 ×
-backend cells are skipped rather than errored so callers can request full
-matrices.  Fused cells (whole-level kernels with in-kernel emission) only
-exist on kernel backends, so fused × backend=None cells are skipped the
-same way.
+Kernel backends exist for the cells in ``KERNEL_CELLS`` — the level-global
+D1 SoA arrays carry the full kernel column, the quantized D3 streams carry
+score kernels for select/knn/knn_join plus fused select; unsupported
+layout × backend cells are skipped rather than errored so callers can
+request full matrices.  Fused cells (whole-level kernels with in-kernel
+emission) only exist on kernel backends, so fused × backend=None cells are
+skipped the same way.  Every D3 cell is additionally asserted bit-exact
+against the D1 cell of the same (backend, fused) — the conservative
+quantized prune may cost extra node visits but must never change an
+emitted answer.
 
 Every cell also validates its ``Counters.dispatches`` tally against the
 owning spec's stage model, and (once per layout × backend × fused
@@ -40,11 +45,28 @@ from repro.core import (join_vector, knn_join_vector, knn_vector, rtree,
                         select_vector, traversal)
 from repro.core.geometry import (brute_force_knn, brute_force_knn_join,
                                  mindist_matrix_np, mindist_rect_matrix_np)
+from repro.core.layouts import layout_names
 
 from conftest import brute_join, brute_select, uniform_rects
 
-LAYOUTS = ("d0", "d1", "d2")
+# The layout axis is sourced from the one registry (core/layouts.LAYOUTS),
+# so a newly registered physical layout joins every oracle matrix — and
+# every CLI/bench choices list — without touching call sites.
+LAYOUTS = layout_names()
 KERNEL_BACKENDS = ("xla", "pallas_interpret")
+
+# Which (layout, fused) cells each operator's kernel backends implement —
+# mirrors the engine guards: the level-global D1 SoA arrays have the full
+# kernel column, the quantized D3 streams have score kernels for
+# select/knn/knn_join plus the fused select variant, every other layout is
+# jnp-only (and knn_filtered has no kernel backend at all).
+KERNEL_CELLS = {
+    "select": {("d1", False), ("d1", True), ("d3", False), ("d3", True)},
+    "join": {("d1", False), ("d1", True)},
+    "knn": {("d1", False), ("d1", True), ("d3", False)},
+    "knn_join": {("d1", False), ("d1", True), ("d3", False)},
+    "knn_filtered": set(),
+}
 
 
 def _assert_bitwise_equal(a, b, ctx):
@@ -305,8 +327,9 @@ def assert_matches_oracle(op: str, layouts=LAYOUTS, backends=(None,),
     """Run operator ``op`` over the (layout × backend × seed × fused) matrix
     against its brute-force oracle.  ``backends`` entries are None
     (layout-specific jnp math) or kernel backends ('xla' /
-    'pallas_interpret'); kernel cells only exist for layout='d1' and are
-    skipped elsewhere, and fused cells only exist on kernel backends.
+    'pallas_interpret'); kernel cells only exist where ``KERNEL_CELLS``
+    says the operator implements them and are skipped elsewhere, and fused
+    cells only exist on kernel backends.
     ``params`` tune the instance (n, fanout, batch, k, ...).  Every cell
     validates its dispatch tally against the operator spec's stage model;
     the first seed's cells additionally re-run through the generic engine
@@ -315,12 +338,14 @@ def assert_matches_oracle(op: str, layouts=LAYOUTS, backends=(None,),
     coverage)."""
     spec = OPS[op]
     op_spec = traversal.get_spec(spec.spec_name)
+    kernel_cells = KERNEL_CELLS[op]
     cells = 0
     for si, seed in enumerate(seeds):
         inst = spec.make(seed, **params)
+        d1_results = {}
         for layout, backend, fu in itertools.product(layouts, backends,
                                                      fused):
-            if backend is not None and layout != "d1":
+            if backend is not None and (layout, fu) not in kernel_cells:
                 continue
             if fu and backend is None:
                 continue
@@ -330,6 +355,17 @@ def assert_matches_oracle(op: str, layouts=LAYOUTS, backends=(None,),
             spec.check(inst, result, ctx)
             result[-1].validate_dispatches(op_spec.stage_model,
                                            spec.height(inst), fused=fu)
+            # D3's conservative quantized prune may only over-approximate
+            # frontiers; after the exact leaf re-check its *emitted*
+            # results must be bit-identical to the D1 cell of the same
+            # (backend, fused) — counters legitimately differ (less
+            # pruning), so only the result leaves are compared.
+            if layout == "d1":
+                d1_results[(backend, fu)] = result
+            elif layout == "d3" and (backend, fu) in d1_results:
+                _assert_bitwise_equal(
+                    result[:-1], d1_results[(backend, fu)][:-1],
+                    f"d3-vs-d1 bit-exactness: {ctx}")
             if si == 0:
                 args, kwargs = spec.engine_args(inst, layout, backend, fu)
                 eng = traversal.build(spec.spec_name, *args, **kwargs)
@@ -351,9 +387,11 @@ def assert_matches_oracle(op: str, layouts=LAYOUTS, backends=(None,),
 SHARDED_OPS = ("select", "join", "knn", "knn_join", "knn_filtered")
 
 
-def _shards_for(rects, n_partitions, fanout, order=None, mesh=None):
+def _shards_for(rects, n_partitions, fanout, order=None, mesh=None,
+                layout="d1"):
     from repro.distributed.spatial_shard import SpatialShards
-    s = SpatialShards.build(rects, n_partitions, fanout=fanout)
+    s = SpatialShards.build(rects, n_partitions, fanout=fanout,
+                            layout=layout)
     if order is not None:
         s.partitions = [s.partitions[i] for i in order]
         s.router_mbrs = np.stack([p.mbr for p in s.partitions])
@@ -416,27 +454,41 @@ def _sharded_instance(op, seed, n, batch, k):
 
 
 def assert_sharded_parity(op, seeds=(0,), n=4000, n_partitions=4,
-                          fanout=16, batch=6, k=8, mesh=None) -> int:
+                          fanout=16, batch=6, k=8, mesh=None,
+                          layout="d1") -> int:
     """The distributed dispatcher's oracle axis: for each seed, (1) the
     host-orchestrated fan-out and the one-program mesh path return
-    bit-identical results, and (2) the mesh result is unchanged when the
-    partitions are packed in a shuffled order.  Returns cells verified."""
+    bit-identical results, (2) the mesh result is unchanged when the
+    partitions are packed in a shuffled order, and (3) under a non-d1
+    ``layout`` the whole-fleet result additionally matches a d1 fleet
+    bit-for-bit (the quantized D3 prune must never change an answer).
+    Returns cells verified."""
     cells = 0
     for seed in seeds:
         rng, inst = _sharded_instance(op, seed, n, batch, k)
-        host = _shards_for(inst["rects"], n_partitions, fanout, mesh=False)
-        meshed = _shards_for(inst["rects"], n_partitions, fanout, mesh=mesh)
-        ctx = f"sharded {op} seed={seed} host-vs-mesh"
+        host = _shards_for(inst["rects"], n_partitions, fanout, mesh=False,
+                           layout=layout)
+        meshed = _shards_for(inst["rects"], n_partitions, fanout, mesh=mesh,
+                             layout=layout)
+        ctx = f"sharded {op} seed={seed} layout={layout} host-vs-mesh"
         res_host = _sharded_result(op, host, inst)
         res_mesh = _sharded_result(op, meshed, inst)
         _assert_same_result(op, res_host, res_mesh, ctx)
         perm = rng.permutation(len(host.partitions))
         permuted = _shards_for(inst["rects"], n_partitions, fanout,
-                               order=perm, mesh=mesh)
+                               order=perm, mesh=mesh, layout=layout)
         res_perm = _sharded_result(op, permuted, inst)
         _assert_same_result(op, res_mesh, res_perm,
-                            f"sharded {op} seed={seed} permutation "
-                            f"invariance (perm={perm.tolist()})")
+                            f"sharded {op} seed={seed} layout={layout} "
+                            f"permutation invariance "
+                            f"(perm={perm.tolist()})")
+        if layout != "d1":
+            base = _shards_for(inst["rects"], n_partitions, fanout,
+                               mesh=False)
+            _assert_same_result(op, _sharded_result(op, base, inst),
+                                res_host,
+                                f"sharded {op} seed={seed} "
+                                f"{layout}-vs-d1 bit-exactness")
         cells += 1
     assert cells > 0
     return cells

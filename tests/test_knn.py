@@ -110,7 +110,7 @@ def test_vector_counters_show_pruning(tree_and_rects):
 
 @pytest.mark.parametrize("backend", KERNEL_BACKENDS)
 def test_kernel_backend_matches_oracle(backend):
-    assert_matches_oracle("knn", layouts=("d1",), backends=(backend,),
+    assert_matches_oracle("knn", layouts=("d1", "d3"), backends=(backend,),
                           seeds=(34,), k=8)
 
 

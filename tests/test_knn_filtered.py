@@ -7,13 +7,14 @@ import pytest
 from repro.core import knn_filtered, knn_vector, rtree
 
 from conftest import uniform_rects
-from oracle import assert_matches_oracle
+from oracle import LAYOUTS, assert_matches_oracle
 
 
 def test_filtered_matches_oracle_layouts():
     # kernel backends are not implemented for the filtered spec (jnp-only
     # window masks), so the matrix is layouts × seeds
-    assert assert_matches_oracle("knn_filtered", seeds=(0, 1)) == 6
+    assert assert_matches_oracle("knn_filtered", seeds=(0, 1)) == \
+        len(LAYOUTS) * 2
 
 
 def test_full_window_reduces_to_plain_knn():

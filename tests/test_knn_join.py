@@ -101,8 +101,8 @@ def test_knn_join_matches_oracle_layouts(layout):
 
 @pytest.mark.parametrize("backend", KERNEL_BACKENDS)
 def test_knn_join_matches_oracle_kernel_backends(backend):
-    assert_matches_oracle("knn_join", layouts=("d1",), backends=(backend,),
-                          seeds=(42,), k=8)
+    assert_matches_oracle("knn_join", layouts=("d1", "d3"),
+                          backends=(backend,), seeds=(42,), k=8)
 
 
 @pytest.mark.parametrize("k", [1, 64])
@@ -118,8 +118,9 @@ def test_knn_join_oracle_matrix_extended():
         "knn_join", layouts=LAYOUTS, backends=(None,) + KERNEL_BACKENDS,
         seeds=(0, 1, 2), fused=(False, True), n=12_000, batch=10, k=16,
         fanout=32)
-    # 3 seeds × (3 layouts jnp + 2 d1 kernel backends × unfused/fused)
-    assert cells == 3 * (3 + 2 * 2)
+    # 3 seeds × (4 layouts jnp + 2 d1 kernel backends × unfused/fused
+    #            + 2 d3 kernel backends unfused)
+    assert cells == 3 * (len(LAYOUTS) + 2 * 2 + 2)
 
 
 # ---------------------------------------------------------------------------

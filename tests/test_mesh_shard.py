@@ -20,6 +20,27 @@ def test_host_vs_mesh_parity_and_permutation(op):
     assert assert_sharded_parity(op, seeds=(0,)) == 1
 
 
+@pytest.mark.parametrize("op", SHARDED_OPS)
+def test_host_vs_mesh_parity_d3(op):
+    """The quantized-layout fleet must agree with itself across dispatch
+    paths AND with a d1 fleet bit-for-bit (oracle.assert_sharded_parity's
+    layout axis) — conservative quantized pruning never changes answers."""
+    assert assert_sharded_parity(op, seeds=(0,), layout="d3") == 1
+
+
+def test_sharded_browse_d3_matches_d1():
+    rng = np.random.default_rng(31)
+    rects = uniform_rects(rng, 4000, eps=0.002)
+    qs = rng.random((4, 2)).astype(np.float32)
+    a = _shards_for(rects, 4, 16).browse(qs, 8)
+    b = _shards_for(rects, 4, 16, layout="d3").browse(qs, 8)
+    for _ in range(3):
+        ia, da = a.next_batch()
+        ib, db = b.next_batch()
+        np.testing.assert_array_equal(ia, ib)
+        np.testing.assert_array_equal(da, db)
+
+
 def test_sharded_dispatch_is_o_levels_not_o_partitions():
     """One shard_map program per batch: the merged dispatch tally equals
     the spec's StageModel for TWO descents (overlapped phase 1 + phase 2)

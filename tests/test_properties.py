@@ -12,8 +12,8 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (join_vector, knn_join_vector, knn_vector, rtree,
-                        select_vector)
+from repro.core import (join_vector, knn_join_vector, knn_vector, layouts,
+                        rtree, select_vector)
 from repro.core.geometry import brute_force_knn, brute_force_knn_join
 
 from conftest import brute_join, brute_select, uniform_rects
@@ -67,10 +67,59 @@ def test_structure_invariants(n, fanout, seed, sort_key):
     rtree.validate_structure(t)
 
 
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       mag=st.sampled_from([0.0, 1.0, 1e3, 1e6]),
+       extent=st.sampled_from([0.0, 1e-30, 1e-6, 0.37, 1e4]),
+       partial=st.booleans())
+def test_property_d3_roundtrip_contains(seed, mag, extent, partial):
+    """dequantize(quantize(r)) must CONTAIN r (lo' <= lo, hi' >= hi) for
+    children anywhere inside their node box — including degenerate
+    zero-extent parents, denormal-scale extents, and large-magnitude
+    coordinates — and the stored per-axis slack must bound every face's
+    displacement (the Lipschitz input to d3_slacked_upper)."""
+    rng = np.random.default_rng(seed)
+    n, f = 6, 8
+    base = (rng.uniform(-1.0, 1.0, (n, 2, 1)) * mag).astype(np.float32)
+    t = rng.random((2, n, 2, f)).astype(np.float32)
+    t_lo, t_hi = np.minimum(t[0], t[1]), np.maximum(t[0], t[1])
+    ext = np.float32(extent)
+    lo = (base + t_lo * ext).astype(np.float32)
+    hi = (base + t_hi * ext).astype(np.float32)
+    lx, ly, hx, hy = lo[:, 0], lo[:, 1], hi[:, 0], hi[:, 1]
+    valid = np.ones((n, f), bool)
+    if partial:
+        valid = rng.random((n, f)) < 0.5
+        valid[:, 0] = True                      # >= 1 member per node
+    # the exact member MBR, as the STR build computes it
+    def _agg(a, red, fill):
+        return red(np.where(valid, a, fill), axis=1)
+    node_mbr = np.stack(
+        [_agg(lx, np.min, np.inf), _agg(ly, np.min, np.inf),
+         _agg(hx, np.max, -np.inf), _agg(hy, np.max, -np.inf)],
+        axis=1).astype(np.float32)
+    qlo, qhi, scale, bias, slack = layouts.d3_quantize(
+        jnp.asarray(lx), jnp.asarray(ly), jnp.asarray(hx), jnp.asarray(hy),
+        jnp.asarray(node_mbr), jnp.asarray(valid))
+    dlx, dly, dhx, dhy = (np.asarray(a) for a in layouts.d3_dequantize(
+        qlo, qhi, scale, bias))
+    slack = np.asarray(slack)
+    sx = np.repeat(slack[:, 0:1], f, axis=1)
+    sy = np.repeat(slack[:, 1:2], f, axis=1)
+    for dq, face, sl, name in ((dlx, lx, sx, "lx"), (dly, ly, sy, "ly")):
+        assert (dq[valid] <= face[valid]).all(), f"{name} not contained"
+        assert (face[valid] - dq[valid] <= sl[valid]).all(), \
+            f"{name} slack unsound"
+    for dq, face, sl, name in ((dhx, hx, sx, "hx"), (dhy, hy, sy, "hy")):
+        assert (dq[valid] >= face[valid]).all(), f"{name} not contained"
+        assert (dq[valid] - face[valid] <= sl[valid]).all(), \
+            f"{name} slack unsound"
+
+
 @settings(max_examples=15, deadline=None)
 @given(n=st.integers(2, 1500), fanout=st.sampled_from([8, 32]),
        k=st.sampled_from([1, 3, 16]), seed=st.integers(0, 2**31 - 1),
-       layout=st.sampled_from(["d0", "d1", "d2"]))
+       layout=st.sampled_from(layouts.layout_names()))
 def test_property_knn_matches_brute(n, fanout, k, seed, layout):
     rng = np.random.default_rng(seed)
     rects = uniform_rects(rng, n, eps=0.01)
@@ -89,15 +138,16 @@ def test_property_knn_matches_brute(n, fanout, k, seed, layout):
        k=st.sampled_from([1, 3, 16]), seed=st.integers(0, 2**31 - 1),
        eps=st.floats(0.0, 0.05))
 def test_property_knn_join_layout_invariance(n, fanout, k, seed, eps):
-    """Result distances match the oracle and are invariant across D0/D1/D2
-    (the physical layout may only change counters, never answers)."""
+    """Result distances match the oracle and are invariant across every
+    registered layout (the physical layout may only change counters, never
+    answers)."""
     rng = np.random.default_rng(seed)
     rects = uniform_rects(rng, n, eps=0.005)
     t = rtree.build_rtree(rects, fanout=fanout)
     outer = uniform_rects(rng, 2, eps=np.float32(eps))
     _, od = brute_force_knn_join(outer, rects, k)
     per_layout = []
-    for layout in ("d0", "d1", "d2"):
+    for layout in layouts.layout_names():
         fn = knn_join_vector.make_knn_join_bfs(t, k=k, layout=layout)
         ids, d, ctr = fn(jnp.asarray(outer))
         assert not bool(ctr.overflow)
@@ -108,10 +158,8 @@ def test_property_knn_join_layout_invariance(n, fanout, k, seed, eps):
     # D2 evaluates MINDIST in pair-interleaved form — same op sequence, but
     # XLA may fuse differently-shaped graphs with different roundings, so
     # invariance is asserted to tight fp tolerance rather than bitwise
-    np.testing.assert_allclose(per_layout[0], per_layout[1], rtol=1e-6,
-                               atol=1e-12)
-    np.testing.assert_allclose(per_layout[1], per_layout[2], rtol=1e-6,
-                               atol=1e-12)
+    for prev, cur in zip(per_layout, per_layout[1:]):
+        np.testing.assert_allclose(prev, cur, rtol=1e-6, atol=1e-12)
 
 
 @settings(max_examples=12, deadline=None)

@@ -26,3 +26,15 @@ def test_serve_mode_dryrun(mode):
         assert res["overflow"] is False, mode
     value_key = "joins_per_s" if mode == "join" else "qps"
     assert res[value_key] > 0
+
+
+@pytest.mark.parametrize("mode", sorted(serve.MODE_TO_SPEC))
+def test_serve_mode_dryrun_d3(mode):
+    """Every served operator also instantiates on the quantized D3 fleet
+    (--layout flows from the one registry through SpatialShards.build)."""
+    res = serve.main(["--mode", mode, "--dryrun", "--layout", "d3"])
+    assert isinstance(res, dict) and res
+    if "overflow" in res:
+        assert res["overflow"] is False, mode
+    value_key = "joins_per_s" if mode == "join" else "qps"
+    assert res[value_key] > 0
