@@ -1,0 +1,237 @@
+"""Occupancy-adaptive frontier caps — small-frontier latency + occupancy.
+
+Static frontier caps carry fixed 128-row (256 on D3) floors at every
+level, so a small-k kNN or a low-selectivity select pays for lane grids
+that are almost entirely padding.  The adaptive policy (core/caps.py)
+floors at ``lane_floor(fanout)`` rows, rounds small caps to powers of two
+instead of full lanes, and clamps every step to the level's true node
+count; the two-tier engines (core/traversal.py) re-run a batch on the
+static tier iff the tight tier overflows, so results stay bit-identical
+(asserted here on every timed cell).  This bench records:
+
+  small_frontier — static vs adaptive latency for small-k kNN and
+                   low-selectivity select on D1 and D3, with the per-step
+                   live/padded lane occupancy from ``Counters`` (the
+                   adaptive tier's occupancy must not be lower)
+  equal_block    — the bench_quant D1@F/4-vs-D3@F pairing re-run under
+                   both policies: D3's doubled 256-lane floors were part
+                   of why the compute-bound pairing priced it out, so the
+                   adaptive policy must narrow (or flip) that gap
+  escalation     — a deliberately under-sized tight tier: the escalation
+                   must fire and the answer stay bit-identical to the
+                   static engine
+
+Writes ``BENCH_caps.json``.  ``--dryrun`` (the CI fast lane) asserts the
+structural bars — the node-count clamp invariant on every built tree, the
+escalation firing at least once while staying bit-exact, and adaptive
+results matching static on every cell; the full run additionally asserts
+a >= 1.2x small-frontier speedup (timing bars are meaningless at dryrun
+sizes).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import caps as caps_policy
+from repro.core import knn_vector, layouts, rtree, select_vector, traversal
+
+from .common import Rows, point_rects, square_queries, time_fn, uniform_points
+
+
+def assert_clamp_invariant(tree, lanes: int = layouts.LANES):
+    """Adaptive caps never exceed the level node counts of a real tree —
+    the property that makes the tight tier overflow-safe on the clamped
+    steps (a frontier holds distinct node ids)."""
+    sizes = [lvl.n_nodes for lvl in tree.levels]
+    for fn, tgt in ((caps_policy.select_frontier_caps, 4096),
+                    (caps_policy.knn_frontier_caps, 8),
+                    (caps_policy.filtered_frontier_caps, 8)):
+        got = fn(tree, tgt, lanes=lanes, policy="adaptive")
+        for c, sz in zip(got, list(reversed(sizes))[1:]):
+            assert 1 <= c <= sz, \
+                f"clamp invariant violated: cap {c} > level size {sz} ({fn})"
+
+
+def _occ(ctr, height):
+    """Per-step (live, padded) lists + the overall live fraction."""
+    live = np.asarray(ctr.lanes_live).astype(np.int64)[:height - 1]
+    padded = np.asarray(ctr.lanes_padded).astype(np.int64)[:height - 1]
+    total = int(live.sum() + padded.sum())
+    return (live.tolist(), padded.tolist(),
+            float(live.sum()) / total if total else 1.0)
+
+
+def _timed_pair(build_static, build_adaptive, qs, check_equal, height):
+    """Time a static/adaptive engine pair on the same workload, assert the
+    result leaves bit-identical, and return the cell dict."""
+    s_dt, s_out = time_fn(build_static, qs)
+    a_dt, a_out = time_fn(build_adaptive, qs)
+    check_equal(s_out, a_out)
+    s_live, s_padded, s_occ = _occ(s_out[-1], height)
+    a_live, a_padded, a_occ = _occ(a_out[-1], height)
+    assert a_occ >= s_occ - 1e-9, \
+        f"adaptive occupancy {a_occ:.3f} < static {s_occ:.3f}"
+    return {"static_us": s_dt * 1e6, "adaptive_us": a_dt * 1e6,
+            "speedup": s_dt / a_dt,
+            "occupancy_static": s_occ, "occupancy_adaptive": a_occ,
+            "lanes_live_static": s_live, "lanes_padded_static": s_padded,
+            "lanes_live_adaptive": a_live, "lanes_padded_adaptive": a_padded,
+            "escalations": int(np.asarray(a_out[-1].escalations).sum())}
+
+
+def _select_equal(s_out, a_out):
+    np.testing.assert_array_equal(np.asarray(s_out[0]), np.asarray(a_out[0]))
+    np.testing.assert_array_equal(np.asarray(s_out[1]), np.asarray(a_out[1]))
+
+
+def _knn_equal(s_out, a_out):
+    np.testing.assert_array_equal(np.asarray(s_out[0]), np.asarray(a_out[0]))
+    np.testing.assert_array_equal(np.asarray(s_out[1]), np.asarray(a_out[1]))
+
+
+def run(n: int = 500_000, fanout: int = 64, batch: int = 64,
+        ks=(1, 4), sels=(1e-5, 1e-4), seed: int = 0,
+        sweep_layouts=("d1", "d3"), out_json: str = "BENCH_caps.json"):
+    rows = Rows("caps")
+    rects = point_rects(n, seed)
+    pts = jnp.asarray(uniform_points(batch, seed + 2))
+    tree = rtree.build_rtree(rects, fanout=fanout)
+    assert_clamp_invariant(tree)
+    for lanes in {layouts.layout_lanes(lo) for lo in sweep_layouts}:
+        assert_clamp_invariant(tree, lanes=lanes)
+
+    summary = {"n": n, "fanout": fanout, "batch": batch,
+               "small_frontier": {}, "equal_block": {}, "escalation": {}}
+
+    # --- small-frontier sweep: static vs adaptive, bit-exact asserted ---
+    best = 0.0
+    for layout in sweep_layouts:
+        for s in sels:
+            qs = jnp.asarray(square_queries(batch, s, seed + 1))
+            cap = min(max(int(n * s * 8), 256), 1 << 17)
+            cell = _timed_pair(
+                select_vector.make_select_bfs(tree, layout=layout,
+                                              result_cap=cap,
+                                              caps_mode="static"),
+                select_vector.make_select_bfs(tree, layout=layout,
+                                              result_cap=cap,
+                                              caps_mode="adaptive"),
+                qs, _select_equal, tree.height)
+            cell["result_cap"] = cap
+            summary["small_frontier"][f"select_{layout}_s{s:g}"] = cell
+            rows.add(section="select", layout=layout, selectivity=s,
+                     static_us=cell["static_us"],
+                     adaptive_us=cell["adaptive_us"],
+                     speedup=cell["speedup"],
+                     occupancy_adaptive=cell["occupancy_adaptive"])
+            best = max(best, cell["speedup"])
+        for k in ks:
+            cell = _timed_pair(
+                knn_vector.make_knn_bfs(tree, k=k, layout=layout,
+                                        caps_mode="static"),
+                knn_vector.make_knn_bfs(tree, k=k, layout=layout,
+                                        caps_mode="adaptive"),
+                pts, _knn_equal, tree.height)
+            summary["small_frontier"][f"knn_{layout}_k{k}"] = cell
+            rows.add(section="knn", layout=layout, k=k,
+                     static_us=cell["static_us"],
+                     adaptive_us=cell["adaptive_us"],
+                     speedup=cell["speedup"],
+                     occupancy_adaptive=cell["occupancy_adaptive"])
+            best = max(best, cell["speedup"])
+    summary["small_frontier_best_speedup"] = best
+    for fam in ("select", "knn"):
+        summary[f"small_frontier_best_{fam}_speedup"] = max(
+            v["speedup"] for key, v in summary["small_frontier"].items()
+            if key.startswith(fam))
+
+    # --- equal-block pairing (bench_quant): D1@F/4 vs D3@F under both
+    # policies — adaptive must narrow or flip D3's padded-lane handicap ---
+    small = max(fanout // 4, 4)
+    tree_s = rtree.build_rtree(rects, fanout=small)
+    assert_clamp_invariant(tree_s)
+    s_mid = sels[-1]
+    qs = jnp.asarray(square_queries(batch, s_mid, seed + 1))
+    cap = min(max(int(n * s_mid * 8), 256), 1 << 17)
+    block = {"fanout_d1": small, "fanout_d3": fanout, "selectivity": s_mid}
+    for mode in ("static", "adaptive"):
+        d1_dt, _ = time_fn(select_vector.make_select_bfs(
+            tree_s, layout="d1", result_cap=cap, caps_mode=mode), qs)
+        d3_dt, _ = time_fn(select_vector.make_select_bfs(
+            tree, layout="d3", result_cap=cap, caps_mode=mode), qs)
+        block[mode] = {"d1_us": d1_dt / batch * 1e6,
+                       "d3_us": d3_dt / batch * 1e6,
+                       "d3_vs_d1_gap": d3_dt / d1_dt}
+        rows.add(section="equal_block", mode=mode,
+                 d1_us=block[mode]["d1_us"], d3_us=block[mode]["d3_us"],
+                 d3_vs_d1_gap=block[mode]["d3_vs_d1_gap"])
+    block["gap_ratio_adaptive_vs_static"] = (
+        block["adaptive"]["d3_vs_d1_gap"] / block["static"]["d3_vs_d1_gap"])
+    summary["equal_block"] = block
+
+    # --- escalation: an under-sized tight tier must repair itself ---
+    full = caps_policy.select_frontier_caps(tree, 4096)
+    esc = traversal.maybe_escalating(
+        lambda c: select_vector.make_select_bfs(tree, caps=c,
+                                                result_cap=4096),
+        (1,) * len(full), full)
+    wide = jnp.asarray(square_queries(8, 1e-3, seed + 3))
+    res, counts, ctr = esc(wide)
+    ref = select_vector.make_select_bfs(tree, caps=full,
+                                        result_cap=4096)(wide)
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(ref[0]))
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(ref[1]))
+    n_esc = esc.escalation_count()
+    assert n_esc >= 1, "under-sized tight tier never escalated"
+    assert int(np.asarray(ctr.escalations).sum()) >= 1
+    summary["escalation"] = {"tight_caps": list(esc.tight_caps),
+                             "full_caps": list(esc.full_caps),
+                             "escalations": n_esc, "bit_exact": True}
+    rows.add(section="escalation", escalations=n_esc, bit_exact=1)
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(summary, f, indent=2)
+        print(f"wrote {out_json}")
+    return rows, summary
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=500_000)
+    ap.add_argument("--fanout", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--dryrun", action="store_true",
+                    help="small CI-lane sizes; asserts the structural bars "
+                         "(node-count clamp invariant, escalation fires and "
+                         "stays bit-exact, adaptive ≡ static results) "
+                         "without the timing bar")
+    ap.add_argument("--out", default="BENCH_caps.json")
+    args = ap.parse_args(argv)
+    n = 20_000 if args.dryrun else args.n
+    _, summary = run(n=n, fanout=args.fanout, batch=args.batch,
+                     out_json=args.out)
+    best = summary["small_frontier_best_speedup"]
+    gap = summary["equal_block"]["gap_ratio_adaptive_vs_static"]
+    print(f"small-frontier best speedup {best:.2f}x adaptive vs static; "
+          f"equal-block d3-vs-d1 gap x{gap:.2f} under adaptive caps; "
+          f"{summary['escalation']['escalations']} escalation(s), "
+          f"bit-exact")
+    if not args.dryrun:
+        for fam in ("select", "knn"):
+            fb = summary[f"small_frontier_best_{fam}_speedup"]
+            if fb < 1.2:
+                raise SystemExit(
+                    f"small-frontier {fam} speedup {fb:.2f}x < 1.2x bar")
+        if gap > 1.0 + 1e-6:
+            raise SystemExit(
+                f"equal-block d3-vs-d1 gap grew under adaptive caps "
+                f"(x{gap:.2f} > 1.0)")
+
+
+if __name__ == "__main__":
+    main()

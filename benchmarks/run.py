@@ -20,7 +20,7 @@ def main(argv=None):
                     help="tiny sizes (CI smoke)")
     ap.add_argument("--only", default=None,
                     help="comma list: select,sweeps,join,knn,knn-join,"
-                         "fused,quant,browse,service,lm")
+                         "fused,quant,caps,browse,service,lm")
     ap.add_argument("--out-dir", default="runs/bench")
     args = ap.parse_args(argv)
 
@@ -86,8 +86,18 @@ def main(argv=None):
                                              else 500_000)
         print(f"[quantized D3 layout: bytes/node + latency]  n={n_quant}")
         rows, _ = bench_quant.run(
-            n=n_quant, out_json=os.path.join(args.out_dir,
-                                             "BENCH_quant.json"))
+            n=n_quant, capacity_mult=5 if args.full else 4,
+            out_json=os.path.join(args.out_dir, "BENCH_quant.json"))
+        all_rows.append(rows)
+    if want("caps"):
+        from . import bench_caps
+        n_caps = 20_000 if args.quick else (2_000_000 if args.full
+                                            else 500_000)
+        print(f"[adaptive frontier caps: small-frontier latency + "
+              f"occupancy]  n={n_caps}")
+        rows, _ = bench_caps.run(
+            n=n_caps, out_json=os.path.join(args.out_dir,
+                                            "BENCH_caps.json"))
         all_rows.append(rows)
     if want("browse"):
         from . import bench_browse

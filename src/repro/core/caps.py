@@ -1,24 +1,50 @@
 """Unified frontier-capacity policy for every traversal operator.
 
-All four operators size their per-level frontiers the same way: the level at
+All operators size their per-level frontiers the same way: the level at
 distance ``e`` from the leaves can contribute roughly ``target / fanout^e``
 qualifying entries for point-like data, padded by a ``slack`` factor for MBR
-overlap, clamped, and (for the batched row frontiers) rounded up to the TPU
-lane width so fused-kernel block shapes never see ragged frontiers.  Before
-this module each operator carried its own copy of that formula
+overlap, clamped, and (for the batched row frontiers) rounded up so
+fused-kernel block shapes never see ragged frontiers.  Before this module
+each operator carried its own copy of that formula
 (``select_vector.frontier_caps``, ``knn_vector.knn_frontier_caps``,
 ``join_vector.default_pair_caps``) with the 128-lane round-up sprinkled
-across them; ``geometric_caps`` is the one implementation and the one place
-``layouts.round_up_to_lanes`` is applied.
+across them; this module is the one implementation and the one place the
+lane rounding is applied.
 
-The named policies below reproduce the historical caps bit-for-bit
-(tests/test_traversal.py freezes the bench configurations as a regression).
+Two policies share the geometric core:
+
+``geometric_caps``
+    The **static** policy (the escalation fallback and the benchmark
+    baseline): fixed ``min_cap`` floors, full ``round_up_to_lanes``
+    rounding.  Its one historical bug is fixed here: a ``final="boost"``
+    last step re-clamps to ``level_sizes[0]`` — a leaf-entering frontier
+    wider than the number of leaf nodes is pure padded work (the frontier
+    holds *distinct* node ids, so the level's node count is a hard bound).
+
+``adaptive_caps``
+    The **occupancy-adaptive** policy (the default tight tier of the
+    two-tier engines in core/traversal.py): every step — including the
+    boosted one — clamps to the level's true node count (pairs: reachable
+    pair count), and the floor is ``layouts.lane_floor`` (enough rows to
+    fill one lane grid of children, scaling down with fanout) instead of a
+    fixed 128/256 minimum, with ``layouts.round_up_adaptive`` rounding so a
+    4-row frontier is not padded out to a 128/256-row lane.  Because a
+    frontier can never hold more distinct nodes than the level has, the
+    node-count clamp alone never causes overflow; only the geometric/floor
+    terms can under-size a step, and that is exactly what the escalating
+    engine detects and repairs — so adaptive results stay bit-identical to
+    the static path (asserted per oracle cell in tests/oracle.py).
+
+The named static policies below reproduce the historical caps bit-for-bit
+except for the boost re-clamp (tests/test_traversal.py freezes the bench
+configurations as a regression).
 """
 from __future__ import annotations
 
 from typing import Optional, Sequence, Tuple
 
-from .layouts import LANES, round_up_to_lanes
+from .layouts import (LANES, lane_floor, round_up_adaptive,
+                      round_up_to_lanes)
 
 
 def geometric_caps(n_steps: int, fanout: int, target: int, *, slack: int,
@@ -28,21 +54,22 @@ def geometric_caps(n_steps: int, fanout: int, target: int, *, slack: int,
                    lane_round: bool = True,
                    lanes: int = LANES,
                    final: Optional[str] = None) -> Tuple[int, ...]:
-    """Geometric frontier caps, one per descent step (coarse → fine).
+    """Static geometric frontier caps, one per descent step (coarse → fine).
 
     Step ``i`` targets the level at distance ``e = n_steps - 1 - i`` from
     the finest step and gets ``ceil(target / fanout^e) * slack`` slots,
     clamped to ``[min_cap, max_cap]`` (max first, then min — the historical
     order) and to ``level_sizes[e]`` when given.  ``lane_round`` applies the
-    TPU lane round-up (the only call site of ``round_up_to_lanes`` in the
-    caps machinery); ``lanes`` is the round-up width — layout-dependent
+    TPU lane round-up; ``lanes`` is the round-up width — layout-dependent
     (``layouts.layout_lanes``: compressed D3 rows stream twice as many
     boxes per block, so their frontiers round to 2x the f32 width), default
     the historical 128 so existing caps stay bit-identical.  ``final``:
 
       None      — leave the last step as computed (kNN frontier policy)
       'boost'   — raise the last step to at least ``target`` (select: the
-                  leaf-entering frontier must clear the result budget)
+                  leaf-entering frontier must clear the result budget),
+                  then re-clamp to ``level_sizes[0]`` — the boost must not
+                  exceed the number of leaf nodes
       'target'  — overwrite the last step with ``target`` exactly (join:
                   the last step *is* the result-pair buffer)
     """
@@ -67,39 +94,165 @@ def geometric_caps(n_steps: int, fanout: int, target: int, *, slack: int,
         caps = [round_up_to_lanes(c, lanes) for c in caps]
     elif lane_round:
         caps = [round_up_to_lanes(c, lanes) for c in caps[:-1]] + [caps[-1]]
+    if caps and final == "boost" and level_sizes is not None:
+        # the boost re-clamp: a leaf-entering frontier holds distinct leaf
+        # node ids, so level_sizes[0] is a hard bound the boost must respect
+        # (applied after the round so the lane round-up stays in one place)
+        caps[-1] = min(caps[-1], int(level_sizes[0]))
+    return tuple(caps)
+
+
+def adaptive_caps(n_steps: int, fanout: int, target: int, *, slack: int,
+                  level_sizes: Optional[Sequence[int]] = None,
+                  max_cap: Optional[int] = None,
+                  lanes: int = LANES,
+                  lane_round: bool = True,
+                  final: Optional[str] = None,
+                  floor: Optional[int] = None) -> Tuple[int, ...]:
+    """Occupancy-adaptive frontier caps (the tight tier).
+
+    Same geometric core as ``geometric_caps`` with three changes:
+
+      * the floor is ``layouts.lane_floor(fanout, lanes)`` — enough rows to
+        fill one lane grid of candidate children — optionally raised by
+        ``floor`` (operators with a hard minimum, e.g. kNN's τ gate needs
+        ``cap * fanout >= k``), instead of a fixed 128/256 ``min_cap``
+      * rounding is ``layouts.round_up_adaptive`` — lane multiples at or
+        above one lane row, powers of two below it
+      * **every** step (including a ``final='boost'``ed one) clamps to the
+        level's true node count as the outermost bound, applied after the
+        single rounding pass, so no cap ever exceeds ``level_sizes[e]``
+
+    ``final='target'`` steps (the join's result-pair buffer) are exempt
+    from rounding and from the node-count clamp — they buffer rect pairs,
+    not node ids.
+    """
+    base_floor = lane_floor(fanout, lanes)
+    if floor is not None:
+        base_floor = max(base_floor, int(floor))
+    caps = []
+    for step in range(n_steps):
+        e = n_steps - 1 - step
+        cap = -(-int(target) // max(fanout ** e, 1)) * slack
+        if max_cap is not None:
+            cap = min(cap, max_cap)
+        cap = max(cap, base_floor)
+        caps.append(cap)
+    if caps and final == "boost":
+        caps[-1] = max(caps[-1], int(target))
+    elif caps and final == "target":
+        caps[-1] = int(target)
+    if lane_round and final != "target":
+        caps = [round_up_adaptive(c, lanes) for c in caps]
+    elif lane_round:
+        caps = ([round_up_adaptive(c, lanes) for c in caps[:-1]]
+                + [caps[-1]])
+    if level_sizes is not None:
+        # the node-count clamp is the outer bound on every step: a frontier
+        # holds distinct nodes of its level, so this clamp can never cause
+        # overflow — it only removes padded slots
+        clamped = []
+        for step, cap in enumerate(caps):
+            e = n_steps - 1 - step
+            if final == "target" and step == n_steps - 1:
+                clamped.append(cap)       # result buffer, not a frontier
+            else:
+                clamped.append(min(cap, int(level_sizes[e])))
+        caps = clamped
     return tuple(caps)
 
 
 def select_frontier_caps(tree, result_cap: int, slack: int = 4,
                          min_cap: int = 128,
-                         lanes: int = LANES) -> Tuple[int, ...]:
-    """Select frontier capacity entering each level (root-1 … leaf): the
-    historical ``select_vector.frontier_caps`` policy."""
+                         lanes: int = LANES,
+                         policy: str = "static") -> Tuple[int, ...]:
+    """Select frontier capacity entering each level (root-1 … leaf).
+
+    ``policy='static'`` is the historical ``select_vector.frontier_caps``
+    policy (with the boost re-clamp fix); ``policy='adaptive'`` is the
+    occupancy-adaptive tight tier."""
+    sizes = [lvl.n_nodes for lvl in tree.levels]
+    if policy == "adaptive":
+        return adaptive_caps(
+            tree.height - 1, tree.fanout, result_cap, slack=slack,
+            level_sizes=sizes, lanes=lanes, final="boost")
     return geometric_caps(
         tree.height - 1, tree.fanout, result_cap, slack=slack,
-        min_cap=min_cap,
-        level_sizes=[lvl.n_nodes for lvl in tree.levels],
-        lanes=lanes, final="boost")
+        min_cap=min_cap, level_sizes=sizes, lanes=lanes, final="boost")
+
+
+def _distance_floor(k: int, fanout: int, slack: int) -> int:
+    """Adaptive floor for τ-pruned distance frontiers: the survivors of τ
+    pruning are the nodes inside the current distance band — roughly O(k)
+    of them per level regardless of fanout (measured: ~2k–4k rows on
+    uniform data), NOT the ``k / fanout^e`` of the geometric model.  Floor
+    at ``slack·max(k, 2)`` rows so the tight tier holds the τ band without
+    chronically escalating, and never below ``ceil(k / fanout)`` so the
+    engine's τ-tightening gate (``cap · fanout >= k``) fires at the same
+    levels as the static tier — τ admissibility never depends on the
+    tier."""
+    return max(int(slack) * max(int(k), 2),
+               -(-int(k) // max(int(fanout), 1)))
 
 
 def knn_frontier_caps(tree, k: int, slack: int = 4,
-                      min_cap: int = 64, lanes: int = LANES) -> Tuple[int, ...]:
-    """kNN/kNN-join frontier capacity entering each level (root-1 … leaf):
-    the historical ``knn_vector.knn_frontier_caps`` policy."""
+                      min_cap: int = 64, lanes: int = LANES,
+                      policy: str = "static") -> Tuple[int, ...]:
+    """kNN/kNN-join frontier capacity entering each level (root-1 … leaf).
+
+    The adaptive tier floors every step at ``_distance_floor`` rows (the
+    τ-band width) instead of the static 64-row minimum."""
+    sizes = [lvl.n_nodes for lvl in tree.levels]
+    if policy == "adaptive":
+        return adaptive_caps(
+            tree.height - 1, tree.fanout, k, slack=slack,
+            level_sizes=sizes, lanes=lanes,
+            floor=_distance_floor(k, tree.fanout, slack))
     return geometric_caps(
         tree.height - 1, tree.fanout, k, slack=slack, min_cap=min_cap,
-        level_sizes=[lvl.n_nodes for lvl in tree.levels], lanes=lanes)
+        level_sizes=sizes, lanes=lanes)
 
 
 def join_pair_caps(height: int, fanout: int, result_cap: int,
-                   base: int = 1024) -> Tuple[int, ...]:
+                   base: int = 1024,
+                   level_sizes: Optional[Sequence[int]] = None,
+                   policy: str = "static") -> Tuple[int, ...]:
     """Pair-frontier capacity after each join descent step (last = result
-    pairs): the historical ``join_vector.default_pair_caps`` policy.  Pair
-    frontiers are flat (P,) buffers consumed tile-wise, so they skip the
-    lane round-up."""
+    pairs).  Pair frontiers are flat (P,) buffers consumed tile-wise, so
+    they skip the lane round-up.
+
+    ``level_sizes`` for the adaptive tier are the **reachable pair counts**
+    per level (outer node count × inner node count of the chain-elevated
+    trees, coarse level last — the same ``e`` indexing as node counts);
+    the final result-pair step buffers rect pairs and is exempt."""
+    if policy == "adaptive":
+        return adaptive_caps(
+            height, fanout, result_cap, slack=4,
+            level_sizes=level_sizes, max_cap=4 * result_cap,
+            lane_round=False, final="target",
+            floor=lane_floor(fanout))
     return geometric_caps(
         height, fanout, result_cap, slack=4, min_cap=base,
         max_cap=4 * result_cap, lane_round=False, final="target")
+
+
+def filtered_frontier_caps(tree, k: int, slack: int = 8,
+                           min_cap: int = 256, lanes: int = LANES,
+                           policy: str = "static") -> Tuple[int, ...]:
+    """Filtered-kNN frontier caps: the kNN policy with wider static slack
+    (predicate rejection thins candidates, so the static tier over-
+    provisions).  The adaptive tier uses the same occupancy-derived floors
+    as plain kNN — rejection shrinks *live* lanes, which is exactly what
+    escalation already covers."""
+    sizes = [lvl.n_nodes for lvl in tree.levels]
+    if policy == "adaptive":
+        return adaptive_caps(
+            tree.height - 1, tree.fanout, k, slack=slack,
+            level_sizes=sizes, lanes=lanes,
+            floor=_distance_floor(k, tree.fanout, slack))
+    return geometric_caps(
+        tree.height - 1, tree.fanout, k, slack=slack, min_cap=min_cap,
+        level_sizes=sizes, lanes=lanes)
 
 
 def browse_caps(tree, k: int, slack: int = 4,
@@ -117,13 +270,25 @@ def browse_caps(tree, k: int, slack: int = 4,
                       accumulate between batches.  The root level holds at
                       most the root itself.
       pool_cap      — scored-leaf candidate pool (emitted k at a time).
-    """
-    frontier = knn_frontier_caps(tree, k, slack=slack, lanes=lanes)
-    deep = geometric_caps(
+
+    Browse keeps the static cap *magnitudes* (its cursor state pins buffer
+    shapes across resumes, so it cannot ride the two-tier escalation), but
+    every floor routes through the layout-aware rounding: values are
+    floored in base-``LANES`` rows and then ``round_up_adaptive``d to the
+    layout lane width, so the D3 layout's 256-wide lanes no longer double
+    the historical 128/512 pool/defer floors (D1 caps are bit-identical to
+    the historical policy)."""
+    def fl(c: int) -> int:
+        return round_up_adaptive(round_up_to_lanes(c, LANES), lanes)
+
+    frontier = tuple(fl(c) for c in geometric_caps(
+        tree.height - 1, tree.fanout, k, slack=slack, min_cap=64,
+        level_sizes=[lvl.n_nodes for lvl in tree.levels], lane_round=False))
+    deep = tuple(fl(c) for c in geometric_caps(
         tree.height - 1, tree.fanout, k, slack=4 * slack, min_cap=128,
-        level_sizes=[lvl.n_nodes for lvl in tree.levels], lanes=lanes)
+        level_sizes=[lvl.n_nodes for lvl in tree.levels], lane_round=False))
     # geometric_caps orders coarse → fine; defer_caps indexes by level
     # (0 = leaf-adjacent … height-1 = root)
     defer = tuple(reversed(deep)) + (1,)
-    pool_cap = round_up_to_lanes(max(pool_slack * k, 512), lanes)
+    pool_cap = fl(max(pool_slack * k, 512))
     return frontier, defer, pool_cap

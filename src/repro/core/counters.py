@@ -21,6 +21,20 @@ reproduce the paper's relative claims:
                        per-level stage model is the ``StageModel`` each
                        ``OperatorSpec`` owns (core/traversal.py); fused
                        kernels collapse a level to one launch.
+
+Occupancy counters (the adaptive-caps observability surface):
+
+  lanes_live         — per descent step (coarse → fine, fixed ``OCC_STEPS``
+                       slots): frontier slots that held a real node/pair
+                       when the level was scored, summed over the batch
+  lanes_padded       — per descent step: allocated-but-empty frontier slots
+                       the engine still paid ``fanout`` compares for.  The
+                       live/(live+padded) ratio per step is exactly the
+                       padded-work waste the occupancy-adaptive caps policy
+                       (core/caps.py) exists to shrink.
+  escalations        — overflow escalations taken by a two-tier engine
+                       (traversal.make_escalating_engine): batches re-run on
+                       the full-caps tier after the tight tier overflowed
 """
 from __future__ import annotations
 
@@ -28,6 +42,18 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# fixed per-step occupancy slots: every engine writes step s into
+# min(s, OCC_STEPS - 1), so Counters from engines over trees of different
+# heights (two-phase routing, replica merges, serve aggregation) always
+# add/reduce without shape mismatches.  Trees here are far shallower than 8.
+OCC_STEPS = 8
+
+
+def occupancy_zeros() -> jnp.ndarray:
+    """A zeroed per-step occupancy vector (int32, ``OCC_STEPS`` slots)."""
+    return jnp.zeros((OCC_STEPS,), jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +101,11 @@ class Counters:
                                      # branch-free; paper S3 logical/bitwise)
     dispatches: jax.Array | int = 0  # device-program launches (per-spec
                                      # StageModel above)
+    lanes_live: jax.Array | int = 0      # per-step live frontier slots
+                                         # ((OCC_STEPS,) int32 from engines;
+                                         # scalar 0 until an engine writes)
+    lanes_padded: jax.Array | int = 0    # per-step padded frontier slots
+    escalations: jax.Array | int = 0     # two-tier overflow escalations
 
     def tree_flatten(self):
         f = dataclasses.fields(self)
@@ -92,8 +123,21 @@ class Counters:
         out = {}
         for f in dataclasses.fields(self):
             v = getattr(self, f.name)
-            out[f.name] = int(v) if not isinstance(v, int) else v
+            if isinstance(v, int):
+                out[f.name] = v
+            else:
+                a = np.asarray(v)
+                out[f.name] = a.astype(np.int64).tolist() if a.ndim \
+                    else int(a)
         return out
+
+    def occupancy(self) -> float:
+        """Fraction of frontier slots that were live across all recorded
+        steps (1.0 when no engine recorded occupancy)."""
+        live = float(np.asarray(self.lanes_live).sum())
+        padded = float(np.asarray(self.lanes_padded).sum())
+        total = live + padded
+        return live / total if total else 1.0
 
     def validate_dispatches(self, stage_model: StageModel, height: int, *,
                             fused: bool = False,

@@ -110,10 +110,24 @@ def flip_indices_gather(i_lx: jax.Array, o_hx: jax.Array) -> jax.Array:
 
 
 def default_pair_caps(height: int, fanout: int, result_cap: int,
-                      base: int = 1024) -> Tuple[int, ...]:
+                      base: int = 1024, level_sizes=None,
+                      policy: str = "static") -> Tuple[int, ...]:
     """Pair-frontier capacity after each descent step (last = result pairs)
-    — the unified geometric policy (core/caps.py)."""
-    return caps_policy.join_pair_caps(height, fanout, result_cap, base=base)
+    — the unified policy (core/caps.py).  ``policy='adaptive'`` selects the
+    occupancy-adaptive tight tier, clamped to ``level_sizes`` — the
+    reachable pair counts per level (outer × inner node counts of the
+    chain-elevated trees)."""
+    return caps_policy.join_pair_caps(height, fanout, result_cap, base=base,
+                                      level_sizes=level_sizes, policy=policy)
+
+
+def reachable_pair_counts(to: RTree, ti: RTree) -> Tuple[int, ...]:
+    """Per-level reachable pair count for two chain-elevated equal-height
+    trees, leaf level first (the same ``e`` indexing the caps policies use
+    for node counts): no pair frontier can hold more distinct pairs than
+    the product of the two levels' node counts."""
+    return tuple(o.n_nodes * i.n_nodes
+                 for o, i in zip(to.levels, ti.levels))
 
 
 def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
@@ -121,7 +135,7 @@ def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
                   pair_caps: Optional[Sequence[int]] = None,
                   o3: bool = False, o4: bool = False,
                   o5: Optional[str] = None, backend: Optional[str] = None,
-                  fused: bool = False):
+                  fused: bool = False, caps_mode: str = "adaptive"):
     """Build the jitted pair-frontier join: () → (pairs (R,2), n, Counters).
 
     ``o5``: None | 'dense' | 'gather' — how flip indices are computed (both
@@ -148,11 +162,6 @@ def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
     to, ti = elevate(tree_o, h), elevate(tree_i, h)
     layers_o = tree_layout(to, layout)
     layers_i = tree_layout(ti, layout)
-    if pair_caps is None:
-        pair_caps = default_pair_caps(h, max(to.fanout, ti.fanout), result_cap)
-    pair_caps = tuple(pair_caps)
-    if len(pair_caps) != h:
-        raise ValueError(f"need {h} pair caps, got {len(pair_caps)}")
 
     def _score_stage_counters(o_ids, i_ids, gathered, stages, mask_or_none):
         """Shared O3/O4/O5 counter modelling for the unfused and fused
@@ -260,18 +269,40 @@ def make_join_bfs(tree_o: RTree, tree_i: RTree, layout: str = "d1",
         return ((oa[None], ob[None]), n_pairs[None], f_ovf[None],
                 go[0].shape[1], stages, delta)
 
-    run = traversal.make_mask_engine(
-        JOIN_SPEC, height=h, caps=pair_caps[:-1], result_cap=pair_caps[-1],
-        score=score, fused_level=fused_level if fused else None, n_streams=2)
     rects_o = to.rects if layout == "d3" else None
     rects_i = ti.rects if layout == "d3" else None
     ctx = (layers_o, layers_i, rects_o, rects_i)
 
-    def fn():
-        res, counts, ctr = run(ctx)
-        pairs = jnp.stack([res[0][0], res[1][0]], axis=1)
-        return pairs, counts[0], ctr
-    return fn
+    def build(pair_caps_):
+        pair_caps_ = tuple(pair_caps_)
+        if len(pair_caps_) != h:
+            raise ValueError(f"need {h} pair caps, got {len(pair_caps_)}")
+        run = traversal.make_mask_engine(
+            JOIN_SPEC, height=h, caps=pair_caps_[:-1],
+            result_cap=pair_caps_[-1], score=score,
+            fused_level=fused_level if fused else None, n_streams=2)
+
+        def fn():
+            res, counts, ctr = run(ctx)
+            pairs = jnp.stack([res[0][0], res[1][0]], axis=1)
+            return pairs, counts[0], ctr
+        return fn
+
+    if pair_caps is not None:
+        return build(pair_caps)
+    fanout = max(to.fanout, ti.fanout)
+    full = default_pair_caps(h, fanout, result_cap)
+    if caps_mode == "static":
+        return build(full)
+    # pair_caps[i] bounds the pair frontier at level h-2-i (the children of
+    # the level scored at step i), so the adaptive clamp at e = h-1-i needs
+    # the pair count one level finer: sizes[e] = pairs(e-1); the final
+    # e = 0 step is the result-pair buffer, exempt from the clamp
+    pc = reachable_pair_counts(to, ti)
+    sizes = (pc[0],) + pc[:-1]
+    tight = default_pair_caps(h, fanout, result_cap, level_sizes=sizes,
+                              policy="adaptive")
+    return traversal.maybe_escalating(build, tight, full)
 
 
 JOIN_SPEC = traversal.register(traversal.OperatorSpec(

@@ -45,12 +45,15 @@ from .rtree import RTree
 
 
 def filtered_caps(tree: RTree, k: int, slack: int = 8,
-                  min_cap: int = 256, lanes: int = None) -> Tuple[int, ...]:
+                  min_cap: int = 256, lanes: int = None,
+                  policy: str = "static") -> Tuple[int, ...]:
     """kNN caps with extra headroom: τ only tightens on window-contained
-    children, so frontiers shrink later than in unfiltered kNN."""
+    children, so frontiers shrink later than in unfiltered kNN.
+    ``policy='adaptive'`` selects the occupancy-adaptive tight tier."""
     kw = {} if lanes is None else dict(lanes=lanes)
-    return caps_policy.knn_frontier_caps(tree, k, slack=slack,
-                                         min_cap=min_cap, **kw)
+    return caps_policy.filtered_frontier_caps(tree, k, slack=slack,
+                                              min_cap=min_cap, policy=policy,
+                                              **kw)
 
 
 def make_knn_filtered_score(tree: RTree, layout: str,
@@ -122,25 +125,38 @@ def make_knn_filtered_score(tree: RTree, layout: str,
 def make_knn_filtered_bfs(tree: RTree, k: int, layout: str = "d1",
                           caps: Optional[Sequence[int]] = None,
                           backend: Optional[str] = None,
-                          fused: bool = False):
+                          fused: bool = False,
+                          caps_mode: str = "adaptive"):
     """Build the jitted batched filtered kNN: queries (B, 6) → (ids (B, k),
     sq-dists (B, k), Counters) — rows are (px, py, wlx, wly, whx, why), the
     result the k nearest data rects intersecting [wlx, wly, whx, why].
-    Signature/semantics otherwise as ``make_knn_bfs``.
+    Signature/semantics otherwise as ``make_knn_bfs``; ``caps_mode``
+    behaves as there ("adaptive" = occupancy-tight tier with overflow
+    escalation to the static tier, "static" = historical caps only).
     """
     if k <= 0:
         raise ValueError("k must be positive")
     if fused:
         raise ValueError("knn_filtered has no fused generation")
     ctx, score = make_knn_filtered_score(tree, layout, backend)
-    if caps is None:
-        caps = filtered_caps(tree, k, lanes=layout_lanes(layout))
-    caps = tuple(caps)
-    if len(caps) != tree.height - 1:
-        raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
-    run = traversal.make_distance_engine(
-        KNN_FILTERED_SPEC, height=tree.height, k=k, caps=caps, score=score)
-    return functools.partial(run, ctx)
+
+    def build(caps_):
+        caps_ = tuple(caps_)
+        if len(caps_) != tree.height - 1:
+            raise ValueError(f"need {tree.height - 1} caps, got {len(caps_)}")
+        run = traversal.make_distance_engine(
+            KNN_FILTERED_SPEC, height=tree.height, k=k, caps=caps_,
+            score=score)
+        return functools.partial(run, ctx)
+
+    if caps is not None:
+        return build(caps)
+    ll = layout_lanes(layout)
+    full = filtered_caps(tree, k, lanes=ll)
+    if caps_mode == "static":
+        return build(full)
+    tight = filtered_caps(tree, k, lanes=ll, policy="adaptive")
+    return traversal.maybe_escalating(build, tight, full)
 
 
 # Per unfused level: score gather + distance math, the window-mask compose

@@ -168,7 +168,8 @@ def make_knn_join_score(tree: RTree, layout: str, backend: Optional[str]):
 
 def make_knn_join_bfs(tree: RTree, k: int, layout: str = "d1",
                       caps: Optional[Sequence[int]] = None,
-                      backend: Optional[str] = None, fused: bool = False):
+                      backend: Optional[str] = None, fused: bool = False,
+                      caps_mode: str = "adaptive"):
     """Build the jitted batched kNN-join: rects (B, 4) → (ids, dists,
     Counters).
 
@@ -192,11 +193,6 @@ def make_knn_join_bfs(tree: RTree, k: int, layout: str = "d1",
     if fused and layout != "d1":
         raise ValueError("fused kNN-join requires layout d1")
     ctx, score = make_knn_join_score(tree, layout, backend)
-    if caps is None:
-        caps = knn_frontier_caps(tree, k, lanes=layout_lanes(layout))
-    caps = tuple(caps)
-    if len(caps) != tree.height - 1:
-        raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
 
     def fused_level(ctx_, li, ids, qrects, tau, leaf, cap):
         from repro.kernels import ops as _kops
@@ -214,10 +210,24 @@ def make_knn_join_bfs(tree: RTree, k: int, layout: str = "d1",
 
     # the traversal loop (τ tightening, MINDIST pruning, beam enqueue, leaf
     # top-k, counters) is the shared distance engine — only scoring differs
-    run = traversal.make_distance_engine(
-        KNN_JOIN_SPEC, height=tree.height, k=k, caps=caps, score=score,
-        fused_level=fused_level if fused else None)
-    return functools.partial(run, ctx)
+    def build(caps_):
+        caps_ = tuple(caps_)
+        if len(caps_) != tree.height - 1:
+            raise ValueError(
+                f"need {tree.height - 1} caps, got {len(caps_)}")
+        run = traversal.make_distance_engine(
+            KNN_JOIN_SPEC, height=tree.height, k=k, caps=caps_, score=score,
+            fused_level=fused_level if fused else None)
+        return functools.partial(run, ctx)
+
+    if caps is not None:
+        return build(caps)
+    ll = layout_lanes(layout)
+    full = knn_frontier_caps(tree, k, lanes=ll)
+    if caps_mode == "static":
+        return build(full)
+    tight = knn_frontier_caps(tree, k, lanes=ll, policy="adaptive")
+    return traversal.maybe_escalating(build, tight, full)
 
 
 KNN_JOIN_SPEC = traversal.register(traversal.OperatorSpec(

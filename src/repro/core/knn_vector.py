@@ -135,12 +135,15 @@ def _d3_dists_for_level(layer: LevelD3, ids: jax.Array, points: jax.Array,
 
 
 def knn_frontier_caps(tree: RTree, k: int, slack: int = 4,
-                      min_cap: int = 64, lanes: int = None) -> Tuple[int, ...]:
+                      min_cap: int = 64, lanes: int = None,
+                      policy: str = "static") -> Tuple[int, ...]:
     """Frontier capacity entering each level (root-1 … leaf) — the unified
-    geometric policy (core/caps.py)."""
+    policy (core/caps.py); ``policy='adaptive'`` selects the occupancy-
+    adaptive tight tier."""
     kw = {} if lanes is None else dict(lanes=lanes)
     return caps_policy.knn_frontier_caps(tree, k, slack=slack,
-                                         min_cap=min_cap, **kw)
+                                         min_cap=min_cap, policy=policy,
+                                         **kw)
 
 
 def make_knn_score(tree: RTree, layout: str, backend: Optional[str]):
@@ -190,7 +193,8 @@ def make_knn_score(tree: RTree, layout: str, backend: Optional[str]):
 
 def make_knn_bfs(tree: RTree, k: int, layout: str = "d1",
                  caps: Optional[Sequence[int]] = None,
-                 backend: Optional[str] = None, fused: bool = False):
+                 backend: Optional[str] = None, fused: bool = False,
+                 caps_mode: str = "adaptive"):
     """Build the jitted batched kNN: points (B, 2) → (ids, dists, Counters).
 
     ids: (B, k) rect ids sorted by distance (-1 pad when k > n_rects);
@@ -215,11 +219,6 @@ def make_knn_bfs(tree: RTree, k: int, layout: str = "d1",
     if fused and layout != "d1":
         raise ValueError("fused kNN requires layout d1")
     ctx, score = make_knn_score(tree, layout, backend)
-    if caps is None:
-        caps = knn_frontier_caps(tree, k, lanes=layout_lanes(layout))
-    caps = tuple(caps)
-    if len(caps) != tree.height - 1:
-        raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
 
     def fused_level(ctx_, li, ids, points, tau, leaf, cap):
         from repro.kernels import ops as _kops
@@ -235,10 +234,24 @@ def make_knn_bfs(tree: RTree, k: int, layout: str = "d1",
         return _kops.knn_level_fused(*args, tau, cap=cap, k=k,
                                      tighten=tighten, backend=backend) + (f,)
 
-    run = traversal.make_distance_engine(
-        KNN_SPEC, height=tree.height, k=k, caps=caps, score=score,
-        fused_level=fused_level if fused else None)
-    return functools.partial(run, ctx)
+    def build(caps_):
+        caps_ = tuple(caps_)
+        if len(caps_) != tree.height - 1:
+            raise ValueError(
+                f"need {tree.height - 1} caps, got {len(caps_)}")
+        run = traversal.make_distance_engine(
+            KNN_SPEC, height=tree.height, k=k, caps=caps_, score=score,
+            fused_level=fused_level if fused else None)
+        return functools.partial(run, ctx)
+
+    if caps is not None:
+        return build(caps)
+    ll = layout_lanes(layout)
+    full = knn_frontier_caps(tree, k, lanes=ll)
+    if caps_mode == "static":
+        return build(full)
+    tight = knn_frontier_caps(tree, k, lanes=ll, policy="adaptive")
+    return traversal.maybe_escalating(build, tight, full)
 
 
 KNN_SPEC = traversal.register(traversal.OperatorSpec(

@@ -56,6 +56,30 @@ def round_up_to_lanes(n: int, lanes: int = LANES) -> int:
     return max(-(-int(n) // lanes), 1) * lanes
 
 
+def lane_floor(fanout: int, lanes: int = LANES) -> int:
+    """Smallest frontier worth keeping: enough rows that one level step can
+    fill a full lane grid of candidate children (``ceil(lanes / fanout)``).
+
+    This is the layout-aware replacement for the fixed 128/256-row minimums:
+    the per-level padded cost is rows × fanout compares, so the floor scales
+    *down* as fanout (or the layout's boxes-per-row, folded into ``lanes``)
+    grows, instead of pinning every small frontier to a full lane row."""
+    return max(-(-int(lanes) // max(int(fanout), 1)), 1)
+
+
+def round_up_adaptive(n: int, lanes: int = LANES) -> int:
+    """Adaptive frontier rounding: multiples of ``lanes`` at or above one
+    lane row, the next power of two below it — block shapes stay regular
+    without padding a 4-row frontier out to a full 128/256-row lane."""
+    n = max(int(n), 1)
+    if n >= lanes:
+        return round_up_to_lanes(n, lanes)
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class LevelD0:

@@ -117,18 +117,21 @@ def _d3_masks_for_level(layer: LevelD3, ids: jax.Array, queries: jax.Array,
 
 
 def frontier_caps(tree: RTree, result_cap: int, slack: int = 4,
-                  min_cap: int = 128, lanes: int = None) -> Tuple[int, ...]:
+                  min_cap: int = 128, lanes: int = None,
+                  policy: str = "static") -> Tuple[int, ...]:
     """Frontier capacity entering each level (root-1 … leaf) + result cap —
-    the unified geometric policy (core/caps.py)."""
+    the unified policy (core/caps.py); ``policy='adaptive'`` selects the
+    occupancy-adaptive tight tier."""
     kw = {} if lanes is None else dict(lanes=lanes)
     return caps_policy.select_frontier_caps(tree, result_cap, slack=slack,
-                                            min_cap=min_cap, **kw)
+                                            min_cap=min_cap, policy=policy,
+                                            **kw)
 
 
 def make_select_bfs(tree: RTree, layout: str = "d1", result_cap: int = 4096,
                     caps: Optional[Sequence[int]] = None,
                     count_only: bool = False, backend: Optional[str] = None,
-                    fused: bool = False):
+                    fused: bool = False, caps_mode: str = "adaptive"):
     """Build the jitted batched BFS select: queries (B,4) → results.
 
     ``backend``: None → layout-specific jnp math; 'pallas'/'pallas_interpret'/
@@ -143,6 +146,11 @@ def make_select_bfs(tree: RTree, layout: str = "d1", result_cap: int = 4096,
     from 3 per level to 1.  Results are bit-compatible with the unfused
     path.
 
+    ``caps_mode`` (used only when ``caps`` is None): 'adaptive' builds the
+    two-tier overflow-escalating engine — occupancy-adaptive tight caps,
+    escalating to the static caps on in-program overflow, bit-identical to
+    the static path; 'static' builds the single static-caps engine.
+
     Returns fn(queries) → (ids (B, result_cap), counts (B,), Counters)
     (ids omitted in count_only mode).
     """
@@ -151,11 +159,6 @@ def make_select_bfs(tree: RTree, layout: str = "d1", result_cap: int = 4096,
     if fused and backend is None:
         raise ValueError("fused select requires a kernel backend")
     layers = tree_layout(tree, layout)
-    if caps is None:
-        caps = frontier_caps(tree, result_cap, lanes=layout_lanes(layout))
-    caps = tuple(caps)
-    if len(caps) != tree.height - 1:
-        raise ValueError(f"need {tree.height - 1} caps, got {len(caps)}")
     levels = tree.levels if backend is not None else None
     rects = tree.rects if layout == "d3" and backend is None else None
 
@@ -209,21 +212,36 @@ def make_select_bfs(tree: RTree, layout: str = "d1", result_cap: int = 4096,
             cap=cap, backend=backend)
         return (nxt,), qcnt, o, f, 4, None
 
-    run = traversal.make_mask_engine(
-        SELECT_SPEC, height=tree.height, caps=caps, result_cap=result_cap,
-        score=score, fused_level=fused_level if fused else None,
-        count_only=count_only)
     ctx = (layers, levels, rects)
 
-    if count_only:
-        def fn(queries: jax.Array):
-            _, counts, ctr = run(ctx, queries)
-            return counts, ctr
-    else:
-        def fn(queries: jax.Array):
-            res, counts, ctr = run(ctx, queries)
-            return res[0], counts, ctr
-    return fn
+    def build(caps_):
+        caps_ = tuple(caps_)
+        if len(caps_) != tree.height - 1:
+            raise ValueError(
+                f"need {tree.height - 1} caps, got {len(caps_)}")
+        run = traversal.make_mask_engine(
+            SELECT_SPEC, height=tree.height, caps=caps_,
+            result_cap=result_cap, score=score,
+            fused_level=fused_level if fused else None,
+            count_only=count_only)
+        if count_only:
+            def fn(queries: jax.Array):
+                _, counts, ctr = run(ctx, queries)
+                return counts, ctr
+        else:
+            def fn(queries: jax.Array):
+                res, counts, ctr = run(ctx, queries)
+                return res[0], counts, ctr
+        return fn
+
+    if caps is not None:
+        return build(caps)
+    ll = layout_lanes(layout)
+    full = frontier_caps(tree, result_cap, lanes=ll)
+    if caps_mode == "static":
+        return build(full)
+    tight = frontier_caps(tree, result_cap, lanes=ll, policy="adaptive")
+    return traversal.maybe_escalating(build, tight, full)
 
 
 SELECT_SPEC = traversal.register(traversal.OperatorSpec(

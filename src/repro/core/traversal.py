@@ -48,8 +48,20 @@ import jax
 import jax.numpy as jnp
 
 from .compaction import _scatter_compact, beam_rows
-from .counters import Counters, StageModel
+from .counters import OCC_STEPS, Counters, StageModel, occupancy_zeros
 from .geometry import DIST_PAD, DIST_VALID_MAX
+
+
+def _occ_record(occ_live, occ_padded, *, step: int, valid, width: int,
+                batch: int):
+    """Fold one level's frontier occupancy into the per-step vectors:
+    ``valid`` is the (B, width) liveness mask of the frontier the level
+    scored; padded slots are the allocated-but-empty remainder."""
+    slot = min(step, OCC_STEPS - 1)
+    live = valid.sum().astype(jnp.int32)
+    total = jnp.int32(batch * width)
+    return (occ_live.at[slot].add(live),
+            occ_padded.at[slot].add(total - live))
 
 
 # ---------------------------------------------------------------------------
@@ -184,11 +196,17 @@ def make_mask_engine(spec: OperatorSpec, *, height: int,
         disp = 0
         ovf = jnp.zeros((b,), bool)
         counts = jnp.zeros((b,), jnp.int32)
+        occ_live = occupancy_zeros()
+        occ_padded = occupancy_zeros()
         res = None
         for li in range(height - 1, -1, -1):
             leaf = li == 0
             cap = result_cap if leaf else caps[height - 1 - li]
-            fcnt = (frontier[0] >= 0).sum(axis=1)
+            fvalid = frontier[0] >= 0
+            fcnt = fvalid.sum(axis=1)
+            occ_live, occ_padded = _occ_record(
+                occ_live, occ_padded, step=height - 1 - li, valid=fvalid,
+                width=frontier[0].shape[1], batch=b)
             if fused_level is not None:
                 vals, qcnt, o, f, stages, delta = fused_level(
                     ctx, li, frontier, qargs, cap)
@@ -227,7 +245,8 @@ def make_mask_engine(spec: OperatorSpec, *, height: int,
             _apply_delta(acc, delta, fcnt=fcnt, f=f, stages=stages,
                          hits=hits)
         ctr = Counters(enqueued=enq, overflow=ovf.any().astype(jnp.int32),
-                       dispatches=jnp.int32(disp), **acc)
+                       dispatches=jnp.int32(disp), lanes_live=occ_live,
+                       lanes_padded=occ_padded, **acc)
         return res, counts, ctr
 
     return run
@@ -285,11 +304,17 @@ def make_distance_engine(spec: OperatorSpec, *, height: int, k: int,
         waste = jnp.int32(0)
         disp = 0
         ovf = jnp.zeros((b,), bool)
+        occ_live = occupancy_zeros()
+        occ_padded = occupancy_zeros()
         res_ids = res_d = None
         for li in range(height - 1, -1, -1):
             leaf = li == 0
-            fcnt = (ids >= 0).sum(axis=1)
+            fvalid = ids >= 0
+            fcnt = fvalid.sum(axis=1)
             nodes = nodes + fcnt.sum()
+            occ_live, occ_padded = _occ_record(
+                occ_live, occ_padded, step=height - 1 - li, valid=fvalid,
+                width=ids.shape[1], batch=b)
             if fused_level is not None:
                 cap = k if leaf else caps[height - 1 - li]
                 out = fused_level(ctx, li, ids, queries, tau, leaf, cap)
@@ -362,10 +387,96 @@ def make_distance_engine(spec: OperatorSpec, *, height: int, k: int,
         ctr = Counters(nodes_visited=nodes, predicates=preds, vector_ops=vops,
                        enqueued=enq, pruned_inner=pruned, masked_waste=waste,
                        overflow=ovf.any().astype(jnp.int32),
-                       dispatches=jnp.int32(disp))
+                       dispatches=jnp.int32(disp), lanes_live=occ_live,
+                       lanes_padded=occ_padded)
         return res_ids, res_d, ctr
 
     return run
+
+
+# ---------------------------------------------------------------------------
+# Two-tier overflow-escalating engines
+# ---------------------------------------------------------------------------
+
+def make_escalating_engine(build, tight_caps: Sequence[int],
+                           full_caps: Sequence[int], *,
+                           stick_after: int = 3):
+    """Wrap an operator's engine builder into a two-tier overflow-escalating
+    runner.
+
+    ``build(caps)`` must return the operator's bound runner (``run(*args,
+    **kw) → (..., Counters)``) compiled for the given frontier caps.  The
+    tight tier is compiled immediately from the occupancy-adaptive caps
+    (core/caps.adaptive_caps — sized from the tree's true per-level node
+    counts and lane floors); the full static-caps tier is compiled lazily,
+    the first time a batch escalates.
+
+    Every batch runs on the tight tier first.  Overflow is detected
+    in-program — the engines' ``Counters.overflow`` flag covers frontier,
+    beam, and result-tally overflow — and read back as one scalar; an
+    overflowed batch is re-run on the full tier, whose result *is* the
+    static-caps result.  A batch that does not overflow on the tight tier
+    is bit-identical to the static path by construction: every live entry
+    survived compaction in the same relative order, and padded slots never
+    reach an emission stage (asserted across the oracle matrix per
+    layout × operator cell).  The escalated run's ``Counters.escalations``
+    is bumped so the serve/bench layers can see the fallback rate.
+
+    Hysteresis guard: a workload whose frontiers chronically exceed the
+    tight caps would otherwise pay BOTH tiers on every batch.  After
+    ``stick_after`` consecutive escalations the runner pins itself to the
+    full tier (steady-state latency equals the static engine, recorded via
+    ``stuck()``); the occupancy-adaptive sizing is a bet on the common
+    case, never a tax on the adversarial one.
+
+    The returned runner exposes ``tight_caps`` / ``full_caps``,
+    ``escalation_count()`` and ``stuck()`` for observability.  It is a
+    host-side wrapper (it branches on a device scalar), so it must not be
+    called under a trace — mesh/shard_map paths build single-tier engines
+    instead (``make_mesh_engine`` pins ``caps_mode='static'``).
+    """
+    tight_caps = tuple(int(c) for c in tight_caps)
+    full_caps = tuple(int(c) for c in full_caps)
+    tight = build(tight_caps)
+    state = {"full": None, "escalations": 0, "streak": 0}
+
+    def run(*args, **kw):
+        if state["streak"] >= stick_after:
+            out = state["full"](*args, **kw)
+            ctr = dataclasses.replace(
+                out[-1], escalations=out[-1].escalations + 1)
+            state["escalations"] += 1
+            return out[:-1] + (ctr,)
+        out = tight(*args, **kw)
+        if bool(jax.device_get(out[-1].overflow)):
+            if state["full"] is None:
+                state["full"] = build(full_caps)
+            out = state["full"](*args, **kw)
+            state["escalations"] += 1
+            state["streak"] += 1
+            ctr = dataclasses.replace(
+                out[-1], escalations=out[-1].escalations + 1)
+            out = out[:-1] + (ctr,)
+        else:
+            state["streak"] = 0
+        return out
+
+    run.tight_caps = tight_caps
+    run.full_caps = full_caps
+    run.escalation_count = lambda: state["escalations"]
+    run.stuck = lambda: state["streak"] >= stick_after
+    return run
+
+
+def maybe_escalating(build, tight_caps, full_caps):
+    """``make_escalating_engine`` unless the two tiers coincide (small
+    trees where the node-count clamp already equals the static caps) — then
+    the single-tier engine is returned directly."""
+    tight_caps = tuple(int(c) for c in tight_caps)
+    full_caps = tuple(int(c) for c in full_caps)
+    if tight_caps == full_caps:
+        return build(tight_caps)
+    return make_escalating_engine(build, tight_caps, full_caps)
 
 
 # ---------------------------------------------------------------------------
@@ -446,6 +557,11 @@ def make_mesh_engine(name: str, stacked_tree, ids_map, *, mesh,
                          f"mesh axis {axis!r} size {n_dev}")
     p_local = p_total // n_dev
     k = params.get("k")
+    # escalation branches on a host scalar — impossible under the shard_map
+    # trace — so mesh engines always compile the single static-caps tier
+    # (bit-identical to the escalating host path by construction)
+    params = dict(params)
+    params.setdefault("caps_mode", "static")
 
     def _local_engine(tree, active=None, tau_init=None, queries=None):
         """Instantiate the spec's builder on one partition's tree and run
@@ -697,7 +813,11 @@ def make_browse_engine(spec: OperatorSpec, *, height: int, batch_k: int,
             lost=jnp.full((b,), jnp.inf, jnp.float32),
             emitted=jnp.zeros((b,), jnp.int32),
             overflow=jnp.zeros((b,), bool),
-            ctr=Counters(*([zero] * 10)),
+            # occupancy vectors must take their (OCC_STEPS,) shape up front:
+            # the sharded browse loop carries this state through a
+            # lax.while_loop, so the pytree shapes are pinned at init
+            ctr=Counters(*([zero] * 10), lanes_live=occupancy_zeros(),
+                         lanes_padded=occupancy_zeros(), escalations=zero),
             descents=jnp.int32(0))
 
     @jax.jit
@@ -727,6 +847,8 @@ def make_browse_engine(spec: OperatorSpec, *, height: int, batch_k: int,
         def_d = list(state.def_d)
         lost = state.lost
         nodes = preds = vops = enq = pruned = waste = jnp.int32(0)
+        occ_live = occupancy_zeros()
+        occ_padded = occupancy_zeros()
         disp = 0
         for li in range(height - 1, -1, -1):
             leaf = li == 0
@@ -742,8 +864,12 @@ def make_browse_engine(spec: OperatorSpec, *, height: int, batch_k: int,
             def_ids[li] = jnp.where(act, -1, def_ids[li])
             def_d[li] = jnp.where(act, DIST_PAD, def_d[li])
             # score — identical stage to the fixed-k engine
-            fcnt = (ids >= 0).sum(axis=1)
+            fvalid = ids >= 0
+            fcnt = fvalid.sum(axis=1)
             nodes = nodes + fcnt.sum()
+            occ_live, occ_padded = _occ_record(
+                occ_live, occ_padded, step=height - 1 - li, valid=fvalid,
+                width=ids.shape[1], batch=b)
             md, mmd, ptr, stages = score(ctx, li, ids, queries, leaf)
             f = md.shape[-1]
             ev = stages if leaf else 2 * stages
@@ -786,7 +912,8 @@ def make_browse_engine(spec: OperatorSpec, *, height: int, batch_k: int,
                 lost = jnp.minimum(lost, bound)
         dctr = Counters(nodes_visited=nodes, predicates=preds,
                         vector_ops=vops, enqueued=enq, pruned_inner=pruned,
-                        masked_waste=waste, dispatches=jnp.int32(disp))
+                        masked_waste=waste, dispatches=jnp.int32(disp),
+                        lanes_live=occ_live, lanes_padded=occ_padded)
         return dataclasses.replace(
             state, pool_ids=pool_ids, pool_d=pool_d,
             def_ids=tuple(def_ids), def_d=tuple(def_d), lost=lost,

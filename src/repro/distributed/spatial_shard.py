@@ -72,7 +72,11 @@ class SpatialShards:
         self._forest = None
         self._mesh_programs = {}
         self._browse_starts = {}
-        self.last_counters = None   # merged Counters of the last mesh batch
+        # merged Counters of the last batch: mesh programs set it from the
+        # collective merge; host fallbacks sum the per-partition Counters
+        # (so scalar flags like overflow become "how many partition-batches
+        # tripped it" — use truthiness, and .occupancy() for lane waste)
+        self.last_counters = None
 
     @classmethod
     def build(cls, rects: np.ndarray, n_partitions: int, fanout: int = 64,
@@ -291,18 +295,22 @@ class SpatialShards:
                 for qi in range(len(queries))]
         routing = self.route(queries)
         results = [[] for _ in range(len(queries))]
+        acc = None
         for pi, part in enumerate(self.partitions):
             hit = np.nonzero(routing[:, pi])[0]
             if len(hit) == 0:
                 continue
             sel = self.engine_for("select", pi, result_cap=result_cap)
             sub = self._bucket(queries[hit])
-            ids, counts, _ = sel(jnp.asarray(sub))
+            ids, counts, ctr = sel(jnp.asarray(sub))
+            acc = ctr if acc is None else acc + ctr
             ids = np.asarray(ids)
             counts = np.asarray(counts)
             for qi, local_q in enumerate(hit):
                 found = ids[qi, :counts[qi]]
                 results[local_q].append(part.ids[found])
+        if acc is not None:
+            self.last_counters = acc
         return [np.sort(np.concatenate(r)) if r else
                 np.empty((0,), np.int64) for r in results]
 
@@ -357,6 +365,7 @@ class SpatialShards:
         else:
             rows = []
             ovf = False
+            acc = None
             for pi, part in enumerate(self.partitions):
                 # join engines close over BOTH trees, so the cache entry is
                 # valid only for the same probe-tree object
@@ -368,10 +377,13 @@ class SpatialShards:
                     self._engines[key] = cached
                 jn = cached[1]
                 pr, n_pairs, ctr = jn()
+                acc = ctr if acc is None else acc + ctr
                 pr = np.asarray(pr[:int(n_pairs)])
                 rows.append(np.stack(
                     [pr[:, 0], part.ids[pr[:, 1]]], axis=1))
                 ovf |= bool(int(ctr.overflow))
+            if acc is not None:
+                self.last_counters = acc
         cat = np.concatenate(rows).astype(np.int64) if rows else \
             np.empty((0, 2), np.int64)
         order = np.lexsort((cat[:, 1], cat[:, 0]))
@@ -399,7 +411,7 @@ class SpatialShards:
         ids = np.asarray(ids)[:b]
         dists = np.asarray(dists, np.float64)[:b]
         gids = np.where(ids >= 0, part.ids[np.maximum(ids, 0)], -1)
-        return gids, dists, bool(ctr.overflow)
+        return gids, dists, bool(ctr.overflow), ctr
 
     def knn(self, points: np.ndarray, k: int
             ) -> Tuple[np.ndarray, np.ndarray, bool]:
@@ -469,12 +481,15 @@ class SpatialShards:
         cand_ids = np.full((b, k), -1, np.int64)
         cand_d = np.full((b, k), np.inf)
         overflow = False
+        acc = None
         # ---- phase 1: primary partitions ----
         for pi in range(p):
             sel = np.nonzero(primary == pi)[0]
             if len(sel) == 0:
                 continue
-            gids, dists, ovf = self._run_partition(op, pi, queries[sel], k)
+            gids, dists, ovf, ctr = self._run_partition(
+                op, pi, queries[sel], k)
+            acc = ctr if acc is None else acc + ctr
             cand_ids[sel], cand_d[sel] = gids, dists
             overflow |= ovf
         # τ: current k-th best (inf when the primary held < k rects)
@@ -488,7 +503,9 @@ class SpatialShards:
             sel = np.nonzero((primary != pi) & (dmat[:, pi] <= tau_cmp))[0]
             if len(sel) == 0:
                 continue
-            gids, dists, ovf = self._run_partition(op, pi, queries[sel], k)
+            gids, dists, ovf, ctr = self._run_partition(
+                op, pi, queries[sel], k)
+            acc = ctr if acc is None else acc + ctr
             overflow |= ovf
             merged_d = np.concatenate([cand_d[sel], dists], axis=1)
             merged_i = np.concatenate([cand_ids[sel], gids], axis=1)
@@ -498,6 +515,8 @@ class SpatialShards:
             cand_d[sel] = np.take_along_axis(merged_d, order, axis=1)
             cand_ids[sel] = np.take_along_axis(merged_i, order, axis=1)
             tau[sel] = cand_d[sel, k - 1]
+        if acc is not None:
+            self.last_counters = acc
         return cand_ids, cand_d, overflow
 
     # ------------------------------------------------------------------

@@ -446,6 +446,23 @@ def _serve_queued(args, spec):
            "reissues": summary["reissues"],
            "failures": summary["failures"],
            "failed_requests": len(errors)}
+    # frontier occupancy across the fleet: each replica's last_counters
+    # carries the per-step live/padded lane tallies its engines recorded,
+    # so live/(live+padded) is the padded-work fraction the adaptive caps
+    # policy is shaving (1.0 when no engine recorded occupancy)
+    ctrs = [e.last_counters for e in engines
+            if getattr(e, "last_counters", None) is not None]
+    if ctrs:
+        total = ctrs[0]
+        for c in ctrs[1:]:
+            total = total + c
+        occ = total.occupancy()
+        esc = int(np.asarray(total.escalations).sum())
+        out["occupancy"] = occ
+        out["escalations"] = esc
+        print(f"frontier occupancy {occ:.1%} "
+              f"(live/(live+padded) lanes over the last batch per replica); "
+              f"{esc} overflow escalation(s)")
     if args.chaos:
         print(f"chaos: {injector.injected['exceptions']} injected "
               f"exceptions, {injector.injected['delays']} injected delays "

@@ -381,6 +381,41 @@ def assert_matches_oracle(op: str, layouts=LAYOUTS, backends=(None,),
 
 
 # --------------------------------------------------------------------------
+# caps-tier axis: occupancy-adaptive ≡ static, bit-for-bit
+# --------------------------------------------------------------------------
+
+
+def assert_adaptive_static_parity(op: str, layouts=LAYOUTS, seeds=(0,),
+                                  **params) -> int:
+    """The two-tier capacity system's oracle axis: for every layout ×
+    operator cell, the occupancy-adaptive engine (tight caps + overflow
+    escalation, ``caps_mode='adaptive'`` — the default) must return
+    RESULTS bit-identical to the static-caps engine.  Counters
+    legitimately differ (the tight tier pays fewer padded lanes and
+    records occupancy/escalations), so only the result leaves are
+    compared.  Returns cells verified."""
+    spec = OPS[op]
+    cells = 0
+    for seed in seeds:
+        inst = spec.make(seed, **params)
+        for layout in layouts:
+            ctx = f"adaptive-vs-static {op} layout={layout} seed={seed}"
+            args, kwargs = spec.engine_args(inst, layout, None, False)
+            adaptive = traversal.build(spec.spec_name, *args,
+                                       caps_mode="adaptive", **kwargs)
+            static = traversal.build(spec.spec_name, *args,
+                                     caps_mode="static", **kwargs)
+            qs = inst.get("queries")
+            ra = adaptive(jnp.asarray(qs)) if qs is not None else adaptive()
+            rs = static(jnp.asarray(qs)) if qs is not None else static()
+            _assert_bitwise_equal(ra[:-1], rs[:-1], ctx)
+            spec.check(inst, ra, ctx)
+            cells += 1
+    assert cells > 0
+    return cells
+
+
+# --------------------------------------------------------------------------
 # sharded axis: host-orchestrated ≡ mesh-SPMD, invariant under permutation
 # --------------------------------------------------------------------------
 

@@ -280,3 +280,92 @@ def test_property_sharded_browse_prefix_consistency(n, n_partitions, kb,
     diff = ids != fi
     if diff.any():                     # ids may differ only at tied distances
         np.testing.assert_array_equal(d[diff], fd[diff])
+
+
+# ---------------------------------------------------------------------------
+# occupancy-adaptive caps policy (core/caps.py)
+# ---------------------------------------------------------------------------
+
+class _CapsLevel:
+    def __init__(self, n):
+        self.n_nodes = n
+
+
+class _CapsTree:
+    """Caps policies only consume (height, fanout, per-level node counts)."""
+    def __init__(self, fanout, sizes):
+        self.fanout = fanout
+        self.height = len(sizes)
+        self.levels = [_CapsLevel(n) for n in sizes]
+
+
+def _level_sizes(n_rects, fanout):
+    sizes = [max(-(-n_rects // fanout), 1)]
+    while sizes[-1] > 1:
+        sizes.append(max(-(-sizes[-1] // fanout), 1))
+    return sizes
+
+
+@settings(max_examples=80, deadline=None)
+@given(n=st.integers(1, 2_000_000),
+       fanout=st.sampled_from([4, 16, 64, 256]),
+       target=st.integers(1, 100_000), bump=st.integers(0, 100_000),
+       lanes=st.sampled_from([128, 256]),
+       op=st.sampled_from(["select", "knn", "filtered"]))
+def test_property_adaptive_caps_invariants(n, fanout, target, bump, lanes,
+                                           op):
+    """The adaptive tight tier (caps.adaptive_caps through the named
+    policies): (1) no step ever exceeds its level's true node count — the
+    clamp that makes adaptive caps overflow-safe by construction; (2) caps
+    are monotone in the target (a bigger budget never shrinks a frontier);
+    (3) rounding happened exactly once — every cap is a fixed point of
+    round_up_adaptive unless the node-count clamp broke it, in which case
+    it equals the node count exactly."""
+    from repro.core import caps
+
+    sizes = _level_sizes(n, fanout)
+    tree = _CapsTree(fanout, sizes)
+    fn = {"select": caps.select_frontier_caps,
+          "knn": caps.knn_frontier_caps,
+          "filtered": caps.filtered_frontier_caps}[op]
+    got = fn(tree, target, lanes=lanes, policy="adaptive")
+    assert len(got) == tree.height - 1
+    # step i bounds the frontier entering the level at distance
+    # e = n_steps - 1 - i from the leaves → zip against reversed sizes
+    for c, size in zip(got, list(reversed(sizes))[1:]):
+        assert 1 <= c <= size
+        assert c == layouts.round_up_adaptive(c, lanes) or c == size
+    bigger = fn(tree, target + bump, lanes=lanes, policy="adaptive")
+    assert all(a <= b for a, b in zip(got, bigger))
+
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.integers(1, 500_000), m=st.integers(1, 500_000),
+       fanout=st.sampled_from([4, 16, 64]),
+       cap=st.integers(1, 1 << 18), bump=st.integers(0, 1 << 18))
+def test_property_adaptive_join_caps_invariants(n, m, fanout, cap, bump):
+    """Join pair caps (adaptive): every descent step is clamped to the
+    reachable pair count of its level; the final step is exactly the
+    result budget (it buffers rect pairs, exempt from the clamp); caps are
+    monotone in the result budget."""
+    from repro.core import caps
+
+    so = _level_sizes(n, fanout)
+    si = _level_sizes(m, fanout)
+    h = max(len(so), len(si))
+    so = so + [1] * (h - len(so))
+    si = si + [1] * (h - len(si))
+    pc = [a * b for a, b in zip(so, si)]          # leaf → root pair counts
+    # sizes[e] for descent step at distance e bounds the *children* pairs:
+    # shift one level finer, leaf step bounded by the leaf pair count
+    sizes = (pc[0],) + tuple(pc[:-1])
+    got = caps.join_pair_caps(h, fanout, cap, level_sizes=sizes,
+                              policy="adaptive")
+    assert len(got) == h
+    assert got[-1] == cap
+    for step, c in enumerate(got[:-1]):
+        e = h - 1 - step
+        assert 1 <= c <= sizes[e]
+    bigger = caps.join_pair_caps(h, fanout, cap + bump, level_sizes=sizes,
+                                 policy="adaptive")
+    assert all(a <= b for a, b in zip(got[:-1], bigger[:-1]))

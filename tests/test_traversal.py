@@ -63,13 +63,17 @@ _BENCH_TREES = {
 }
 
 _EXPECTED = {
-    # (policy, tree key, target) → caps
+    # (policy, tree key, target) → caps.  2026-08: the boosted select leaf
+    # step now re-clamps to the leaf level's node count (a frontier of
+    # distinct node ids can never exceed it) — f64_200k / f256_50k /
+    # oracle_2500_f16 shrank accordingly; the other entries were already
+    # below their leaf counts.
     ("select", "select_1m_f16", 4096): (128, 128, 1024, 16384),
     ("select", "select_200k_f16", 4096): (128, 128, 896, 12544),
     ("select", "select_200k_f16", 1000): (128, 128, 256, 4096),
-    ("select", "f64_200k", 4096): (128, 4096),
-    ("select", "f256_50k", 4096): (4096,),
-    ("select", "oracle_2500_f16", 4096): (128, 4096),
+    ("select", "f64_200k", 4096): (128, 3136),
+    ("select", "f256_50k", 4096): (196,),
+    ("select", "oracle_2500_f16", 4096): (128, 160),
     ("knn", "select_200k_f16", 8): (128, 128, 128, 128),
     ("knn", "select_200k_f16", 64): (128, 128, 128, 256),
     ("knn", "f64_200k", 8): (128, 128),
@@ -119,15 +123,25 @@ def test_caps_match_real_tree():
 
 
 def test_caps_lane_round_in_one_place():
-    """Row-frontier caps are lane multiples (regression for ragged fused
-    frontiers); the join's flat pair caps are exempt by policy, not by a
-    second rounding implementation."""
+    """Row-frontier caps are lane multiples OR exact level node counts (the
+    node-count clamp is the one thing allowed to break lane rounding — a
+    frontier of distinct node ids can never exceed the level size); the
+    join's flat pair caps are exempt by policy, not by a second rounding
+    implementation."""
     tree = _FakeTree(*_BENCH_TREES["select_200k_f16"])
-    for c in (caps.select_frontier_caps(tree, 1000) +
-              caps.knn_frontier_caps(tree, 7)):
+    sizes = [lvl.n_nodes for lvl in tree.levels]
+    got = caps.select_frontier_caps(tree, 1000)
+    for c, n in zip(got, reversed(sizes[:-1])):
+        assert c % LANES == 0 or c == n
+    for c in caps.knn_frontier_caps(tree, 7):
         assert c % LANES == 0
     # the leaf-entering select cap still clears the requested result budget
-    assert caps.select_frontier_caps(tree, 1000)[-1] >= 1000
+    # (up to the number of leaf nodes that exist)
+    assert got[-1] >= min(1000, sizes[0])
+    # boost re-clamp: a tiny tree cannot be asked for more leaf-frontier
+    # rows than it has leaf nodes
+    small = _FakeTree(*_BENCH_TREES["f256_50k"])
+    assert caps.select_frontier_caps(small, 4096) == (196,)
     fr, defer, pool = caps.browse_caps(tree, 7)
     for c in fr + defer[:-1] + (pool,):
         assert c % LANES == 0
@@ -138,6 +152,98 @@ def test_caps_lane_round_in_one_place():
     assert round_up_to_lanes(1) == LANES
     assert round_up_to_lanes(128) == 128
     assert round_up_to_lanes(129) == 256
+
+
+def test_browse_caps_layout_lane_floor():
+    """D3 (256-lane) browse floors are no longer double-rounded: a 128-row
+    static floor stays 128 rows (a power of two below the lane count is a
+    valid adaptive width), while caps at or above the lane count stay lane
+    multiples; d1 caps are bit-identical to the historical policy."""
+    tree = _FakeTree(*_BENCH_TREES["select_200k_f16"])
+    fr1, de1, p1 = caps.browse_caps(tree, 7)
+    fr3, de3, p3 = caps.browse_caps(tree, 7, lanes=256)
+    for c in fr3 + de3[:-1] + (p3,):
+        assert (c >= 256 and c % 256 == 0) or \
+            (c < 256 and c & (c - 1) == 0)
+    # the historical 128-row floors survive as 128 (not doubled to 256):
+    # every d1 cap of exactly 128 maps to 128 in the d3 policy
+    assert any(a == 128 for a in fr1 + de1[:-1])
+    for a, b in zip(fr1 + de1[:-1] + (p1,), fr3 + de3[:-1] + (p3,)):
+        if a == 128:
+            assert b == 128
+    # d1 caps are bit-identical to the historical policy (lane multiples
+    # are fixed points of the adaptive rounding)
+    assert (fr1, de1, p1) == caps.browse_caps(tree, 7, lanes=LANES)
+
+
+# ---------------------------------------------------------------------------
+# two-tier capacity system: adaptive ≡ static, escalation repairs overflow
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", ["select", "join", "knn", "knn_join",
+                                "knn_filtered"])
+def test_adaptive_static_parity(op):
+    """Every layout × operator cell: the occupancy-adaptive default engine
+    returns results bit-identical to the static-caps engine (and still
+    matches the brute-force oracle)."""
+    from oracle import assert_adaptive_static_parity
+    assert assert_adaptive_static_parity(op) > 0
+
+
+def test_escalating_engine_repairs_overflow():
+    """A deliberately under-sized tight tier overflows, the wrapper
+    escalates to the full tier, and the final answer is bit-identical to
+    running the full tier directly (with the escalation counted)."""
+    import jax.numpy as jnp
+    from repro.core import select_vector
+    rng = np.random.default_rng(11)
+    rects = uniform_rects(rng, 3000, eps=0.004)
+    tree = rtree.build_rtree(rects, fanout=16)
+    lo = rng.random((4, 2)).astype(np.float32) * 0.6
+    qs = jnp.asarray(np.concatenate([lo, lo + np.float32(0.3)], axis=1))
+    full = caps.select_frontier_caps(tree, 4096)
+    tight = (1,) * len(full)               # guaranteed to overflow
+    esc = traversal.maybe_escalating(
+        lambda c: select_vector.make_select_bfs(tree, caps=c,
+                                                result_cap=4096),
+        tight, full)
+    res, counts, ctr = esc(qs)
+    assert esc.escalation_count() == 1
+    assert int(ctr.escalations) == 1
+    ref = select_vector.make_select_bfs(tree, caps=full, result_cap=4096)
+    rres, rcounts, rctr = ref(qs)
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(rres))
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(rcounts))
+    # identical tiers short-circuit to a plain engine (no wrapper)
+    plain = traversal.maybe_escalating(
+        lambda c: select_vector.make_select_bfs(tree, caps=c,
+                                                result_cap=4096),
+        full, full)
+    assert not hasattr(plain, "escalation_count")
+
+
+def test_counters_occupancy_recorded():
+    """Engines record per-step live/padded lane tallies; occupancy() is
+    the live fraction and the adaptive tier never reports lower occupancy
+    than the static tier on the same workload."""
+    import jax.numpy as jnp
+    from repro.core import knn_vector
+    rng = np.random.default_rng(7)
+    rects = uniform_rects(rng, 2500, eps=0.002)
+    tree = rtree.build_rtree(rects, fanout=16)
+    qs = jnp.asarray(rng.random((4, 2)).astype(np.float32))
+    _, _, ca = knn_vector.make_knn_bfs(tree, k=4, caps_mode="adaptive")(qs)
+    _, _, cs = knn_vector.make_knn_bfs(tree, k=4, caps_mode="static")(qs)
+    for c in (ca, cs):
+        live = np.asarray(c.lanes_live)
+        padded = np.asarray(c.lanes_padded)
+        assert live.shape == padded.shape and live.ndim == 1
+        assert int(live.sum()) > 0
+        assert 0.0 < c.occupancy() <= 1.0
+    assert ca.occupancy() >= cs.occupancy()
+    d = ca.asdict()
+    assert isinstance(d["lanes_live"], list)
+    assert isinstance(d["nodes_visited"], int)
 
 
 # ---------------------------------------------------------------------------
